@@ -1,0 +1,70 @@
+"""FFDAPT gamma / epsilon ablation (the algorithm's two hyper-parameters).
+
+For each (gamma, epsilon): the analytic backward-dW saving from the schedule
+(at the paper's full-DistilBERT scale) and the held-out-loss delta vs vanilla
+FDAPT at smoke scale — the efficiency/quality frontier Algorithm 1 trades on.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro import optim
+from repro.configs import get_config
+from repro.core import ffdapt
+from repro.core.noniid import make_client_datasets
+from repro.core.rounds import run_fdapt
+from repro.data.corpus import generate_corpus, split_holdout
+from repro.models.model import init_model
+from repro.models.steps import make_eval_step
+from repro.nn import param as P
+
+
+def run(rounds: int = 3, steps: int = 4, seed: int = 0):
+    cfg = get_config("distilbert-mlm").reduced()
+    full = get_config("distilbert-mlm")
+    docs, held_docs = split_holdout(generate_corpus(160, seed=seed))
+    ds = make_client_datasets(docs, cfg, k=2, skew="iid", batch=2, seq=32,
+                              seed=seed)
+    batches = [b[:steps] for b in ds["batches"]]
+    params0 = P.unbox(init_model(jax.random.PRNGKey(seed), cfg))
+    opt = optim.adam(1e-3)
+    eval_step = jax.jit(make_eval_step(cfg))
+    held = make_client_datasets(held_docs, cfg, k=1, batch=4,
+                                seq=64)["batches"][0][:8]
+
+    def eval_loss(p):
+        return float(np.mean([float(eval_step(p, b)["loss"]) for b in held]))
+
+    p_fd, _ = run_fdapt(cfg, opt, params0, batches, n_rounds=rounds,
+                        client_sizes=ds["sizes"])
+    base = eval_loss(p_fd)
+
+    rows = [("fdapt", "-", "-", 0.0, base, 0.0)]
+    for gamma in (0.5, 1.0, 2.0):
+        for eps in (0, 3):                      # 0 -> default N-1
+            cfg_f = ffdapt.FFDAPTConfig(gamma=gamma, epsilon=eps)
+            # analytic saving at the paper's scale (6 layers, 2 equal clients)
+            sched = ffdapt.schedule(full.n_layers, [1, 1], 15,
+                                    epsilon=eps, gamma=gamma)
+            saving = float(np.mean([
+                ffdapt.backward_flop_saving(full.n_layers, rnd)
+                for rnd in sched]))
+            p, _ = run_fdapt(cfg, opt, params0, batches, n_rounds=rounds,
+                             client_sizes=ds["sizes"], ffdapt=cfg_f)
+            l = eval_loss(p)
+            rows.append(("ffdapt", gamma, eps or "N-1", saving, l,
+                         (l - base) / base * 100))
+    return rows
+
+
+def main():
+    print("setting,gamma,epsilon,ledger_dw_saving,eval_loss,delta_vs_fdapt_pct")
+    for r in run():
+        name, g, e, sv, l, d = r
+        print(f"{name},{g},{e},{sv:.3f},{l:.4f},{d:+.2f}")
+
+
+if __name__ == "__main__":
+    main()

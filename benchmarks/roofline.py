@@ -1,0 +1,74 @@
+"""§Roofline assembler: read the dry-run JSON artifacts and emit the per
+(arch x shape x mesh) roofline table — the three terms in seconds, the
+dominant bottleneck, MODEL_FLOPS/HLO_FLOPs, and per-device memory."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+
+def load(pattern: str = "*", *, baseline_only: bool = True):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, pattern + ".json"))):
+        name = os.path.basename(path)[:-5]
+        # baseline artifacts are arch__shape__podN; hillclimb runs carry an
+        # extra __tag suffix and fed_round__* is a separate program
+        if baseline_only and (name.count("__") != 2
+                              or not name.split("__")[-1].startswith("pod")):
+            continue
+        with open(path) as f:
+            rec = json.load(f)
+        rec["_file"] = name
+        rows.append(rec)
+    return rows
+
+
+def table(rows=None, *, pods=None, baseline_only=True):
+    rows = rows if rows is not None else load()
+    out = []
+    for r in rows:
+        if r.get("status") != "ok":
+            out.append({"arch": r["arch"], "shape": r["shape"],
+                        "status": "ERROR", "error": r.get("error", "")[:80]})
+            continue
+        if pods is not None and len(r["mesh"]) != (3 if pods == 2 else 2):
+            continue
+        if baseline_only and r.get("knobs", {}).get("opt_rules"):
+            continue
+        if baseline_only and "__opt" in r.get("_file", ""):
+            continue
+        rl = r["roofline_s"]
+        out.append({
+            "arch": r["arch"], "shape": r["shape"],
+            "pods": 2 if len(r["mesh"]) == 3 else 1,
+            "compute_s": rl["compute"], "memory_s": rl["memory"],
+            "collective_s": rl["collective"], "bottleneck": r["bottleneck"],
+            "model_vs_hlo": r.get("model_vs_hlo_flops", 0.0),
+            "mem_gib": r["memory"]["peak_estimate_bytes"] / 2**30
+            if isinstance(r.get("memory"), dict) else 0.0,
+            "compile_s": r.get("compile_s", 0.0),
+        })
+    return out
+
+
+def main():
+    rows = table(pods=1)
+    print("arch,shape,compute_s,memory_s,collective_s,bottleneck,"
+          "model_vs_hlo,mem_gib")
+    for r in rows:
+        if r.get("status") == "ERROR":
+            print(f"{r['arch']},{r['shape']},ERROR,,,,{r['error']}")
+            continue
+        print(f"{r['arch']},{r['shape']},{r['compute_s']:.3e},"
+              f"{r['memory_s']:.3e},{r['collective_s']:.3e},"
+              f"{r['bottleneck']},{r['model_vs_hlo']:.3f},{r['mem_gib']:.2f}")
+    n_ok = sum(1 for r in rows if r.get("status") != "ERROR")
+    print(f"pairs_ok,{n_ok}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Benchmark harness — one entry per paper table/figure + the roofline.
+
+    PYTHONPATH=src python -m benchmarks.run            # quick grid
+    PYTHONPATH=src python -m benchmarks.run --full     # full Table-2 grid
+
+Sections:
+  [noniid_stats]      Table 3  — partitioner sigma table
+  [ffdapt_efficiency] Eq. 1    — 12.1%-claim: wall + analytic ledger
+  [fdapt_parity]      Table 2  — parity grid (proxy: held-out MLM loss)
+  [roofline]          §Roofline — from the dry-run artifacts (run
+                      `python -m repro.launch.dryrun --all` first)
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def _section(name):
+    print(f"\n[{name}]")
+
+
+def main() -> None:
+    full = "--full" in sys.argv
+    t0 = time.perf_counter()
+
+    _section("noniid_stats")
+    from benchmarks import noniid_stats
+    noniid_stats.main()
+
+    _section("ffdapt_efficiency")
+    from benchmarks import ffdapt_efficiency
+    ffdapt_efficiency.main()
+
+    _section("fdapt_parity")
+    from benchmarks import fdapt_parity
+    fdapt_parity.main(quick=not full)
+
+    _section("ffdapt_ablation")
+    from benchmarks import ffdapt_ablation
+    ffdapt_ablation.main()
+
+    _section("comm_efficiency")
+    from benchmarks import comm_efficiency
+    comm_efficiency.main()
+
+    _section("roofline")
+    from benchmarks import roofline
+    try:
+        roofline.main()
+    except Exception as e:  # artifacts absent until the dry-run has been run
+        print(f"skipped,{type(e).__name__}: {e}")
+
+    print(f"\ntotal_seconds,{time.perf_counter() - t0:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""The paper's empirical study at smoke scale (Table 2 analogue).
+
+Grid: {centralized, FDAPT, FFDAPT} x {IID, quantity, length, vocab} x
+{2, 8 clients} on DistilBERT-MLM, reporting held-out masked-LM loss instead
+of downstream F1 (no PubMed/BioASQ offline — see DESIGN.md §8).
+
+    PYTHONPATH=src python examples/federated_dapt_study.py [--clients 2]
+"""
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro import optim
+from repro.configs import get_config
+from repro.core.ffdapt import FFDAPTConfig
+from repro.core.noniid import make_client_datasets
+from repro.core.rounds import run_fdapt
+from repro.data.corpus import generate_corpus
+from repro.models.model import init_model
+from repro.models.steps import make_eval_step
+from repro.nn import param as P
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--clients", type=int, nargs="+", default=[2])
+    ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--docs", type=int, default=160)
+    ap.add_argument("--steps", type=int, default=4)
+    args = ap.parse_args()
+
+    cfg = get_config("distilbert-mlm").reduced()
+    params0 = P.unbox(init_model(jax.random.PRNGKey(42), cfg))
+    from repro.data.corpus import split_holdout
+    docs, held_docs = split_holdout(generate_corpus(args.docs, seed=0))
+    eval_step = jax.jit(make_eval_step(cfg))
+    held = make_client_datasets(held_docs, cfg, k=1,
+                                batch=2, seq=32)["batches"][0][:3]
+
+    def eval_loss(p):
+        return float(np.mean([float(eval_step(p, b)["loss"]) for b in held]))
+
+    print(f"{'setting':34s} {'eval loss':>9s}")
+    print(f"{'original (no DAPT)':34s} {eval_loss(params0):9.4f}")
+
+    cen = make_client_datasets(docs, cfg, k=1, batch=2, seq=32)
+    p, _ = run_fdapt(cfg, optim.adam(5e-4), params0,
+                     [cen["batches"][0][:args.steps * 2]], n_rounds=args.rounds)
+    print(f"{'centralized':34s} {eval_loss(p):9.4f}")
+
+    for k in args.clients:
+        for skew in ("iid", "quantity", "length", "vocab"):
+            ds = make_client_datasets(docs, cfg, k=k, skew=skew,
+                                      batch=2, seq=32)
+            bs = [b[:args.steps] for b in ds["batches"]]
+            for ffd, tag in ((None, "FDAPT"), (FFDAPTConfig(), "FFDAPT")):
+                p, _ = run_fdapt(cfg, optim.adam(5e-4), params0, bs,
+                                 n_rounds=args.rounds,
+                                 client_sizes=ds["sizes"], ffdapt=ffd)
+                name = f"{tag} {k}c {skew}"
+                print(f"{name:34s} {eval_loss(p):9.4f}")
+
+
+if __name__ == "__main__":
+    main()

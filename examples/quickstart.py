@@ -1,0 +1,56 @@
+"""Quickstart: federated domain-adaptive pre-training in ~40 lines.
+
+Builds the paper's setting end to end on CPU: a synthetic biomedical corpus,
+2 clients with quantity skew, DistilBERT-MLM (reduced), 3 FedAvg rounds with
+FFDAPT layer freezing, and a held-out eval.
+
+    PYTHONPATH=src python examples/quickstart.py          # ~2 min
+    PYTHONPATH=src python examples/quickstart.py --fast   # CI-sized
+"""
+
+import sys
+
+import jax
+import numpy as np
+
+from repro import optim
+from repro.configs import get_config
+from repro.core.ffdapt import FFDAPTConfig
+from repro.core.noniid import make_client_datasets
+from repro.core.rounds import run_fdapt
+from repro.data.corpus import generate_corpus
+from repro.models.model import init_model
+from repro.models.steps import make_eval_step
+from repro.nn import param as P
+
+FAST = "--fast" in sys.argv
+
+# 1. the model: the paper's own backbone, reduced for CPU
+cfg = get_config("distilbert-mlm").reduced()
+params = P.unbox(init_model(jax.random.PRNGKey(42), cfg))
+
+# 2. the data: synthetic biomedical corpus, partitioned with quantity skew
+from repro.data.corpus import split_holdout
+docs, held_docs = split_holdout(generate_corpus(60 if FAST else 200, seed=42))
+ds = make_client_datasets(docs, cfg, k=2, skew="quantity", batch=2, seq=32)
+print("client sizes (Eq. 8):", ds["sizes"],
+      "| quantity sigma:", round(ds["stats"]["quantity"]["sigma"], 1))
+
+# 3. FFDAPT: FedAvg rounds with the rotating layer-freeze schedule
+batches = [b[:2 if FAST else 6] for b in ds["batches"]]
+params, hist = run_fdapt(
+    cfg, optim.adam(5e-4), params, batches,
+    n_rounds=2 if FAST else 5, client_sizes=ds["sizes"],
+    ffdapt=FFDAPTConfig(gamma=1.0), engine="sequential")
+for h in hist:
+    print(f"round {h.round}: loss {h.loss:.4f} "
+          f"({h.round_time_s:.1f}s) frozen windows {h.windows}")
+
+# 4. held-out evaluation
+eval_step = jax.jit(make_eval_step(cfg))
+held = make_client_datasets(held_docs, cfg, k=1,
+                            batch=2, seq=32)["batches"][0][:2]
+loss = float(np.mean([float(eval_step(params, b)["loss"]) for b in held]))
+print(f"held-out MLM loss: {loss:.4f}")
+assert np.isfinite(loss)
+print("OK")

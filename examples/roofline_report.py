@@ -1,0 +1,61 @@
+"""Render the roofline report from the dry-run artifacts.
+
+Human-readable view of benchmarks/results/dryrun/: per (arch x shape) the
+three roofline terms, the dominant bottleneck, and — where hillclimbed
+variants exist (tagged artifacts) — the baseline->optimized delta.
+
+    PYTHONPATH=src python examples/roofline_report.py
+    (run `python -m repro.launch.dryrun --all` first to generate artifacts)
+"""
+
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+from benchmarks.roofline import RESULTS, table  # noqa: E402
+
+
+def _load_tagged():
+    out = {}
+    for p in glob.glob(os.path.join(RESULTS, "*__pod1__*.json")):
+        name = os.path.basename(p)[:-5]
+        arch, shape, _, tag = name.split("__", 3)
+        with open(p) as f:
+            rec = json.load(f)
+        if rec.get("status") == "ok":
+            out.setdefault((arch, shape), {})[tag] = rec
+    return out
+
+
+def main():
+    rows = table(pods=1)
+    if not rows:
+        raise SystemExit("no artifacts: run `python -m repro.launch.dryrun --all`")
+    tagged = _load_tagged()
+    print(f"{'arch':22s} {'shape':12s} {'bound':6s} {'dominant s':>11s} "
+          f"{'optimized s':>12s} {'gain':>7s}  via")
+    for r in rows:
+        if r.get("status") == "ERROR":
+            continue
+        dom = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        best, via = None, ""
+        for tag, rec in tagged.get((r["arch"], r["shape"]), {}).items():
+            rl = rec["roofline_s"]
+            d = max(rl["compute"], rl["memory"], rl["collective"])
+            if best is None or d < best:
+                best, via = d, tag
+        if best is not None:
+            print(f"{r['arch']:22s} {r['shape']:12s} {r['bottleneck'][:6]:6s} "
+                  f"{dom:11.3e} {best:12.3e} {dom / best:6.1f}x  {via}")
+        else:
+            print(f"{r['arch']:22s} {r['shape']:12s} {r['bottleneck'][:6]:6s} "
+                  f"{dom:11.3e} {'-':>12s} {'-':>7s}")
+    n = sum(1 for r in rows if r.get("status") != "ERROR")
+    print(f"\n{n} (arch x shape) pairs lowered+compiled on the 16x16 mesh "
+          f"(and again on 2x16x16 — see *__pod2.json).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Batched serving example: prefill + greedy decode on any zoo arch,
+including the SSM/hybrid state-cache paths and the sliding-window ring cache.
+
+    PYTHONPATH=src python examples/serve_decode.py --arch rwkv6-1.6b
+    PYTHONPATH=src python examples/serve_decode.py --arch qwen2-7b --window 16
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models.model import init_model
+from repro.models.steps import make_prefill_step, make_serve_step
+from repro.nn import param as P
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="rwkv6-1.6b")
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--window", type=int, default=0,
+                    help="sliding-window variant (ring KV cache)")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    if args.window:
+        cfg = cfg.replace(sliding_window=args.window)
+    if cfg.arch_type == "mlm":
+        raise SystemExit("mlm is encoder-only (no decode)")
+
+    params = P.unbox(init_model(jax.random.PRNGKey(0), cfg))
+    cache_len = (min(args.window, args.prompt_len + args.tokens)
+                 if args.window else args.prompt_len + args.tokens)
+    prefill = jax.jit(make_prefill_step(cfg, cache_len))
+    serve = jax.jit(make_serve_step(cfg))
+
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(
+        rng.integers(5, cfg.vocab_size, (args.batch, args.prompt_len)),
+        jnp.int32)}
+    if cfg.arch_type == "vlm":
+        batch["image_embeds"] = jnp.asarray(
+            rng.normal(0, .1, (args.batch, cfg.n_image_tokens, cfg.d_model)),
+            jnp.float32)
+    if cfg.arch_type == "audio":
+        batch["frames"] = jnp.asarray(
+            rng.normal(0, .1, (args.batch, cfg.n_audio_frames, cfg.d_model)),
+            jnp.float32)
+
+    logits, cache = prefill(params, batch)
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    t0 = time.perf_counter()
+    toks = [tok]
+    for _ in range(args.tokens - 1):
+        logits, cache = serve(params, {"tokens": tok}, cache)
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        toks.append(tok)
+    jax.block_until_ready(tok)
+    dt = time.perf_counter() - t0
+    print(f"{cfg.name} ({cfg.arch_type}): cache_len={cache_len} "
+          f"decoded {args.tokens - 1} steps "
+          f"{(args.tokens - 1) / dt:.1f} steps/s")
+    print("tokens[0]:", np.asarray(jnp.concatenate(toks, 1))[0][:12])
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.checkpoint.npz import (  # noqa: F401
+    save_checkpoint, restore_checkpoint, latest_step, FederatedState)

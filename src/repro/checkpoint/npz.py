@@ -1,0 +1,107 @@
+"""Pytree checkpointing to .npz (offline stand-in for orbax/tensorstore).
+
+Trees are flattened to ``path/to/leaf`` keys; restore rebuilds against a
+template tree (structure is authoritative from the template, values from the
+archive).  ``FederatedState`` wraps the full FDAPT run state — global params,
+round counter, and the FFDAPT pointer — so a federated run resumes
+mid-schedule.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import re
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+_SEP = "|"
+
+
+def _flatten(tree: Any) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.name == "bfloat16":       # npz has no native bf16
+            key, arr = key + "::bf16", arr.view(np.uint16)
+        flat[key] = arr
+    return flat
+
+
+def save_checkpoint(directory: str, step: int, tree: Any,
+                    extra: Optional[Dict[str, Any]] = None,
+                    *, keep: int = 3) -> str:
+    os.makedirs(directory, exist_ok=True)
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    np.savez(path, **_flatten(tree))
+    if extra is not None:
+        with open(path.replace(".npz", ".json"), "w") as f:
+            json.dump(extra, f)
+    _rotate(directory, keep)
+    return path
+
+
+def _rotate(directory: str, keep: int) -> None:
+    ckpts = sorted(f for f in os.listdir(directory)
+                   if re.fullmatch(r"ckpt_\d+\.npz", f))
+    for old in ckpts[:-keep]:
+        os.remove(os.path.join(directory, old))
+        meta = os.path.join(directory, old.replace(".npz", ".json"))
+        if os.path.exists(meta):
+            os.remove(meta)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(directory)
+             if (m := re.fullmatch(r"ckpt_(\d+)\.npz", f))]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, step: int, template: Any) -> Any:
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    with np.load(path) as data:
+        flat = {k: data[k] for k in data.files}
+    leaves_paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    new_leaves = []
+    for p, leaf in leaves_paths:
+        key = _SEP.join(str(getattr(q, "key", getattr(q, "idx", q))) for q in p)
+        if key + "::bf16" in flat:
+            import ml_dtypes
+            arr = flat[key + "::bf16"].view(ml_dtypes.bfloat16)
+        elif key in flat:
+            arr = flat[key]
+        else:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"{key}: shape {arr.shape} != template {leaf.shape}")
+        new_leaves.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+
+def restore_extra(directory: str, step: int) -> Optional[Dict[str, Any]]:
+    path = os.path.join(directory, f"ckpt_{step:08d}.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+@dataclasses.dataclass
+class FederatedState:
+    """Resumable FDAPT state: round counter + FFDAPT rotation pointer."""
+    round: int = 0
+    ffdapt_start: int = 0
+
+    def to_json(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, d: Dict[str, Any]) -> "FederatedState":
+        return cls(**d)

@@ -1,0 +1,29 @@
+"""DistilBERT [arXiv:1910.01108] — the paper's own backbone: 6-layer
+post-norm MLM encoder, learned positions, GELU, tied MLM head.  This is the
+FDAPT/FFDAPT reference model for the parity and efficiency benchmarks."""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="distilbert-mlm",
+    arch_type="mlm",
+    n_layers=6,
+    d_model=768,
+    n_heads=12,
+    n_kv_heads=12,
+    head_dim=64,
+    d_ff=3072,
+    vocab_size=30522,
+    use_rope=False,
+    qkv_bias=True,
+    mlp_type="gelu",
+    norm_type="layernorm",
+    norm_position="post",
+    norm_eps=1e-12,
+    objective="mlm",
+    tie_embeddings=True,
+    max_seq_len=4096,
+    param_dtype="float32",
+    compute_dtype="float32",
+    source="arXiv:1910.01108 (paper backbone)",
+)

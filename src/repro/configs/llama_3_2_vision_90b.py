@@ -1,0 +1,27 @@
+"""Llama-3.2-Vision-90B [hf:meta-llama/Llama-3.2-11B-Vision, scaled]: dense
+decoder with gated cross-attention image layers every 5th layer.  The ViT
+vision encoder + projector is a STUB per the brief — ``input_specs``
+supplies (1601, d_model) patch embeddings."""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama-3.2-vision-90b",
+    arch_type="vlm",
+    n_layers=100,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=28672,
+    vocab_size=128256,
+    cross_attn_every=5,
+    n_image_tokens=1601,
+    rope_theta=500_000.0,
+    mlp_type="swiglu",
+    norm_type="rmsnorm",
+    tie_embeddings=False,
+    param_dtype="bfloat16",
+    compute_dtype="bfloat16",
+    source="hf:meta-llama/Llama-3.2-11B-Vision",
+)

@@ -1,0 +1,24 @@
+"""Nemotron-4-340B [arXiv:2402.16819]: dense, GQA (96Q/8KV), squared-ReLU
+MLP, RoPE, no-bias LayerNorm.  The memory-pressure arch of the pool — bf16
+moments + microbatching are required to fit v5e-256 (EXPERIMENTS.md §Perf)."""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="nemotron-4-340b",
+    arch_type="dense",
+    n_layers=96,
+    d_model=18432,
+    n_heads=96,
+    n_kv_heads=8,
+    head_dim=192,
+    d_ff=73728,
+    vocab_size=256000,
+    rope_theta=10_000.0,
+    mlp_type="relu2",
+    norm_type="layernorm",
+    tie_embeddings=False,
+    param_dtype="bfloat16",
+    compute_dtype="bfloat16",
+    source="arXiv:2402.16819",
+)

@@ -1,0 +1,24 @@
+"""OLMoE-1B-7B [arXiv:2409.02060]: MoE, 64 experts top-8, per-expert
+d_ff=1024, MHA-ish GQA 16Q/16KV."""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="olmoe-1b-7b",
+    arch_type="moe",
+    n_layers=16,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=128,
+    d_ff=1024,
+    vocab_size=50304,
+    n_experts=64,
+    top_k=8,
+    mlp_type="swiglu",
+    norm_type="rmsnorm",
+    tie_embeddings=False,
+    param_dtype="bfloat16",
+    compute_dtype="bfloat16",
+    source="arXiv:2409.02060",
+)

@@ -1,0 +1,23 @@
+"""Phi-4-mini-3.8B [arXiv:2412.08905]: dense, RoPE + SwiGLU + GQA 24Q/8KV,
+200k vocab, tied embeddings."""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi4-mini-3.8b",
+    arch_type="dense",
+    n_layers=32,
+    d_model=3072,
+    n_heads=24,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,
+    vocab_size=200064,
+    rope_theta=10_000.0,
+    mlp_type="swiglu",
+    norm_type="rmsnorm",
+    tie_embeddings=True,
+    param_dtype="bfloat16",
+    compute_dtype="bfloat16",
+    source="arXiv:2412.08905",
+)

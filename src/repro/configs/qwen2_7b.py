@@ -1,0 +1,24 @@
+"""Qwen2-7B [arXiv:2407.10671]: dense, GQA (28Q/4KV), QKV bias, SwiGLU."""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-7b",
+    arch_type="dense",
+    n_layers=28,
+    d_model=3584,
+    n_heads=28,
+    n_kv_heads=4,
+    head_dim=128,
+    d_ff=18944,
+    vocab_size=152064,
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+    mlp_type="swiglu",
+    norm_type="rmsnorm",
+    norm_eps=1e-6,
+    tie_embeddings=False,
+    param_dtype="bfloat16",
+    compute_dtype="bfloat16",
+    source="arXiv:2407.10671",
+)

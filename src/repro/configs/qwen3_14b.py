@@ -1,0 +1,24 @@
+"""Qwen3-14B [hf:Qwen/Qwen3-8B family card]: dense, GQA (40Q/8KV), qk_norm."""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-14b",
+    arch_type="dense",
+    n_layers=40,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=17408,
+    vocab_size=151936,
+    qk_norm=True,
+    rope_theta=1_000_000.0,
+    mlp_type="swiglu",
+    norm_type="rmsnorm",
+    norm_eps=1e-6,
+    tie_embeddings=False,
+    param_dtype="bfloat16",
+    compute_dtype="bfloat16",
+    source="hf:Qwen/Qwen3-8B",
+)

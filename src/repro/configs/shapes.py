@@ -1,0 +1,103 @@
+"""Assigned input shapes + allocation-free input specs.
+
+``input_specs(cfg, shape)`` returns *boxed ShapeDtypeStruct* trees for every
+model input of the (arch, shape) pair — weak-type-correct, shardable, zero
+allocation.  This is what the multi-pod dry-run lowers against.
+
+Decode shapes lower ``serve_step`` (ONE token + a seq_len KV cache); the
+long_500k shape substitutes the sliding-window config variant for
+full-attention archs (``long_variant``) so the cache is O(window).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.model import cache_struct
+from repro.nn import param as P
+from repro.nn.param import Box
+
+LONG_WINDOW = 8192        # sliding-window variant for full-attention archs
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                      # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k":    ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k":  ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k":   ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+
+def long_variant(cfg: ModelConfig) -> ModelConfig:
+    """Config actually used for long_500k: SSM/hybrid run natively (O(1)
+    state); attention archs get the sliding-window variant (beyond-paper
+    addition — see DESIGN §4)."""
+    if cfg.arch_type in ("ssm", "hybrid"):
+        return cfg
+    return cfg.with_window(LONG_WINDOW)
+
+
+def shape_config(cfg: ModelConfig, shape: str) -> ModelConfig:
+    return long_variant(cfg) if shape == "long_500k" else cfg
+
+
+def _tok(shape, axes=(P.BATCH, P.SEQ)):
+    return Box(jax.ShapeDtypeStruct(shape, jnp.int32), axes)
+
+
+def _emb(shape):
+    return Box(jax.ShapeDtypeStruct(shape, jnp.bfloat16),
+               (P.BATCH, None, P.EMBED))
+
+
+def batch_specs(cfg: ModelConfig, spec: ShapeSpec, *,
+                global_batch: int = 0) -> Dict[str, Any]:
+    """Boxed SDS for the data batch of (arch, shape)."""
+    B = global_batch or spec.global_batch
+    S = 1 if spec.kind == "decode" else spec.seq_len
+    batch: Dict[str, Any] = {"tokens": _tok((B, S))}
+    if spec.kind == "train":
+        batch["targets"] = _tok((B, S))
+        batch["loss_mask"] = Box(jax.ShapeDtypeStruct((B, S), jnp.float32),
+                                 (P.BATCH, P.SEQ))
+    if cfg.arch_type == "vlm":
+        batch["image_embeds"] = _emb((B, cfg.n_image_tokens, cfg.d_model))
+    if cfg.arch_type == "audio" and spec.kind != "decode":
+        batch["frames"] = _emb((B, cfg.n_audio_frames, cfg.d_model))
+    return batch
+
+
+def input_specs(cfg: ModelConfig, shape: str, *, global_batch: int = 0
+                ) -> Dict[str, Any]:
+    """All boxed-SDS inputs for the step the shape lowers:
+    train  -> {"batch": ...}
+    prefill-> {"batch": ...}
+    decode -> {"batch": ..., "cache": ...} (cache pre-filled to seq_len)."""
+    spec = SHAPES[shape]
+    cfg = shape_config(cfg, shape)
+    B = global_batch or spec.global_batch
+    out: Dict[str, Any] = {"batch": batch_specs(cfg, spec, global_batch=B)}
+    if spec.kind == "decode":
+        out["cache"] = cache_struct(cfg, B, spec.seq_len)
+    return out
+
+
+def applicable(cfg: ModelConfig, shape: str) -> bool:
+    """Shape admissibility (every assigned arch admits all 4 shapes here:
+    long_500k via the window variant / native SSM; mlm is train-only)."""
+    if cfg.arch_type == "mlm":
+        return shape == "train_4k"
+    return True

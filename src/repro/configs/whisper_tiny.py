@@ -1,0 +1,28 @@
+"""Whisper-tiny [arXiv:2212.04356]: encoder-decoder; the mel+conv frontend is
+a STUB per the brief — ``input_specs`` supplies (1500, d_model) frame
+embeddings.  Learned absolute positions (table sized for prefill_32k;
+positions clamp beyond it), LayerNorm+GELU, MHA (6 heads, kv=6)."""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-tiny",
+    arch_type="audio",
+    n_layers=4,                  # decoder layers
+    encoder_layers=4,
+    n_audio_frames=1500,
+    d_model=384,
+    n_heads=6,
+    n_kv_heads=6,
+    d_ff=1536,
+    vocab_size=51865,
+    use_rope=False,
+    qkv_bias=True,
+    mlp_type="gelu",
+    norm_type="layernorm",
+    tie_embeddings=True,
+    max_seq_len=32768,
+    param_dtype="bfloat16",
+    compute_dtype="bfloat16",
+    source="arXiv:2212.04356",
+)

@@ -1,0 +1,27 @@
+"""Zamba2-1.2B [arXiv:2411.15242]: hybrid — 38 Mamba2 blocks + one SHARED
+full-attention transformer block applied at 6 depths (params shared across
+applications, zamba's signature trick).  ssm_state=64, MHA 32 heads."""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-1.2b",
+    arch_type="hybrid",
+    n_layers=38,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=64,
+    d_ff=8192,
+    vocab_size=32000,
+    ssm_state=64,
+    ssm_expand=2,
+    conv_dim=4,
+    shared_attn_positions=(5, 11, 17, 23, 29, 35),
+    mlp_type="swiglu",
+    norm_type="rmsnorm",
+    tie_embeddings=True,
+    param_dtype="bfloat16",
+    compute_dtype="bfloat16",
+    source="arXiv:2411.15242",
+)

@@ -1,0 +1,81 @@
+"""FFDAPT — Frozen Federated Domain-Adaptive Pre-Training (Algorithm 1).
+
+Per round t, per client k:
+    N_k = min(epsilon, ceil(n_k / n * N) * gamma)
+consecutive layers starting at a rotating pointer are frozen; the pointer
+advances by N_k after each client and wraps modulo N (the algorithm's
+``else`` branch freezes the two wrap segments).  ``epsilon`` caps the window
+(< N — "freezing all layers is meaningless"); ``gamma`` scales it.
+
+The schedule is pure data: ``rounds[t][k] = (start, n_frozen)``.  Execution
+happens in ``repro.models.steps`` — either *static* windows (paper-faithful,
+backward dW never compiled for frozen layers; at most N distinct programs
+are ever compiled thanks to rotation) or *masked* (one program; update
+suppression only).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Sequence, Tuple
+
+from repro.nn.stack import freeze_window_mask
+
+Window = Tuple[int, int]          # (start layer, n_frozen), 0-based
+
+
+@dataclasses.dataclass(frozen=True)
+class FFDAPTConfig:
+    epsilon: int = 0              # 0 -> default N-1
+    gamma: float = 1.0
+
+
+def client_window_size(n_k: int, n_total: int, n_layers: int,
+                       epsilon: int, gamma: float) -> int:
+    """Algorithm 1 line: N_k = min(eps, ceil(n_k/n * N) * gamma)."""
+    raw = math.ceil(n_k / max(n_total, 1) * n_layers) * gamma
+    return max(0, min(int(epsilon), int(raw)))
+
+
+def schedule(n_layers: int, client_sizes: Sequence[int], n_rounds: int,
+             *, epsilon: int = 0, gamma: float = 1.0) -> List[List[Window]]:
+    """Full rotating schedule: ``out[t][k] = (start, N_k)``.
+
+    The pointer is shared across clients and rounds: client k+1's window
+    begins where client k's ended, so successive clients/rounds cover
+    different layers (Algorithm 1's ``start = end + 1`` rotation).
+    """
+    n = sum(client_sizes)
+    N = n_layers
+    eps = epsilon if epsilon > 0 else max(N - 1, 0)
+    eps = min(eps, N - 1) if N > 1 else 0
+    start = 0
+    out: List[List[Window]] = []
+    for _ in range(n_rounds):
+        rnd = []
+        for nk in client_sizes:
+            Nk = client_window_size(nk, n, N, eps, gamma)
+            rnd.append((start, Nk))
+            start = (start + Nk) % max(N, 1)
+        out.append(rnd)
+    return out
+
+
+def window_mask(n_layers: int, window: Window) -> Tuple[bool, ...]:
+    """(start, n_frozen) -> per-layer bool mask (wrap-aware)."""
+    return freeze_window_mask(n_layers, window)
+
+
+def backward_flop_saving(n_layers: int, windows: Sequence[Window],
+                         *, layer_share: float = 1.0) -> float:
+    """Analytic fraction of *backward dW* FLOPs removed, averaged over the
+    given per-client windows.  With backward ~ 2x forward and dW ~ half of
+    backward, total-step saving ~= saving_frac * layer_share * (2/3) * (1/2).
+
+    ``layer_share``: fraction of total model FLOPs inside the freezable stack
+    (embeddings/head excluded)."""
+    if not windows:
+        return 0.0
+    frac = sum(min(nf, n_layers) for _, nf in windows) / (len(windows) * n_layers)
+    return frac * layer_share * (2.0 / 3.0) * 0.5

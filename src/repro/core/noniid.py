@@ -1,0 +1,33 @@
+"""Formal non-IIDness in federated pre-training (paper §3.2 + Appendix C).
+
+The three skews over raw-text clients:
+    D_Q (Eq. 8)  — quantity:         Q_i = i / sum_j(j) * Q
+    D_L (Eq. 9)  — sentence length:  maximize sigma(L_1..L_k), pin others
+    D_V (Eq. 10) — vocabulary:       maximize sigma(V_1..V_k), pin others
+
+This module binds partitioner outputs to federated client datasets and
+computes the Table-3 statistics; the partitioners themselves live in
+``repro.data.partition``.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+from repro.data.batching import shard_batches
+from repro.data.corpus import Document
+from repro.data.partition import SKEWS, client_stats_table, partition
+
+
+def make_client_datasets(docs: Sequence[Document], cfg, *, k: int,
+                         skew: str = "iid", batch: int = 8, seq: int = 128,
+                         seed: int = 0) -> Dict:
+    """-> {"batches": [client_batches...], "sizes": n_k, "stats": Table-3}."""
+    if skew not in SKEWS:
+        raise ValueError(f"skew must be one of {SKEWS}")
+    shards = partition(docs, k, skew, seed=seed)
+    batches = [shard_batches(s, cfg, batch, seq, seed=seed + i)
+               for i, s in enumerate(shards)]
+    sizes = [len(s) for s in shards]            # n_k = raw-text count (Eq. 8)
+    return {"batches": batches, "sizes": sizes,
+            "stats": client_stats_table(shards)}

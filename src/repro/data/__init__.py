@@ -1,0 +1,3 @@
+from repro.data.tokenizer import HashWordTokenizer  # noqa: F401
+from repro.data.corpus import Document, generate_corpus  # noqa: F401
+from repro.data.partition import partition  # noqa: F401

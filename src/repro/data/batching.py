@@ -1,0 +1,78 @@
+"""Tokenize + pack client shards into model batches.
+
+CLM: packed token stream, ``targets`` = next token, full loss mask.
+MLM (the paper's DistilBERT objective): BERT-style 15% masking — 80% [MASK],
+10% random id, 10% kept; loss only at masked positions.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+from repro.data.corpus import Document
+from repro.data.tokenizer import MASK, N_SPECIALS, HashWordTokenizer
+
+
+def tokenize_shard(docs: Sequence[Document], tok: HashWordTokenizer
+                   ) -> np.ndarray:
+    ids: List[int] = []
+    for d in docs:
+        ids.extend(tok.encode_document(d.sentences))
+    return np.asarray(ids, np.int32)
+
+
+def _pack(stream: np.ndarray, batch: int, seq: int) -> np.ndarray:
+    n_tok = batch * seq
+    n_steps = len(stream) // n_tok
+    if n_steps == 0:
+        reps = int(np.ceil(n_tok / max(len(stream), 1)))
+        stream = np.tile(stream, reps + 1)
+        n_steps = 1
+    used = stream[:n_steps * n_tok]
+    return used.reshape(n_steps, batch, seq)
+
+
+def clm_batches(stream: np.ndarray, batch: int, seq: int) -> List[Dict]:
+    toks = _pack(stream, batch, seq + 1)
+    out = []
+    for step in toks:
+        out.append({
+            "tokens": step[:, :-1].astype(np.int32),
+            "targets": step[:, 1:].astype(np.int32),
+            "loss_mask": np.ones((batch, seq), np.float32),
+        })
+    return out
+
+
+def mlm_batches(stream: np.ndarray, batch: int, seq: int, vocab: int,
+                *, mask_rate: float = 0.15, seed: int = 0) -> List[Dict]:
+    rng = np.random.default_rng(seed)
+    toks = _pack(stream, batch, seq)
+    out = []
+    for step in toks:
+        targets = step.astype(np.int32)
+        sel = rng.random(step.shape) < mask_rate
+        r = rng.random(step.shape)
+        inputs = targets.copy()
+        inputs[sel & (r < 0.8)] = MASK
+        rand_ids = rng.integers(N_SPECIALS, vocab, size=step.shape)
+        swap = sel & (r >= 0.8) & (r < 0.9)
+        inputs[swap] = rand_ids[swap]
+        out.append({
+            "tokens": inputs,
+            "targets": targets,
+            "loss_mask": sel.astype(np.float32),
+        })
+    return out
+
+
+def shard_batches(docs: Sequence[Document], cfg, batch: int, seq: int,
+                  *, seed: int = 0) -> List[Dict]:
+    tok = HashWordTokenizer(cfg.vocab_size)
+    stream = tokenize_shard(docs, tok)
+    if cfg.objective == "mlm":
+        return mlm_batches(stream, batch, seq, cfg.vocab_size,
+                           mask_rate=cfg.mlm_mask_rate, seed=seed)
+    return clm_batches(stream, batch, seq)

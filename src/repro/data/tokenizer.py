@@ -1,0 +1,41 @@
+"""Deterministic hash-word tokenizer (offline stand-in for WordPiece).
+
+Words map to ``5 + FNV1a(word) % (V-5)``; ids 0-4 are specials.  Collisions
+are acceptable for pre-training-loss experiments; the mapping is stable
+across processes (no salted ``hash()``).
+"""
+
+from __future__ import annotations
+
+from typing import Iterable, List
+
+PAD, UNK, MASK, BOS, EOS = 0, 1, 2, 3, 4
+N_SPECIALS = 5
+
+
+def _fnv1a(s: str) -> int:
+    h = 2166136261
+    for ch in s.encode():
+        h = ((h ^ ch) * 16777619) & 0xFFFFFFFF
+    return h
+
+
+class HashWordTokenizer:
+    def __init__(self, vocab_size: int):
+        assert vocab_size > N_SPECIALS
+        self.vocab_size = vocab_size
+
+    def token(self, word: str) -> int:
+        return N_SPECIALS + _fnv1a(word) % (self.vocab_size - N_SPECIALS)
+
+    def encode_sentence(self, words: Iterable[str]) -> List[int]:
+        return [self.token(w) for w in words]
+
+    def encode_document(self, sentences: Iterable[Iterable[str]],
+                        *, bos: bool = True, eos: bool = True) -> List[int]:
+        ids: List[int] = [BOS] if bos else []
+        for s in sentences:
+            ids.extend(self.encode_sentence(s))
+        if eos:
+            ids.append(EOS)
+        return ids

@@ -1,0 +1,46 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On CPU (this container) kernels run in ``interpret=True`` mode — the kernel
+body executes step-by-step in Python, exercising exactly the same BlockSpec
+tiling/indexing that would run on TPU.  On a TPU backend the same call sites
+compile to Mosaic.  ``impl="xla"`` callers bypass kernels entirely and use
+:mod:`repro.kernels.ref` (that is what the dry-run lowers, keeping the
+roofline numbers kernel-agnostic).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import ref as _ref
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.moe_gmm import moe_ffn as _moe_ffn
+from repro.kernels.mamba2_scan import mamba2_scan as _mamba2
+from repro.kernels.rwkv6_scan import rwkv6_scan as _rwkv6
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
+                    block_q=128, block_k=128):
+    return _flash(q, k, v, causal=causal, window=window, softcap=softcap,
+                  block_q=block_q, block_k=block_k, interpret=_interpret())
+
+
+def rwkv6_scan(r, k, v, w, u, s0, *, chunk=128):
+    return _rwkv6(r, k, v, w, u, s0, chunk=chunk, interpret=_interpret())
+
+
+def mamba2_scan(x, dt, a_log, b, c, h0, *, chunk=128):
+    return _mamba2(x, dt, a_log, b, c, h0, chunk=chunk, interpret=_interpret())
+
+
+def moe_ffn(xe, wi_gate, wi_up, wo, *, block_c=128, block_f=128):
+    return _moe_ffn(xe, wi_gate, wi_up, wo, block_c=block_c, block_f=block_f,
+                    interpret=_interpret())
+
+
+# re-exported oracles (impl="xla" path)
+ref = _ref

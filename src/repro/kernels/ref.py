@@ -1,0 +1,261 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the correctness references: slow, simple, obviously-right
+implementations.  The kernel tests sweep shapes/dtypes and assert_allclose
+against these; the model code can also run on them directly (``impl="xla"``),
+which is what CPU smoke tests and the dry-run use.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Flash attention oracle: plain GQA softmax attention.
+# ---------------------------------------------------------------------------
+
+def attention(q, k, v, *, causal=True, window=0, softcap=0.0):
+    """q: (B,S,H,D); k/v: (B,T,Kv,D). Additive causal/window mask."""
+    B, S, H, D = q.shape
+    T, Kv = k.shape[1], k.shape[2]
+    G = H // Kv
+    qg = q.reshape(B, S, Kv, G, D)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(D).astype(jnp.float32)
+    if softcap:
+        scores = softcap * jnp.tanh(scores / softcap)
+    if causal:
+        qi = jnp.arange(S)[:, None]
+        kj = jnp.arange(T)[None, :]
+        ok = kj <= qi
+        if window:
+            ok &= kj > qi - window
+        scores = jnp.where(ok[None, None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, v)
+    return out.reshape(B, S, H, D)
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 WKV oracle: data-dependent-decay linear attention recurrence.
+# ---------------------------------------------------------------------------
+
+def rwkv6_scan(r, k, v, w, u, s0):
+    """RWKV6 "Finch" recurrence.
+
+    r,k,v,w: (B,T,H,D);  u: (H,D) bonus;  s0: (B,H,D,D) initial state
+    (state layout: [key_dim, value_dim]).
+
+      y_t[j] = sum_i r_t[i] * (S[i,j] + u[i] * k_t[i] * v_t[j])
+      S[i,j] <- w_t[i] * S[i,j] + k_t[i] * v_t[j]
+
+    Returns (y (B,T,H,D), s_T (B,H,D,D)).  All math in fp32.
+    """
+    dtype = r.dtype
+    r, k, v, w = (x.astype(jnp.float32) for x in (r, k, v, w))
+    u = u.astype(jnp.float32)
+    s0 = s0.astype(jnp.float32)
+
+    def step(s, rkvw):
+        rt, kt, vt, wt = rkvw                 # (B,H,D) each
+        kv = kt[..., :, None] * vt[..., None, :]          # (B,H,D,D)
+        y = jnp.einsum("bhi,bhij->bhj", rt, s + u[..., :, None] * kv)
+        s = wt[..., :, None] * s + kv
+        return s, y
+
+    rkvw = tuple(jnp.moveaxis(x, 1, 0) for x in (r, k, v, w))   # (T,B,H,D)
+    sT, ys = jax.lax.scan(step, s0, rkvw)
+    return jnp.moveaxis(ys, 0, 1).astype(dtype), sT
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 SSD oracle: selective state-space recurrence (scalar A per head).
+# ---------------------------------------------------------------------------
+
+def mamba2_scan(x, dt, a_log, b, c, h0):
+    """Mamba2 recurrence.
+
+    x:  (B,T,H,P)   per-head inputs
+    dt: (B,T,H)     softplus'd step sizes
+    a_log: (H,)     A = -exp(a_log)
+    b,c: (B,T,N)    input/output projections (single group, broadcast to heads)
+    h0: (B,H,P,N)   initial state
+
+      h_t = exp(dt_t * A_h) * h_{t-1} + dt_t * x_t (outer) B_t
+      y_t = h_t @ C_t
+    Returns (y (B,T,H,P), h_T).  fp32 internally.
+    """
+    dtype = x.dtype
+    x, dt, b, c = (z.astype(jnp.float32) for z in (x, dt, b, c))
+    a = -jnp.exp(a_log.astype(jnp.float32))                    # (H,)
+    h0 = h0.astype(jnp.float32)
+
+    def step(h, xs):
+        xt, dtt, bt, ct = xs                  # (B,H,P), (B,H), (B,N), (B,N)
+        decay = jnp.exp(dtt * a)                               # (B,H)
+        dbx = (dtt[..., None] * xt)[..., :, None] * bt[:, None, None, :]
+        h = decay[..., None, None] * h + dbx                   # (B,H,P,N)
+        y = jnp.einsum("bhpn,bn->bhp", h, ct)
+        return h, y
+
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(b, 1, 0), jnp.moveaxis(c, 1, 0))
+    hT, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(dtype), hT
+
+
+def rwkv6_scan_chunked(r, k, v, w, u, s0, *, chunk: int = 16):
+    """Chunked WKV6 (flash-linear-attention style block decomposition).
+
+    Same signature/semantics as :func:`rwkv6_scan`.  Within a chunk
+    (chunk-local inclusive log-decay ``lw_t = sum_{r<=t} log w_r``, per
+    channel):
+
+      y_t = (r_t . e^{lw_{t-1}}) @ S_in                       [carry-in]
+          + sum_{s<t} [(r_t e^{lw_{t-1}}) . (k_s e^{-lw_s})] v_s   [intra]
+          + (sum_i r_i u_i k_i) v_t                           [bonus diag]
+      S_out = e^{lw_Q} (x) S_in + sum_s (k_s e^{lw_Q - lw_s}) v_s^T
+
+    RWKV's decay is PER-CHANNEL, so unlike the scalar-decay SSD the pairwise
+    ratio cannot be safely factorized as e^{lw_t} * e^{-lw_s} (channels with
+    strong decay saturate both factors — double-clamp corruption).  The
+    intra-chunk term therefore uses the DIRECT exponent e^{lw_{t-1} - lw_s}
+    on a chunk-local (B,Q,S,H,D) tensor: the argument is always <= 0, so a
+    single clamp at -40 only zeroes negligible contributions.  Chunk-local
+    tensors cost Q*D per token instead of the naive D^2 state round-trip —
+    a ~D/Q HBM reduction; the Pallas kernel (VMEM-resident state) removes
+    the rest on real TPU.  State hand-off stays factorized (exponents <= 0).
+    """
+    dtype = r.dtype
+    B, T, H, D = r.shape
+    chunk = min(chunk, T)
+    pad = (-T) % chunk
+    if pad:
+        zp = ((0, 0), (0, pad), (0, 0), (0, 0))
+        r, k, v = (jnp.pad(x_, zp) for x_ in (r, k, v))
+        w = jnp.pad(w, zp, constant_values=1.0)        # decay 1 = no-op
+    NC = (T + pad) // chunk
+
+    def cc(x_):
+        return x_.reshape(B, NC, chunk, H, D).astype(jnp.float32)
+
+    rc, kc, vc, wc = cc(r), cc(k), cc(v), cc(w)
+    u32 = u.astype(jnp.float32)
+    tri_strict = jnp.tril(jnp.ones((chunk, chunk), jnp.float32), k=-1)
+
+    def per_chunk(s, xs):
+        rq, kq, vq, wq = xs                            # (B,Q,H,D)
+        lw = jnp.cumsum(jnp.log(jnp.maximum(wq, 1e-38)), axis=1)   # <= 0
+        lw_prev = jnp.concatenate(
+            [jnp.zeros_like(lw[:, :1]), lw[:, :-1]], axis=1)       # lw_{t-1}
+        r_dec = rq * jnp.exp(jnp.maximum(lw_prev, -40.0))
+        # carry-in
+        y_in = jnp.einsum("bqhi,bhij->bqhj", r_dec, s)
+        # intra-chunk: direct pairwise decay ratio (always <= 0 pre-clamp)
+        ldiff = lw_prev[:, :, None] - lw[:, None, :, :, :]         # (B,Q,S,H,D)
+        dec = jnp.exp(jnp.clip(ldiff, -40.0, 0.0))
+        scores = jnp.einsum("bqhi,bqshi,bshi->bqsh", rq, dec, kq) * \
+            tri_strict[None, :, :, None]
+        y_intra = jnp.einsum("bqsh,bshj->bqhj", scores, vq)
+        ruk = jnp.sum(rq * u32[None, None] * kq, axis=-1)          # (B,Q,H)
+        y = y_in + y_intra + ruk[..., None] * vq
+        # state hand-off (exponents <= 0: safe factorized form)
+        lwQ = lw[:, -1:]                                           # (B,1,H,D)
+        k_dec = kq * jnp.exp(jnp.maximum(lwQ - lw, -40.0))
+        s = (jnp.exp(jnp.maximum(lwQ[:, 0], -40.0))[..., None] * s
+             + jnp.einsum("bshi,bshj->bhij", k_dec, vq))
+        return s, y
+
+    xs = tuple(jnp.moveaxis(x_, 1, 0) for x_ in (rc, kc, vc, wc))
+    sT, ys = jax.lax.scan(per_chunk, s0.astype(jnp.float32), xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, T + pad, H, D)[:, :T]
+    return y.astype(dtype), sT
+
+
+def mamba2_scan_chunked(x, dt, a_log, b, c, h0, *, chunk: int = 128):
+    """Chunked SSD formulation of the Mamba2 recurrence (same signature and
+    semantics as :func:`mamba2_scan`).
+
+    The naive form reads/writes the (B,H,P,N) state from HBM every timestep —
+    at train_4k that is the single worst memory-roofline term in the zoo
+    (zamba2: 5,147 s/step).  The SSD block decomposition (Dao & Gu, 2024)
+    turns it into per-chunk MATMULS with one state hand-off per chunk:
+
+      within a chunk (inclusive log-decay  la_t = sum_{r<=t} dt_r*A):
+        y_t = e^{la_t} (C_t . h_in)
+              + sum_{s<=t} e^{la_t - la_s} dt_s (C_t . B_s) x_s
+        h_out = e^{la_Q} h_in + sum_s e^{la_Q - la_s} dt_s  x_s (x) B_s
+
+    Numerically stable: A < 0 so every exponent is <= 0.  HBM traffic drops
+    by ~chunk; the pairwise terms are MXU-shaped (Q x Q) matmuls.
+    """
+    dtype = x.dtype
+    Bn, T, H, Pd = x.shape
+    N = b.shape[-1]
+    chunk = min(chunk, T)
+    pad = (-T) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))     # dt=0: no-op steps
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    NC = (T + pad) // chunk
+
+    xc = x.reshape(Bn, NC, chunk, H, Pd).astype(jnp.float32)
+    dtc = dt.reshape(Bn, NC, chunk, H).astype(jnp.float32)
+    bc = b.reshape(Bn, NC, chunk, N).astype(jnp.float32)
+    cc = c.reshape(Bn, NC, chunk, N).astype(jnp.float32)
+    a = -jnp.exp(a_log.astype(jnp.float32))              # (H,) < 0
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), jnp.float32))          # s <= t
+
+    def per_chunk(h, xs):
+        xq, dtq, bq, cq = xs                 # (B,Q,H,P) (B,Q,H) (B,Q,N) (B,Q,N)
+        la = jnp.cumsum(dtq * a[None, None, :], axis=1)            # (B,Q,H) <= 0
+        # inter-chunk: carry-in state read out at every position
+        y_inter = jnp.exp(la)[..., None] * jnp.einsum("bqn,bhpn->bqhp", cq, h)
+        # intra-chunk: pairwise decay-weighted (C_t . B_s) attention.
+        # The (B,Q,Q,H) pairwise tensor dominates HBM traffic — computed in
+        # fp32 for the exponentials, stored/contracted in the model dtype
+        # (bf16 on TPU): halves the dominant memory-roofline buffer (§Perf).
+        g = jnp.einsum("bqn,bsn->bqs", cq, bq)                     # (B,Q,Q)
+        # decay(t,s) = exp(la_t - la_s) factorized as exp(la_t) * exp(-la_s)
+        # so every exp runs on a SMALL (B,Q,H) f32 tensor and the (B,Q,S,H)
+        # pairwise product is born in the model dtype — a broadcast-subtract
+        # + exp would materialize it in fp32 (the dominant memory-roofline
+        # buffer, §Perf iteration 3).  la clipped to [-60, 0]: exp(-la) stays
+        # finite; masked (t<s) entries are zeroed by the causal tri mask.
+        lac = jnp.clip(la, -60.0, 0.0)
+        ep = jnp.exp(lac).astype(dtype)                            # (B,Q,H)
+        en_dt = (jnp.exp(-lac) * dtq).astype(dtype)                # (B,Q,H)
+        m = ((g * tri[None]).astype(dtype)[..., None]
+             * ep[:, :, None, :] * en_dt[:, None, :, :])           # (B,Q,S,H)
+        y_intra = jnp.einsum("bqsh,bshp->bqhp", m, xq.astype(dtype))
+        # state hand-off
+        laQ = la[:, -1:, :]                                        # (B,1,H)
+        wgt = jnp.exp(laQ - la) * dtq                              # (B,Q,H)
+        h = (jnp.exp(laQ)[:, 0, :, None, None] * h
+             + jnp.einsum("bsh,bshp,bsn->bhpn", wgt, xq, bq))
+        return h, y_inter.astype(dtype) + y_intra
+
+    h0 = h0.astype(jnp.float32)
+    xs = tuple(jnp.moveaxis(z, 1, 0) for z in (xc, dtc, bc, cc))
+    hT, ys = jax.lax.scan(per_chunk, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bn, T + pad, H, Pd)[:, :T]
+    return y.astype(dtype), hT
+
+
+# ---------------------------------------------------------------------------
+# MoE grouped-matmul oracle: per-expert SwiGLU FFN on capacity buffers.
+# ---------------------------------------------------------------------------
+
+def moe_ffn(xe, wi_gate, wi_up, wo):
+    """xe: (E,C,d); wi_*: (E,d,f); wo: (E,f,d) -> (E,C,d)."""
+    g = jnp.einsum("ecd,edf->ecf", xe, wi_gate)
+    u = jnp.einsum("ecd,edf->ecf", xe, wi_up)
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("ecf,efd->ecd", h, wo)

@@ -1,0 +1,101 @@
+"""RWKV6 WKV recurrence as a Pallas TPU kernel.
+
+The recurrence has no attention analogue: a per-head (D,D) state matrix with
+*data-dependent per-channel decay* ``w_t``.  TPU adaptation: the state lives
+in fp32 VMEM scratch and is carried across sequential grid steps along the
+time-chunk axis; the grid's leading axis is (batch x heads), which is the
+embarrassingly-parallel dim.  Inside a chunk the time loop is a
+``lax.fori_loop`` over VMEM-resident (chunk, D) tiles — HBM traffic is one
+read of r/k/v/w and one write of y per token, i.e. the kernel is
+memory-bound by design (arithmetic intensity ~ D ops/byte).
+
+The y_t contraction uses the algebraic split
+    y_t = r_t @ S + (sum_i r_i u_i k_i) * v_t
+which avoids materializing the (D,D) bonus outer product per step.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, sT_ref, s_scr,
+            *, chunk, D, nt):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        s_scr[...] = s0_ref[0].astype(jnp.float32)
+
+    r = r_ref[0].astype(jnp.float32)          # (chunk, D)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    w = w_ref[0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)          # (D,)
+    ruk = jnp.sum(r * u[None, :] * k, axis=-1)  # (chunk,)
+
+    def body(i, s):
+        rt, kt, vt, wt = r[i], k[i], v[i], w[i]
+        y = rt @ s + ruk[i] * vt                              # (D,)
+        y_ref[0, i] = y.astype(y_ref.dtype)
+        return wt[:, None] * s + kt[:, None] * vt[None, :]
+
+    s_scr[...] = jax.lax.fori_loop(0, chunk, body, s_scr[...])
+
+    @pl.when(t == nt - 1)
+    def _fin():
+        sT_ref[0] = s_scr[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rwkv6_scan(r, k, v, w, u, s0, *, chunk=128, interpret=True):
+    """r,k,v,w: (B,T,H,D); u: (H,D); s0: (B,H,D,D) -> (y, sT). See ref.rwkv6_scan."""
+    B, T, H, D = r.shape
+    chunk = min(chunk, T)
+    pad = (-T) % chunk
+    BH = B * H
+
+    def fold(x):  # (B,T,H,D) -> (BH, Tp, D)
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return x.transpose(0, 2, 1, 3).reshape(BH, T + pad, D)
+
+    rf, kf, vf = fold(r), fold(k), fold(v)
+    # padded decay=1, k=0: state passes through unchanged on padding steps.
+    wf = fold(w)
+    if pad:
+        tmask = (jnp.arange(T + pad) < T)[None, :, None]
+        wf = jnp.where(tmask, wf, 1.0)
+    uf = jnp.broadcast_to(u[None], (B, H, D)).reshape(BH, D)
+    s0f = s0.reshape(BH, D, D)
+    nt = (T + pad) // chunk
+
+    y, sT = pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk, D=D, nt=nt),
+        grid=(BH, nt),
+        in_specs=[
+            pl.BlockSpec((1, chunk, D), lambda i, t: (i, t, 0)),
+            pl.BlockSpec((1, chunk, D), lambda i, t: (i, t, 0)),
+            pl.BlockSpec((1, chunk, D), lambda i, t: (i, t, 0)),
+            pl.BlockSpec((1, chunk, D), lambda i, t: (i, t, 0)),
+            pl.BlockSpec((1, D), lambda i, t: (i, 0)),
+            pl.BlockSpec((1, D, D), lambda i, t: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, D), lambda i, t: (i, t, 0)),
+            pl.BlockSpec((1, D, D), lambda i, t: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, T + pad, D), r.dtype),
+            jax.ShapeDtypeStruct((BH, D, D), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((D, D), jnp.float32)],
+        interpret=interpret,
+    )(rf, kf, vf, wf, uf, s0f)
+
+    y = y[:, :T].reshape(B, H, T, D).transpose(0, 2, 1, 3)
+    return y, sT.reshape(B, H, D, D)

@@ -1,0 +1,29 @@
+"""Production meshes (TPU v5e-256 pods).
+
+Functions, not module-level constants — importing this module never touches
+jax device state (the dry-run must set XLA_FLAGS before the first jax call).
+"""
+
+from __future__ import annotations
+
+import jax
+
+# v5e hardware constants (roofline denominators)
+PEAK_FLOPS_BF16 = 197e12          # per chip
+HBM_BW = 819e9                    # bytes/s per chip
+ICI_BW = 50e9                     # bytes/s per link
+HBM_BYTES = 16 * 2**30            # per chip
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Degenerate mesh over the local devices (CPU tests)."""
+    n = len(jax.devices())
+    data = min(data, n)
+    return jax.make_mesh((data, max(1, min(model, n // data))),
+                         ("data", "model"))

@@ -1,0 +1,199 @@
+"""Mixture-of-Experts layer: top-k router + static-capacity dispatch.
+
+The dispatch is the standard drop-token formulation (GShard/Switch family,
+MaxText-style): every token picks its top-k experts; each expert has a static
+per-step capacity ``C = ceil(T * top_k / E * capacity_factor)``; tokens beyond
+capacity are dropped (their expert contribution is zero — the residual stream
+carries them through).  This keeps the program shape static under jit and the
+FLOPs proportional to *active* experts, which is what the roofline needs for
+olmoe's 64 experts — computing all experts densely would inflate compute 8x.
+
+The (E, C, d) x (E, d, f) grouped matmuls are the compute hot-spot; ``impl=
+"pallas"`` routes them through :mod:`repro.kernels.moe_gmm`.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.nn import param as P
+from repro.nn.param import ParamCtx
+from repro.sharding.ctx import constrain
+
+
+def init_moe(ctx: ParamCtx, d_model: int, d_ff: int, n_experts: int):
+    """SwiGLU experts + linear router.
+
+    Expert weights shard over the EXPERT dim only: FSDP-sharding their d_model
+    dim over "data" forces GSPMD to all-gather the (groups, E, C, d) token
+    buffers instead of the (much smaller) weights under local dispatch —
+    measured as the dominant collective in the olmoe baseline (§Perf)."""
+    return {
+        "router": ctx.param("router", (d_model, n_experts), P.normal(0.02),
+                            (P.EMBED, P.EXPERTS)),
+        "wi_gate": ctx.param("wi_gate", (n_experts, d_model, d_ff), P.fan_in(),
+                             (P.EXPERTS, None, None)),
+        "wi_up": ctx.param("wi_up", (n_experts, d_model, d_ff), P.fan_in(),
+                           (P.EXPERTS, None, None)),
+        "wo": ctx.param("wo", (n_experts, d_ff, d_model), P.fan_in(),
+                        (P.EXPERTS, None, None)),
+    }
+
+
+def expert_capacity(n_tokens: int, n_experts: int, top_k: int,
+                    capacity_factor: float = 1.25) -> int:
+    cap = int(np.ceil(n_tokens * top_k / n_experts * capacity_factor))
+    # pad to a lane-friendly multiple of 8 (128 on real TPU shapes)
+    return max(8, ((cap + 7) // 8) * 8)
+
+
+def route_topk(router_logits: jax.Array, top_k: int):
+    """(T, E) logits -> (gates (T,k) fp32 normalized, idx (T,k) int32, probs)."""
+    probs = jax.nn.softmax(router_logits.astype(jnp.float32), axis=-1)
+    gates, idx = jax.lax.top_k(probs, top_k)
+    gates = gates / jnp.maximum(jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
+    return gates, idx, probs
+
+
+def load_balance_loss(probs: jax.Array, idx: jax.Array, n_experts: int) -> jax.Array:
+    """Switch-style auxiliary loss: E * sum_e f_e * p_e (f from all top-k picks)."""
+    T = probs.shape[0]
+    counts = jnp.zeros((n_experts,), jnp.float32).at[idx.reshape(-1)].add(1.0)
+    f = counts / jnp.maximum(T * idx.shape[-1], 1)
+    p = jnp.mean(probs, axis=0)
+    return n_experts * jnp.sum(f * p)
+
+
+def dispatch_indices(idx: jax.Array, capacity: int, n_experts: int):
+    """Assignment slots.
+
+    Returns:
+      buf:   (E, C) int32 — token id feeding each expert slot (T = dummy row).
+      gatep: (E, C) int32 — which of the token's k picks this slot is.
+      valid: (E, C) bool.
+    """
+    T, k = idx.shape
+    flat_e = idx.reshape(-1)                                   # (T*k,)
+    onehot = jax.nn.one_hot(flat_e, n_experts, dtype=jnp.int32)  # (T*k, E)
+    pos = jnp.cumsum(onehot, axis=0) * onehot                  # 1-based position
+    pos_in_e = jnp.sum(pos, axis=-1) - 1                       # (T*k,)
+    keep = pos_in_e < capacity
+    tok = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
+    pick = jnp.tile(jnp.arange(k, dtype=jnp.int32), T)
+    # scatter into (E, C); dropped assignments scatter to a dummy column.
+    e_tgt = jnp.where(keep, flat_e, n_experts)                 # dummy expert row
+    c_tgt = jnp.where(keep, pos_in_e, 0)
+    buf = jnp.full((n_experts + 1, capacity), T, jnp.int32)
+    buf = buf.at[e_tgt, c_tgt].set(jnp.where(keep, tok, T))
+    gatep = jnp.zeros((n_experts + 1, capacity), jnp.int32)
+    gatep = gatep.at[e_tgt, c_tgt].set(jnp.where(keep, pick, 0))
+    buf, gatep = buf[:n_experts], gatep[:n_experts]
+    valid = buf < T
+    return buf, gatep, valid
+
+
+def _moe_tokens(params, xt: jax.Array, top_k: int, capacity_factor: float,
+                impl: str):
+    """MoE over one flat token block xt (T, d) -> (y (T,d), aux)."""
+    T, d = xt.shape
+    E = params["router"].shape[-1]
+    C = expert_capacity(T, E, top_k, capacity_factor)
+
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    gates, idx, probs = route_topk(logits, top_k)
+    aux = load_balance_loss(probs, idx, E)
+
+    buf, gatep, valid = dispatch_indices(idx, C, E)
+    # gather expert inputs; dummy token T reads a zero row.
+    xpad = jnp.concatenate([xt, jnp.zeros((1, d), xt.dtype)], axis=0)
+    xe = xpad[buf]                                             # (E, C, d)
+    xe = constrain(xe, (P.EXPERTS, None, None))                # expert-parallel
+
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        ye = kops.moe_ffn(xe, params["wi_gate"].astype(xt.dtype),
+                          params["wi_up"].astype(xt.dtype),
+                          params["wo"].astype(xt.dtype))
+    else:
+        g = jnp.einsum("ecd,edf->ecf", xe, params["wi_gate"].astype(xt.dtype))
+        u = jnp.einsum("ecd,edf->ecf", xe, params["wi_up"].astype(xt.dtype))
+        h = jax.nn.silu(g) * u
+        ye = jnp.einsum("ecf,efd->ecd", h, params["wo"].astype(xt.dtype))
+        ye = constrain(ye, (P.EXPERTS, None, None))
+
+    # combine: weight each slot by its token's gate, scatter-add back.
+    slot_gate = gates[jnp.clip(buf, 0, T - 1), gatep]          # (E, C) fp32
+    slot_gate = jnp.where(valid, slot_gate, 0.0).astype(xt.dtype)
+    y = jnp.zeros((T + 1, d), xt.dtype)
+    y = y.at[buf.reshape(-1)].add((ye * slot_gate[..., None]).reshape(-1, d))
+    return y[:T], aux
+
+
+def apply_moe(params, x: jax.Array, top_k: int, *,
+              capacity_factor: float = 1.25, impl: str = "xla",
+              groups: int = 0):
+    """x: (..., d) -> (y, aux_loss).  Leading dims are flattened to tokens.
+
+    ``groups`` > 1 enables LOCAL DISPATCH (beyond-paper, §Perf): routing,
+    cumsum and gather/scatter run independently per token group (one group
+    per data shard, capacity C/G each), so the dispatch bookkeeping never
+    crosses shards — without it GSPMD replicates the (T*k, E) cumsum on
+    every device and all-reduces whole expert buffers (the collective-bound
+    olmoe baseline).  Per-group capacity drops tokens per group rather than
+    globally — standard expert-parallel semantics.
+    """
+    d = x.shape[-1]
+    lead = x.shape[:-1]
+    xt = x.reshape(-1, d)
+    T = xt.shape[0]
+    if groups > 1 and T % groups == 0 and (T // groups) >= top_k:
+        y, aux = _moe_grouped(params, xt.reshape(groups, T // groups, d),
+                              top_k, capacity_factor)
+        return y.reshape(*lead, d), aux
+    y, aux = _moe_tokens(params, xt, top_k, capacity_factor, impl)
+    return y.reshape(*lead, d), aux
+
+
+def _moe_grouped(params, xg: jax.Array, top_k: int, capacity_factor: float):
+    """Local-dispatch path: xg (G, Tl, d), one group per data shard.
+
+    Routing/cumsum/gather/scatter are group-local (vmapped integer work);
+    the expert FFN keeps G and E as explicit einsum axes sharded
+    (data, model) so the grouped matmuls run with NO gathered activations.
+    """
+    G, Tl, d = xg.shape
+    E = params["router"].shape[-1]
+    C = expert_capacity(Tl, E, top_k, capacity_factor)
+    dt = xg.dtype
+    xg = constrain(xg, (P.BATCH, None, None))
+
+    logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    gates, idx, probs = jax.vmap(lambda l: route_topk(l, top_k))(logits)
+    aux = jnp.mean(jax.vmap(lambda p, i: load_balance_loss(p, i, E))(probs, idx))
+
+    buf, gatep, valid = jax.vmap(lambda i: dispatch_indices(i, C, E))(idx)
+    xpad = jnp.concatenate([xg, jnp.zeros((G, 1, d), dt)], axis=1)
+    xe = jax.vmap(lambda xp, b: xp[b])(xpad, buf)              # (G, E, C, d)
+    xe = constrain(xe, (P.BATCH, P.EXPERTS, None, None))
+
+    g_ = jnp.einsum("gecd,edf->gecf", xe, params["wi_gate"].astype(dt))
+    u_ = jnp.einsum("gecd,edf->gecf", xe, params["wi_up"].astype(dt))
+    h = jax.nn.silu(g_) * u_
+    ye = jnp.einsum("gecf,efd->gecd", h, params["wo"].astype(dt))
+    ye = constrain(ye, (P.BATCH, P.EXPERTS, None, None))
+
+    slot_gate = jax.vmap(lambda g, b, gp: g[jnp.clip(b, 0, Tl - 1), gp])(
+        gates, buf, gatep)                                     # (G, E, C)
+    slot_gate = jnp.where(valid, slot_gate, 0.0).astype(dt)
+
+    def combine(b, y_e, sg):
+        out = jnp.zeros((Tl + 1, d), dt)
+        return out.at[b.reshape(-1)].add(
+            (y_e * sg[..., None]).reshape(-1, d))[:Tl]
+
+    y = jax.vmap(combine)(buf, ye, slot_gate)                  # (G, Tl, d)
+    return constrain(y, (P.BATCH, None, None)), aux

@@ -1,0 +1,177 @@
+"""Parameter containers with logical sharding axes.
+
+The framework is pure JAX (no flax/haiku). Every ``init_*`` function returns a
+pytree whose leaves are :class:`Box` — an array (or, under ``jax.eval_shape``,
+a ``ShapeDtypeStruct``) tagged with a tuple of *logical axis names*, one per
+dimension.  The sharding layer (``repro.sharding``) resolves logical names to
+mesh ``PartitionSpec``s; the training layer strips the boxes and works on plain
+array pytrees.
+
+Keeping value and axes in a single tree (rather than two parallel trees built
+by duplicated code) makes it impossible for the sharding annotation to drift
+out of sync with the parameter structure.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Logical axis vocabulary.  ``repro.sharding.rules`` maps these to mesh axes.
+EMBED = "embed"          # d_model
+FFN = "ffn"              # feed-forward hidden
+VOCAB = "vocab"          # vocabulary
+HEADS = "heads"          # query heads
+KV_HEADS = "kv_heads"    # key/value heads
+HEAD_DIM = "head_dim"    # per-head dim
+LAYERS = "layers"        # stacked (scanned) layer dim — never mesh-sharded
+EXPERTS = "experts"      # MoE experts
+DSTATE = "dstate"        # SSM state dim
+DCONV = "dconv"          # conv kernel dim
+SEQ = "seq"              # sequence (activations / caches)
+ATTN_SEQ = "attn_seq"    # query seq dim inside attention (context parallel)
+BATCH = "batch"          # batch (activations / caches)
+CLIENT = "client"        # federated client dim (maps to the "pod" mesh axis)
+NONE = None
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Box:
+    """An array tagged with per-dimension logical axis names."""
+
+    value: Any
+    axes: tuple
+
+    def tree_flatten(self):
+        return (self.value,), self.axes
+
+    @classmethod
+    def tree_unflatten(cls, axes, children):
+        return cls(children[0], axes)
+
+    def __post_init__(self):
+        if hasattr(self.value, "ndim") and len(self.axes) != self.value.ndim:
+            raise ValueError(
+                f"axes {self.axes} rank-mismatch value shape {self.value.shape}"
+            )
+
+
+def is_box(x: Any) -> bool:
+    return isinstance(x, Box)
+
+
+def unbox(tree: Any) -> Any:
+    """Strip Box wrappers -> plain value pytree."""
+    return jax.tree.map(lambda b: b.value if is_box(b) else b, tree, is_leaf=is_box)
+
+
+def unbox_if(tree: Any) -> Any:
+    """``unbox`` that is a no-op on already-plain trees (apply functions accept
+    either form)."""
+    return unbox(tree)
+
+
+def box_axes(tree: Any) -> Any:
+    """Extract the logical-axes pytree (same structure as ``unbox(tree)``)."""
+    return jax.tree.map(lambda b: b.axes if is_box(b) else None, tree, is_leaf=is_box)
+
+
+def rebox(values: Any, axes: Any) -> Any:
+    """Inverse of (unbox, box_axes)."""
+    return jax.tree.map(lambda v, a: Box(v, a) if a is not None else v, values, axes,
+                        is_leaf=lambda x: x is None)
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+Initializer = Callable[[jax.Array, Sequence[int], Any], jax.Array]
+
+
+def normal(stddev: float = 0.02) -> Initializer:
+    def init(key, shape, dtype):
+        return (stddev * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+    return init
+
+
+def fan_in(scale: float = 1.0) -> Initializer:
+    """LeCun-style: stddev = sqrt(scale / fan_in); fan_in = prod of all dims but last."""
+    def init(key, shape, dtype):
+        fin = max(1, int(np.prod(shape[:-1])))
+        std = (scale / fin) ** 0.5
+        return (std * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+    return init
+
+
+def zeros() -> Initializer:
+    def init(key, shape, dtype):
+        return jnp.zeros(shape, dtype)
+    return init
+
+
+def ones() -> Initializer:
+    def init(key, shape, dtype):
+        return jnp.ones(shape, dtype)
+    return init
+
+
+def uniform(scale: float = 1.0) -> Initializer:
+    def init(key, shape, dtype):
+        return (scale * jax.random.uniform(key, shape, jnp.float32, -1.0, 1.0)).astype(dtype)
+    return init
+
+
+class ParamCtx:
+    """Deterministic per-name RNG folding for init functions.
+
+    ``ctx.param("wq", (d, h, hd), fan_in(), (EMBED, HEADS, HEAD_DIM))`` creates a
+    Box with an rng derived from ``fold_in(key, hash(name))`` — stable across
+    structural refactors as long as names are stable.
+    """
+
+    def __init__(self, key: jax.Array, dtype: Any):
+        self.key = key
+        self.dtype = dtype
+        self._names: set[str] = set()
+
+    def _key_for(self, name: str) -> jax.Array:
+        if name in self._names:
+            raise ValueError(f"duplicate param name {name!r} in one ParamCtx")
+        self._names.add(name)
+        # Stable 31-bit hash (python hash() is salted per-process).
+        h = 2166136261
+        for ch in name.encode():
+            h = ((h ^ ch) * 16777619) & 0xFFFFFFFF
+        return jax.random.fold_in(self.key, int(h) & 0x7FFFFFFF)
+
+    def param(self, name: str, shape: Sequence[int], init: Initializer,
+              axes: Sequence[Any], dtype: Any = None) -> Box:
+        dtype = self.dtype if dtype is None else dtype
+        value = init(self._key_for(name), tuple(shape), dtype)
+        return Box(value, tuple(axes))
+
+    def sub(self, name: str) -> "ParamCtx":
+        return ParamCtx(self._key_for(f"__sub__{name}"), self.dtype)
+
+
+def count_params(tree: Any) -> int:
+    leaves = jax.tree.leaves(unbox(tree))
+    return int(sum(int(np.prod(l.shape)) for l in leaves))
+
+
+def param_bytes(tree: Any) -> int:
+    leaves = jax.tree.leaves(unbox(tree))
+    return int(sum(int(np.prod(l.shape)) * l.dtype.itemsize for l in leaves))
+
+
+def abstract_init(init_fn: Callable, *args, **kwargs) -> Any:
+    """Run an init function under ``eval_shape`` — returns the boxed tree with
+    ShapeDtypeStruct values and logical axes preserved.  No allocation: this is
+    how the 340B dry-run builds its parameter specs on a CPU host."""
+    return jax.eval_shape(init_fn, *args, **kwargs)

@@ -1,0 +1,141 @@
+"""RWKV6 "Finch" block: data-dependent-decay time mixing + channel mixing.
+
+Faithful to arXiv:2404.05892: token-shift with data-dependent low-rank
+interpolation (ddlerp) over the five mix targets (w,k,v,r,g), low-rank
+data-dependent decay ``w = exp(-exp(w0 + tanh(x_w A1) A2))``, per-head WKV
+state with bonus ``u``, per-head GroupNorm, and squared-ReLU channel mixing.
+
+The WKV recurrence itself runs through :mod:`repro.kernels`
+(``impl="pallas"``) or the pure-jnp oracle (``impl="xla"``).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import param as P
+from repro.nn.layers import apply_layernorm
+from repro.nn.param import ParamCtx
+
+LORA = 32          # ddlerp low-rank dim
+LORA_W = 64        # decay low-rank dim
+HEAD_DIM = 64      # rwkv6 head size
+
+
+def rwkv_heads(d_model: int, ssm_heads: int = 0) -> int:
+    return ssm_heads or max(1, d_model // HEAD_DIM)
+
+
+def init_rwkv_time_mix(ctx: ParamCtx, d: int, n_heads: int):
+    hd = d // n_heads
+    lw = min(LORA_W, d)
+    la = min(LORA, d)
+    return {
+        "mu_x": ctx.param("mu_x", (d,), P.uniform(0.5), (P.EMBED,)),
+        "mu_5": ctx.param("mu_5", (5, d), P.uniform(0.5), (None, P.EMBED)),
+        "ddlerp_a": ctx.param("ddlerp_a", (d, 5, la), P.normal(0.01),
+                              (P.EMBED, None, None)),
+        "ddlerp_b": ctx.param("ddlerp_b", (5, la, d), P.normal(0.01),
+                              (None, None, P.EMBED)),
+        "w0": ctx.param("w0", (d,), P.normal(0.5), (P.EMBED,)),
+        "w_a": ctx.param("w_a", (d, lw), P.normal(0.01), (P.EMBED, None)),
+        "w_b": ctx.param("w_b", (lw, d), P.normal(0.01), (None, P.EMBED)),
+        "wr": ctx.param("wr", (d, d), P.fan_in(), (P.EMBED, P.HEADS)),
+        "wk": ctx.param("wk", (d, d), P.fan_in(), (P.EMBED, P.HEADS)),
+        "wv": ctx.param("wv", (d, d), P.fan_in(), (P.EMBED, P.HEADS)),
+        "wg": ctx.param("wg", (d, d), P.fan_in(), (P.EMBED, P.HEADS)),
+        "wo": ctx.param("wo", (d, d), P.fan_in(), (P.HEADS, P.EMBED)),
+        "u": ctx.param("u", (n_heads, hd), P.normal(0.5), (None, P.HEAD_DIM)),
+        "ln_x": {
+            "scale": ctx.param("lnx_scale", (d,), P.ones(), (P.EMBED,)),
+            "bias": ctx.param("lnx_bias", (d,), P.zeros(), (P.EMBED,)),
+        },
+    }
+
+
+def init_rwkv_channel_mix(ctx: ParamCtx, d: int, d_ff: int):
+    return {
+        "mu_k": ctx.param("mu_k", (d,), P.uniform(0.5), (P.EMBED,)),
+        "mu_r": ctx.param("mu_r", (d,), P.uniform(0.5), (P.EMBED,)),
+        "wk": ctx.param("wk", (d, d_ff), P.fan_in(), (P.EMBED, P.FFN)),
+        "wr": ctx.param("wr", (d, d), P.fan_in(), (P.EMBED, P.HEADS)),
+        "wv": ctx.param("wv", (d_ff, d), P.fan_in(), (P.FFN, P.EMBED)),
+    }
+
+
+def _shift(x, last):
+    """Token shift: x_prev[t] = x[t-1]; position 0 takes ``last`` (decode
+    carry-in, zeros at sequence start).  x: (B,T,d); last: (B,d)."""
+    return jnp.concatenate([last[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _group_norm(params, y, n_heads, eps=64e-5):
+    """Per-head LayerNorm (RWKV's GroupNorm with groups=heads)."""
+    B, T, d = y.shape
+    yh = y.reshape(B, T, n_heads, d // n_heads).astype(jnp.float32)
+    mu = jnp.mean(yh, axis=-1, keepdims=True)
+    var = jnp.var(yh, axis=-1, keepdims=True)
+    yh = (yh - mu) * jax.lax.rsqrt(var + eps)
+    yh = yh.reshape(B, T, d)
+    return (yh * params["scale"].astype(jnp.float32)
+            + params["bias"].astype(jnp.float32)).astype(y.dtype)
+
+
+def apply_rwkv_time_mix(params, x, n_heads, *, last_x, state, impl="xla"):
+    """x: (B,T,d); last_x: (B,d); state: (B,H,hd,hd).
+    Returns (out, new_last_x, new_state)."""
+    B, T, d = x.shape
+    hd = d // n_heads
+    dt = x.dtype
+
+    xprev = _shift(x, last_x)
+    dx = xprev - x
+    xxx = x + dx * params["mu_x"].astype(dt)
+    # data-dependent lerp deltas for the five targets (w,k,v,r,g)
+    a = jnp.tanh(jnp.einsum("btd,dfa->btfa", xxx, params["ddlerp_a"].astype(dt)))
+    deltas = jnp.einsum("btfa,fad->btfd", a, params["ddlerp_b"].astype(dt))
+    mixed = x[:, :, None, :] + dx[:, :, None, :] * (
+        params["mu_5"].astype(dt)[None, None] + deltas)        # (B,T,5,d)
+    x_w, x_k, x_v, x_r, x_g = [mixed[:, :, i, :] for i in range(5)]
+
+    r = x_r @ params["wr"].astype(dt)
+    k = x_k @ params["wk"].astype(dt)
+    v = x_v @ params["wv"].astype(dt)
+    g = x_g @ params["wg"].astype(dt)
+    wlog = params["w0"].astype(jnp.float32) + jnp.einsum(
+        "btd,dl->btl", x_w.astype(jnp.float32), params["w_a"].astype(jnp.float32)
+    ) @ params["w_b"].astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(wlog))                                 # (B,T,d) in (0,1)
+
+    def heads(z):
+        return z.reshape(B, T, n_heads, hd)
+
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        y, new_state = kops.rwkv6_scan(heads(r), heads(k), heads(v),
+                                       heads(w.astype(dt)), params["u"], state)
+    elif impl == "chunked" and T > 1:
+        from repro.kernels import ref as kref
+        y, new_state = kref.rwkv6_scan_chunked(
+            heads(r), heads(k), heads(v), heads(w.astype(dt)), params["u"],
+            state)
+    else:
+        from repro.kernels import ref as kref
+        y, new_state = kref.rwkv6_scan(heads(r), heads(k), heads(v),
+                                       heads(w.astype(dt)), params["u"], state)
+
+    y = _group_norm(params["ln_x"], y.reshape(B, T, d), n_heads)
+    out = (y * jax.nn.silu(g)) @ params["wo"].astype(dt)
+    return out, x[:, -1, :], new_state
+
+
+def apply_rwkv_channel_mix(params, x, *, last_x):
+    dt = x.dtype
+    xprev = _shift(x, last_x)
+    dx = xprev - x
+    x_k = x + dx * params["mu_k"].astype(dt)
+    x_r = x + dx * params["mu_r"].astype(dt)
+    k = jnp.square(jax.nn.relu(x_k @ params["wk"].astype(dt)))
+    out = jax.nn.sigmoid(x_r @ params["wr"].astype(dt)) * (k @ params["wv"].astype(dt))
+    return out, x[:, -1, :]

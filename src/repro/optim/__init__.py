@@ -1,0 +1,4 @@
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer, adam, adamw, sgd, apply_updates, global_norm, clip_by_global_norm)
+from repro.optim.schedules import (  # noqa: F401
+    constant, cosine_decay, linear_warmup)

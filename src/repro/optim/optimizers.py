@@ -1,0 +1,128 @@
+"""Optimizers from scratch (no optax): Adam / AdamW / SGD.
+
+Interface is optax-shaped: ``state = opt.init(params)``, ``updates, state =
+opt.update(grads, state, params)``, ``params = apply_updates(params, updates)``.
+
+``init`` accepts a *boxed* or plain parameter tree.  Given boxes, the returned
+moment trees are boxed with the same logical axes — so the sharding layer can
+resolve optimizer-state PartitionSpecs identically to the parameters (ZeRO-
+style: m/v shard wherever the param shards).  ``state_dtype`` lets the 340B
+config keep moments in bf16 (see EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import param as P
+
+Schedule = Union[float, Callable[[jax.Array], jax.Array]]
+
+
+def _lr_at(lr: Schedule, count):
+    return lr(count) if callable(lr) else jnp.asarray(lr, jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], Any]     # (grads, state, params)
+
+
+def _zeros_like_tree(tree, dtype=None):
+    def one(b):
+        if P.is_box(b):
+            v = b.value
+            return P.Box(jnp.zeros(v.shape, dtype or v.dtype), b.axes)
+        return jnp.zeros(b.shape, dtype or b.dtype)
+    return jax.tree.map(one, tree, is_leaf=P.is_box)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u.astype(p.dtype)), params, updates)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    n = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(n, 1e-9))
+    return jax.tree.map(lambda l: l * scale.astype(l.dtype), tree), n
+
+
+def adam(lr: Schedule = 5e-5, b1: float = 0.9, b2: float = 0.999,
+         eps: float = 1e-8, state_dtype=None) -> Optimizer:
+    return adamw(lr, b1, b2, eps, weight_decay=0.0, state_dtype=state_dtype)
+
+
+def adamw(lr: Schedule = 5e-5, b1: float = 0.9, b2: float = 0.999,
+          eps: float = 1e-8, weight_decay: float = 0.0,
+          state_dtype=None) -> Optimizer:
+    """AdamW; the paper's pre-training setup is plain Adam (wd=0), lr 5e-5."""
+
+    def init(params):
+        return {
+            "m": _zeros_like_tree(params, state_dtype),
+            "v": _zeros_like_tree(params, state_dtype),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        count = state["count"] + 1
+        lr_t = _lr_at(lr, count)
+        bc1 = 1.0 - b1 ** count.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+        def mom(m, g):
+            return (b1 * m.astype(jnp.float32)
+                    + (1 - b1) * g.astype(jnp.float32)).astype(m.dtype)
+
+        def vel(v, g):
+            g32 = g.astype(jnp.float32)
+            return (b2 * v.astype(jnp.float32) + (1 - b2) * g32 * g32).astype(v.dtype)
+
+        m = jax.tree.map(mom, state["m"], grads)
+        v = jax.tree.map(vel, state["v"], grads)
+
+        def upd(m_, v_, p):
+            mh = m_.astype(jnp.float32) / bc1
+            vh = v_.astype(jnp.float32) / bc2
+            u = -lr_t * mh / (jnp.sqrt(vh) + eps)
+            if weight_decay:
+                u = u - lr_t * weight_decay * p.astype(jnp.float32)
+            return u
+
+        updates = jax.tree.map(upd, m, v, params)
+        return updates, {"m": m, "v": v, "count": count}
+
+    return Optimizer(init, update)
+
+
+def sgd(lr: Schedule = 1e-2, momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        st = {"count": jnp.zeros((), jnp.int32)}
+        if momentum:
+            st["m"] = _zeros_like_tree(params)
+        return st
+
+    def update(grads, state, params):
+        count = state["count"] + 1
+        lr_t = _lr_at(lr, count)
+        new = {"count": count}
+        if momentum:
+            m = jax.tree.map(lambda m_, g: momentum * m_ + g.astype(m_.dtype),
+                             state["m"], grads)
+            new["m"] = m
+            updates = jax.tree.map(lambda m_: -lr_t * m_.astype(jnp.float32), m)
+        else:
+            updates = jax.tree.map(lambda g: -lr_t * g.astype(jnp.float32), grads)
+        return updates, new
+
+    return Optimizer(init, update)

@@ -1,0 +1,29 @@
+"""Learning-rate schedules (count -> lr, fp32 scalars)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    def f(count):
+        return jnp.asarray(lr, jnp.float32)
+    return f
+
+
+def linear_warmup(lr: float, warmup_steps: int):
+    def f(count):
+        c = count.astype(jnp.float32)
+        return lr * jnp.minimum(1.0, c / max(warmup_steps, 1))
+    return f
+
+
+def cosine_decay(lr: float, total_steps: int, warmup_steps: int = 0,
+                 min_ratio: float = 0.1):
+    def f(count):
+        c = count.astype(jnp.float32)
+        warm = jnp.minimum(1.0, c / max(warmup_steps, 1)) if warmup_steps else 1.0
+        t = jnp.clip((c - warmup_steps) / max(total_steps - warmup_steps, 1), 0, 1)
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return lr * warm * cos
+    return f

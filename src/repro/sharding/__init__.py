@@ -1,0 +1,8 @@
+from repro.sharding.rules import (  # noqa: F401
+    Rules,
+    DEFAULT_RULES,
+    FED_RULES,
+    logical_to_spec,
+    tree_shardings,
+    tree_specs,
+)

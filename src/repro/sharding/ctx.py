@@ -1,0 +1,64 @@
+"""Ambient activation-sharding context (MaxText's logical-constraint idiom).
+
+GSPMD's sharding propagation regularly loses activation shardings inside
+scanned layer bodies (the carry defaults to replicated) — on the production
+mesh that silently replicates attention over the model axis, a 16x compute
+regression the dry-run caught.  The fix is explicit constraints on the
+residual stream / projection activations, expressed in *logical* axes and
+resolved against whatever mesh+rules the launcher installed:
+
+    with activation_sharding(mesh, rules):
+        lowered = jax.jit(step, ...).lower(...)
+
+Inside model code:  ``x = constrain(x, (BATCH, SEQ, EMBED))`` — a no-op when
+no context is installed (CPU unit tests, plain eager use).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from repro.sharding.rules import Rules, logical_to_spec
+
+_state = threading.local()
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Mesh, rules: Rules):
+    prev = getattr(_state, "ctx", None)
+    _state.ctx = (mesh, rules)
+    try:
+        yield
+    finally:
+        _state.ctx = prev
+
+
+def current() -> Optional[tuple]:
+    return getattr(_state, "ctx", None)
+
+
+def data_parallel_size() -> int:
+    """Product of the batch-carrying mesh axes (pod x data) in the ambient
+    context; 1 when no context (CPU tests)."""
+    ctx = current()
+    if ctx is None:
+        return 1
+    mesh, _ = ctx
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return sizes.get("pod", 1) * sizes.get("data", 1)
+
+
+def constrain(x: jax.Array, axes: Sequence[Optional[str]]) -> jax.Array:
+    ctx = current()
+    if ctx is None or not hasattr(x, "ndim"):
+        return x
+    mesh, rules = ctx
+    if len(axes) != x.ndim:
+        return x
+    spec = logical_to_spec(axes, x.shape, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,177 @@
+"""Logical-axis -> mesh PartitionSpec resolution.
+
+MaxText-style rules: each logical axis name (``repro.nn.param``) maps to an
+ordered list of *candidate* mesh axes.  Resolution walks a tensor's logical
+axes and, per dimension, picks the first candidate mesh axis (or axis tuple)
+that (a) exists in the mesh, (b) divides the dimension size, and (c) has not
+already been consumed by another dimension of the same tensor.  Anything that
+fails all candidates is replicated — a *fallback*, never an error, so every
+architecture in the zoo lowers even when its head counts do not match the
+mesh (qwen2's 28 heads on a 16-way model axis, whisper's 6, ...).
+
+Two rule tables ship:
+  * ``DEFAULT_RULES``  — 2D/3D tensor+data parallel training/serving layout.
+  * ``FED_RULES``      — federated layout: the ``client`` logical axis maps to
+    the ``pod`` mesh axis so each pod holds one client's diverging replica.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro.nn import param as P
+
+# A candidate is a mesh axis name or a tuple of mesh axis names (sharded over
+# their product).  ``None`` means "replicate" and always succeeds.
+Candidate = Union[str, Tuple[str, ...], None]
+
+
+@dataclasses.dataclass(frozen=True)
+class Rules:
+    table: Mapping[str, Tuple[Candidate, ...]]
+
+    def candidates(self, logical: Optional[str]) -> Tuple[Candidate, ...]:
+        if logical is None:
+            return (None,)
+        return self.table.get(logical, (None,))
+
+
+# Batch shards over every data-like mesh axis present; model-ish dims over
+# "model".  Order = priority.
+DEFAULT_RULES = Rules({
+    P.BATCH:    (("pod", "data"), "data", None),
+    P.SEQ:      (None,),                       # seq replicated by default
+    P.ATTN_SEQ: (None,),                       # baseline: attention replicates
+                                               # over model when heads don't
+                                               # divide (see OPT_RULES)
+    P.EMBED:    ("data", None),                # FSDP/ZeRO param shard
+    P.FFN:      ("model", None),
+    P.VOCAB:    ("model", None),
+    P.HEADS:    ("model", None),
+    P.KV_HEADS: ("model", None),
+    P.HEAD_DIM: (None,),
+    P.LAYERS:   (None,),                       # scanned, never mesh-sharded
+    P.EXPERTS:  ("model", None),
+    P.DSTATE:   (None,),
+    P.DCONV:    (None,),
+    P.CLIENT:   (("pod", "data"), "data", "pod", None),
+})
+
+# Federated layout: clients pinned to pods; within a pod the usual layout.
+FED_RULES = Rules({
+    **DEFAULT_RULES.table,
+    P.CLIENT: ("pod", None),
+    P.BATCH:  ("data", None),
+    P.EMBED:  ("data", None),
+})
+
+# Beyond-paper optimized layout (§Perf): context-parallel attention — the
+# query sequence dim shards over "model" whenever the head count doesn't
+# divide it, replacing 16x-replicated attention compute.
+OPT_RULES = Rules({
+    **DEFAULT_RULES.table,
+    P.ATTN_SEQ: ("model", None),
+})
+
+# Decode: the KV cache is the dominant tensor and kv-head counts rarely
+# divide the model axis — shard the cache *sequence* dim over "model"
+# (attention contracts over it; GSPMD inserts one small all-reduce).
+DECODE_RULES = Rules({
+    **DEFAULT_RULES.table,
+    P.SEQ: ("model", None),
+})
+
+# long_500k has batch=1: everything hangs off the sequence axis, so it takes
+# both mesh axes when divisible.
+LONG_CONTEXT_RULES = Rules({
+    **DEFAULT_RULES.table,
+    P.SEQ:   (("data", "model"), "data", "model", None),
+    P.BATCH: (None,),
+})
+
+
+def _mesh_axis_sizes(mesh: Mesh) -> Mapping[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _cand_size(cand: Candidate, sizes: Mapping[str, int]) -> Optional[int]:
+    if cand is None:
+        return 1
+    names = (cand,) if isinstance(cand, str) else cand
+    total = 1
+    for n in names:
+        if n not in sizes:
+            return None
+        total *= sizes[n]
+    return total
+
+
+def logical_to_spec(axes: Sequence[Optional[str]], shape: Sequence[int],
+                    mesh: Mesh, rules: Rules = DEFAULT_RULES) -> PartitionSpec:
+    """Resolve one tensor's logical axes to a PartitionSpec.
+
+    Divisibility-aware: a candidate that does not divide the dim falls through
+    to the next; a mesh axis already used by an earlier dim of this tensor is
+    skipped (PartitionSpec forbids reuse).
+    """
+    sizes = _mesh_axis_sizes(mesh)
+    used: set = set()
+    out = []
+    for logical, dim in zip(axes, shape):
+        picked: Candidate = None
+        for cand in rules.candidates(logical):
+            if cand is None:
+                picked = None
+                break
+            names = (cand,) if isinstance(cand, str) else tuple(cand)
+            size = _cand_size(names, sizes)
+            if size is None or size <= 1:
+                continue
+            if any(n in used for n in names):
+                continue
+            if dim % size != 0:
+                continue
+            picked = names if len(names) > 1 else names[0]
+            used.update(names)
+            break
+        out.append(picked)
+    # Trim trailing Nones (cosmetic; PartitionSpec treats them the same).
+    while out and out[-1] is None:
+        out.pop()
+    return PartitionSpec(*out)
+
+
+def tree_specs(boxed_tree: Any, mesh: Mesh, rules: Rules = DEFAULT_RULES) -> Any:
+    """Boxed pytree (values may be ShapeDtypeStructs) -> PartitionSpec pytree."""
+    def one(b):
+        if not P.is_box(b):
+            return PartitionSpec()
+        return logical_to_spec(b.axes, b.value.shape, mesh, rules)
+    return jax.tree.map(one, boxed_tree, is_leaf=P.is_box)
+
+
+def tree_shardings(boxed_tree: Any, mesh: Mesh, rules: Rules = DEFAULT_RULES) -> Any:
+    def one(b):
+        if not P.is_box(b):
+            return NamedSharding(mesh, PartitionSpec())
+        return NamedSharding(mesh, logical_to_spec(b.axes, b.value.shape, mesh, rules))
+    return jax.tree.map(one, boxed_tree, is_leaf=P.is_box)
+
+
+def spec_bytes_per_device(shape: Sequence[int], dtype, spec: PartitionSpec,
+                          mesh: Mesh) -> int:
+    """Post-sharding per-device bytes for one tensor (roofline bookkeeping)."""
+    sizes = _mesh_axis_sizes(mesh)
+    denom = 1
+    for entry in spec:
+        if entry is None:
+            continue
+        names = (entry,) if isinstance(entry, str) else entry
+        for n in names:
+            denom *= sizes.get(n, 1)
+    return int(np.prod(shape)) * np.dtype(dtype).itemsize // max(denom, 1)

@@ -1,0 +1,16 @@
+import jax
+import numpy as np
+import pytest
+
+# Smoke tests and benches see ONE device (the dry-run sets its own
+# XLA_FLAGS=512 in a separate process; never here).
+assert len(jax.devices()) >= 1
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running integration test")

@@ -1,0 +1,55 @@
+"""Checkpoint roundtrip, rotation, federated-state resume."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import (FederatedState, latest_step, restore_checkpoint,
+                              save_checkpoint)
+from repro.checkpoint.npz import restore_extra
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"layers": {"w": jnp.asarray(rng.normal(0, 1, (3, 4)), jnp.float32),
+                       "b": jnp.asarray(rng.normal(0, 1, (4,)), jnp.bfloat16)},
+            "head": jnp.asarray(rng.integers(0, 9, (2,)), jnp.int32)}
+
+
+def test_roundtrip(tmp_path):
+    t = _tree()
+    save_checkpoint(str(tmp_path), 7, t, extra={"round": 7})
+    assert latest_step(str(tmp_path)) == 7
+    got = restore_checkpoint(str(tmp_path), 7, jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), t))
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+    assert restore_extra(str(tmp_path), 7) == {"round": 7}
+
+
+def test_rotation_keeps_last(tmp_path):
+    t = _tree()
+    for s in range(6):
+        save_checkpoint(str(tmp_path), s, t, keep=3)
+    import os
+    ckpts = [f for f in os.listdir(tmp_path) if f.endswith(".npz")]
+    assert len(ckpts) == 3
+    assert latest_step(str(tmp_path)) == 5
+
+
+def test_shape_mismatch_raises(tmp_path):
+    save_checkpoint(str(tmp_path), 0, _tree())
+    bad = {"layers": {"w": jax.ShapeDtypeStruct((9, 9), jnp.float32),
+                      "b": jax.ShapeDtypeStruct((4,), jnp.bfloat16)},
+           "head": jax.ShapeDtypeStruct((2,), jnp.int32)}
+    try:
+        restore_checkpoint(str(tmp_path), 0, bad)
+        assert False, "expected ValueError"
+    except ValueError:
+        pass
+
+
+def test_federated_state_json():
+    st = FederatedState(round=4, ffdapt_start=3)
+    assert FederatedState.from_json(st.to_json()) == st

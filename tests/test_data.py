@@ -1,0 +1,75 @@
+"""Data layer: tokenizer determinism, corpus statistics, batching/MLM."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.data.batching import clm_batches, mlm_batches, shard_batches, tokenize_shard
+from repro.data.corpus import Document, corpus_stats, generate_corpus
+from repro.data.tokenizer import EOS, MASK, N_SPECIALS, HashWordTokenizer
+
+
+@settings(max_examples=30, deadline=None)
+@given(word=st.text(min_size=1, max_size=20), vocab=st.integers(10, 100000))
+def test_tokenizer_range_and_determinism(word, vocab):
+    tok = HashWordTokenizer(vocab)
+    t = tok.token(word)
+    assert N_SPECIALS <= t < vocab
+    assert t == HashWordTokenizer(vocab).token(word)
+
+
+def test_tokenizer_document_bos_eos():
+    tok = HashWordTokenizer(1000)
+    ids = tok.encode_document([["alpha", "beta"], ["gamma"]])
+    assert ids[0] == 3 and ids[-1] == EOS and len(ids) == 5
+
+
+def test_corpus_controllable_stats():
+    docs = generate_corpus(50, seed=0, sent_len_lo=10, sent_len_hi=12)
+    s = corpus_stats(docs)
+    assert 9 <= s["mean_sentence_length"] <= 13
+    docs2 = generate_corpus(50, seed=0, sent_len_lo=40, sent_len_hi=44)
+    assert corpus_stats(docs2)["mean_sentence_length"] > \
+        s["mean_sentence_length"] * 2
+
+
+def test_clm_batches_shift():
+    stream = np.arange(100, dtype=np.int32)
+    bs = clm_batches(stream, batch=2, seq=8)
+    b = bs[0]
+    np.testing.assert_array_equal(b["targets"][:, :-1], b["tokens"][:, 1:])
+    assert b["tokens"].shape == (2, 8)
+    assert b["loss_mask"].sum() == 16
+
+
+def test_mlm_masking_statistics():
+    rng = np.random.default_rng(0)
+    stream = rng.integers(N_SPECIALS, 1000, 40000).astype(np.int32)
+    bs = mlm_batches(stream, batch=4, seq=128, vocab=1000, mask_rate=0.15)
+    sel = np.concatenate([b["loss_mask"] for b in bs]).ravel()
+    assert 0.12 < sel.mean() < 0.18                 # ~15% positions masked
+    b = bs[0]
+    masked = b["loss_mask"] > 0
+    # 80% of masked positions are [MASK]
+    frac_mask_tok = (b["tokens"][masked] == MASK).mean()
+    assert 0.65 < frac_mask_tok < 0.95
+    # unmasked positions untouched
+    np.testing.assert_array_equal(b["tokens"][~masked], b["targets"][~masked])
+
+
+def test_shard_batches_respects_objective():
+    docs = generate_corpus(10, seed=1)
+    mlm_cfg = get_config("distilbert-mlm").reduced()
+    clm_cfg = get_config("phi4-mini-3.8b").reduced()
+    mb = shard_batches(docs, mlm_cfg, batch=2, seq=32)[0]
+    cb = shard_batches(docs, clm_cfg, batch=2, seq=32)[0]
+    assert mb["loss_mask"].mean() < 0.5             # only masked positions
+    assert cb["loss_mask"].mean() == 1.0            # all positions
+
+
+def test_small_shard_cycles():
+    docs = generate_corpus(1, seed=2, sentences_per_doc=2)
+    bs = shard_batches(docs, get_config("phi4-mini-3.8b").reduced(),
+                       batch=4, seq=64)
+    assert len(bs) >= 1                             # tiling fallback

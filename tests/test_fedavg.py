@@ -1,0 +1,60 @@
+"""FedAvg aggregation properties."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.fedavg import broadcast_clients, fedavg, fedavg_stacked
+
+
+def _tree(rng, scale=1.0):
+    return {"a": jnp.asarray(rng.normal(0, scale, (3, 4)), jnp.float32),
+            "b": {"c": jnp.asarray(rng.normal(0, scale, (5,)), jnp.float32)}}
+
+
+@settings(max_examples=25, deadline=None)
+@given(sizes=st.lists(st.integers(1, 1000), min_size=1, max_size=6),
+       seed=st.integers(0, 100))
+def test_fedavg_matches_numpy(sizes, seed):
+    rng = np.random.default_rng(seed)
+    trees = [_tree(rng) for _ in sizes]
+    w = np.asarray(sizes, np.float64)
+    w = w / w.sum()
+    got = fedavg(trees, sizes)
+    for path in (("a",), ("b", "c")):
+        leaves = [t[path[0]] if len(path) == 1 else t[path[0]][path[1]]
+                  for t in trees]
+        want = sum(wk * np.asarray(l, np.float64) for wk, l in zip(w, leaves))
+        g = got[path[0]] if len(path) == 1 else got[path[0]][path[1]]
+        np.testing.assert_allclose(np.asarray(g), want, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(k=st.integers(1, 6), seed=st.integers(0, 100))
+def test_stacked_equals_list(k, seed):
+    rng = np.random.default_rng(seed)
+    trees = [_tree(rng) for _ in range(k)]
+    sizes = list(rng.integers(1, 50, k))
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+    a = fedavg(trees, sizes)
+    b = fedavg_stacked(stacked, sizes)
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_identity_and_idempotence():
+    rng = np.random.default_rng(0)
+    t = _tree(rng)
+    same = fedavg([t, t, t], [1, 2, 3])      # identical clients -> unchanged
+    for x, y in zip(jax.tree.leaves(t), jax.tree.leaves(same)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), rtol=1e-6)
+
+
+def test_broadcast_clients_shape():
+    rng = np.random.default_rng(0)
+    t = _tree(rng)
+    s = broadcast_clients(t, 4)
+    assert s["a"].shape == (4, 3, 4)
+    np.testing.assert_array_equal(np.asarray(s["a"][2]), np.asarray(t["a"]))

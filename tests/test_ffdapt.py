@@ -1,0 +1,168 @@
+"""FFDAPT Algorithm-1 properties + freeze execution semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import optim
+from repro.configs import get_config
+from repro.core import ffdapt
+from repro.models.model import init_model, n_freeze_units
+from repro.models.steps import make_masked_train_step, make_train_step
+from repro.nn import param as P
+from repro.nn.stack import freeze_window_mask, mask_segments
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# schedule properties (hypothesis)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(n_layers=st.integers(2, 64),
+       sizes=st.lists(st.integers(1, 500), min_size=1, max_size=8),
+       rounds=st.integers(1, 10),
+       gamma=st.floats(0.25, 3.0))
+def test_schedule_invariants(n_layers, sizes, rounds, gamma):
+    sched = ffdapt.schedule(n_layers, sizes, rounds, gamma=gamma)
+    assert len(sched) == rounds
+    eps = n_layers - 1
+    ptr = 0
+    for rnd in sched:
+        assert len(rnd) == len(sizes)
+        for (start, nf) in rnd:
+            assert 0 <= nf <= eps          # never freezes everything
+            assert 0 <= start < n_layers
+            assert start == ptr            # rotation is consecutive
+            ptr = (ptr + nf) % n_layers
+
+
+@settings(max_examples=40, deadline=None)
+@given(n=st.integers(1, 40), start=st.integers(0, 80), nf=st.integers(0, 80))
+def test_window_mask_wrap(n, start, nf):
+    mask = freeze_window_mask(n, (start, nf))
+    assert len(mask) == n
+    assert sum(mask) == min(nf, n)
+    # frozen set must equal {(start+i) % n}
+    want = {(start + i) % n for i in range(min(nf, n))}
+    assert {i for i, f in enumerate(mask) if f} == want
+
+
+@settings(max_examples=40, deadline=None)
+@given(mask=st.lists(st.booleans(), min_size=1, max_size=30))
+def test_mask_segments_partition(mask):
+    segs = mask_segments(tuple(mask))
+    # segments tile [0, n) in order with alternating flags
+    assert segs[0][0] == 0 and segs[-1][1] == len(mask)
+    for (l1, h1, f1), (l2, h2, f2) in zip(segs, segs[1:]):
+        assert h1 == l2 and f1 != f2
+    for lo, hi, f in segs:
+        assert all(mask[i] == f for i in range(lo, hi))
+
+
+def test_client_window_size_formula():
+    # N_k = min(eps, ceil(n_k/n * N) * gamma)
+    assert ffdapt.client_window_size(50, 100, 6, epsilon=5, gamma=1.0) == 3
+    assert ffdapt.client_window_size(50, 100, 6, epsilon=2, gamma=1.0) == 2
+    assert ffdapt.client_window_size(10, 100, 6, epsilon=5, gamma=2.0) == 2
+    assert ffdapt.client_window_size(1, 1000, 6, epsilon=5, gamma=1.0) == 1
+
+
+def test_backward_flop_saving_range():
+    s = ffdapt.backward_flop_saving(6, [(0, 3), (3, 3)])
+    assert 0.0 < s < 0.5
+    assert ffdapt.backward_flop_saving(6, [(0, 0)]) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# execution semantics
+# ---------------------------------------------------------------------------
+
+def _setup(arch="phi4-mini-3.8b", n_layers=4):
+    cfg = get_config(arch).reduced().replace(n_layers=n_layers)
+    params = P.unbox(init_model(KEY, cfg))
+    opt = optim.adam(1e-3)
+    opt_state = P.unbox(opt.init(params))
+    rng = np.random.default_rng(0)
+    B, S = 2, 12
+    batch = {
+        "tokens": jnp.asarray(rng.integers(5, cfg.vocab_size, (B, S)), jnp.int32),
+        "targets": jnp.asarray(rng.integers(5, cfg.vocab_size, (B, S)), jnp.int32),
+        "loss_mask": jnp.ones((B, S), jnp.float32),
+    }
+    return cfg, params, opt, opt_state, batch
+
+
+@pytest.mark.parametrize("frozen", [
+    (True, False, False, False),
+    (False, True, True, False),
+    (True, False, False, True),       # wrap window
+])
+def test_static_freeze_untouched(frozen):
+    """Frozen layers: params AND Adam moments bit-identical after a step."""
+    cfg, params, opt, opt_state, batch = _setup()
+    step = jax.jit(make_train_step(cfg, opt, frozen=frozen))
+    p1, o1, m = step(params, opt_state, batch)
+    for name in ("wq", "wo"):
+        d_p = np.asarray(jnp.abs(
+            p1["layers"]["attn"][name] - params["layers"]["attn"][name]
+        ).sum(axis=tuple(range(1, p1["layers"]["attn"][name].ndim))))
+        d_m = np.asarray(jnp.abs(o1["m"]["layers"]["attn"][name]).sum(
+            axis=tuple(range(1, p1["layers"]["attn"][name].ndim))))
+        for i, f in enumerate(frozen):
+            if f:
+                assert d_p[i] == 0.0, f"layer {i} param moved"
+                assert d_m[i] == 0.0, f"layer {i} moment moved"
+            else:
+                assert d_p[i] > 0.0, f"layer {i} param frozen unexpectedly"
+
+
+def test_static_equals_masked():
+    """Static (stop_gradient segments) and masked (traced mask) FFDAPT modes
+    produce the same params/opt-state up to fp reassociation."""
+    cfg, params, opt, opt_state, batch = _setup()
+    frozen = (False, True, True, False)
+    static = jax.jit(make_train_step(cfg, opt, frozen=frozen))
+    masked = jax.jit(make_masked_train_step(cfg, opt))
+    p_s, o_s, _ = static(params, opt_state, batch)
+    p_m, o_m, _ = masked(params, opt_state, batch,
+                         jnp.asarray(frozen, jnp.float32))
+    for a, b in zip(jax.tree.leaves(p_s), jax.tree.leaves(p_m)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_freeze_units_per_family():
+    assert n_freeze_units(get_config("qwen2-7b")) == 28
+    assert n_freeze_units(get_config("llama-3.2-vision-90b")) == 20  # groups
+    assert n_freeze_units(get_config("whisper-tiny")) == 8           # enc+dec
+    assert n_freeze_units(get_config("zamba2-1.2b")) == 38
+
+
+def test_audio_freeze_spans_encoder_and_decoder():
+    cfg = get_config("whisper-tiny").reduced()      # 2 enc + 2 dec units
+    params = P.unbox(init_model(KEY, cfg))
+    opt = optim.adam(1e-3)
+    opt_state = P.unbox(opt.init(params))
+    rng = np.random.default_rng(0)
+    B, S = 2, 8
+    batch = {
+        "tokens": jnp.asarray(rng.integers(5, cfg.vocab_size, (B, S)), jnp.int32),
+        "targets": jnp.asarray(rng.integers(5, cfg.vocab_size, (B, S)), jnp.int32),
+        "loss_mask": jnp.ones((B, S), jnp.float32),
+        "frames": jnp.asarray(rng.normal(0, .1, (B, cfg.n_audio_frames,
+                                                 cfg.d_model)), jnp.float32),
+    }
+    frozen = (False, True, True, False)     # enc layer 1 + dec layer 0
+    step = jax.jit(make_train_step(cfg, opt, frozen=frozen))
+    p1, _, _ = step(params, opt_state, batch)
+    enc_d = np.asarray(jnp.abs(p1["enc_layers"]["attn"]["wq"]
+                               - params["enc_layers"]["attn"]["wq"]).sum((1, 2, 3)))
+    dec_d = np.asarray(jnp.abs(p1["layers"]["attn"]["wq"]
+                               - params["layers"]["attn"]["wq"]).sum((1, 2, 3)))
+    assert enc_d[0] > 0 and enc_d[1] == 0
+    assert dec_d[0] == 0 and dec_d[1] > 0

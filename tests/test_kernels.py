@@ -1,0 +1,264 @@
+"""Per-kernel correctness: Pallas (interpret mode) vs pure-jnp oracles,
+swept over shapes and dtypes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,T,H,Kv,D", [
+    (1, 8, 8, 2, 2, 8),          # MHA tiny
+    (2, 37, 37, 8, 4, 16),       # GQA, non-aligned seq (padding path)
+    (1, 64, 64, 4, 1, 32),       # MQA
+    (2, 16, 48, 4, 4, 8),        # cross-length (decode-ish kv longer)
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_shapes(B, S, T, H, Kv, D, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, H, D), dtype)
+    k = jax.random.normal(ks[1], (B, T, Kv, D), dtype)
+    v = jax.random.normal(ks[2], (B, T, Kv, D), dtype)
+    causal = S == T
+    want = ref.attention(q, k, v, causal=causal)
+    got = ops.flash_attention(q, k, v, causal=causal, block_q=16, block_k=16)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("window", [4, 16, 31])
+def test_flash_attention_window(window):
+    ks = jax.random.split(KEY, 3)
+    B, S, H, Kv, D = 2, 33, 4, 2, 8
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, Kv, D))
+    v = jax.random.normal(ks[2], (B, S, Kv, D))
+    want = ref.attention(q, k, v, causal=True, window=window)
+    got = ops.flash_attention(q, k, v, causal=True, window=window,
+                              block_q=16, block_k=16)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_softcap():
+    ks = jax.random.split(KEY, 3)
+    B, S, H, D = 1, 24, 2, 8
+    q = jax.random.normal(ks[0], (B, S, H, D)) * 3
+    k = jax.random.normal(ks[1], (B, S, H, D)) * 3
+    v = jax.random.normal(ks[2], (B, S, H, D))
+    want = ref.attention(q, k, v, causal=True, softcap=20.0)
+    got = ops.flash_attention(q, k, v, causal=True, softcap=20.0,
+                              block_q=8, block_k=8)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# rwkv6 scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,T,H,D,chunk", [
+    (1, 8, 1, 4, 4),
+    (2, 19, 3, 8, 8),            # padding path (19 % 8 != 0)
+    (1, 64, 2, 16, 32),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rwkv6_scan(B, T, H, D, chunk, dtype):
+    ks = jax.random.split(KEY, 6)
+    r = jax.random.normal(ks[0], (B, T, H, D), dtype)
+    k = jax.random.normal(ks[1], (B, T, H, D), dtype)
+    v = jax.random.normal(ks[2], (B, T, H, D), dtype)
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, T, H, D))).astype(dtype)
+    u = jax.random.normal(ks[4], (H, D), dtype)
+    s0 = jax.random.normal(ks[5], (B, H, D, D), jnp.float32)
+    y_ref, s_ref = ref.rwkv6_scan(r, k, v, w, u, s0)
+    y, s = ops.rwkv6_scan(r, k, v, w, u, s0, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32), **_tol(dtype))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_rwkv6_state_chaining():
+    """Scanning [0:T1] then [T1:T] with carried state == scanning [0:T]."""
+    ks = jax.random.split(KEY, 6)
+    B, T, H, D = 1, 24, 2, 8
+    r, k, v = (jax.random.normal(ks[i], (B, T, H, D)) for i in range(3))
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, T, H, D)))
+    u = jax.random.normal(ks[4], (H, D))
+    s0 = jnp.zeros((B, H, D, D))
+    y_full, s_full = ref.rwkv6_scan(r, k, v, w, u, s0)
+    y1, s1 = ops.rwkv6_scan(r[:, :10], k[:, :10], v[:, :10], w[:, :10], u, s0,
+                            chunk=4)
+    y2, s2 = ops.rwkv6_scan(r[:, 10:], k[:, 10:], v[:, 10:], w[:, 10:], u, s1,
+                            chunk=8)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_full), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s_full),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# mamba2 scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,T,H,P,N,chunk", [
+    (1, 8, 1, 4, 4, 4),
+    (2, 13, 3, 4, 5, 4),         # padding path
+    (1, 32, 4, 8, 16, 16),
+])
+def test_mamba2_scan(B, T, H, P, N, chunk):
+    ks = jax.random.split(KEY, 6)
+    x = jax.random.normal(ks[0], (B, T, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, T, H)))
+    a_log = jax.random.normal(ks[2], (H,)) * 0.1
+    b = jax.random.normal(ks[3], (B, T, N))
+    c = jax.random.normal(ks[4], (B, T, N))
+    h0 = jax.random.normal(ks[5], (B, H, P, N))
+    y_ref, h_ref = ref.mamba2_scan(x, dt, a_log, b, c, h0)
+    y, h = ops.mamba2_scan(x, dt, a_log, b, c, h0, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_mamba2_state_chaining():
+    ks = jax.random.split(KEY, 6)
+    B, T, H, P, N = 1, 20, 2, 4, 8
+    x = jax.random.normal(ks[0], (B, T, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, T, H)))
+    a_log = jax.random.normal(ks[2], (H,)) * 0.1
+    b = jax.random.normal(ks[3], (B, T, N))
+    c = jax.random.normal(ks[4], (B, T, N))
+    h0 = jnp.zeros((B, H, P, N))
+    y_full, h_full = ref.mamba2_scan(x, dt, a_log, b, c, h0)
+    _, h1 = ops.mamba2_scan(x[:, :7], dt[:, :7], a_log, b[:, :7], c[:, :7],
+                            h0, chunk=4)
+    y2, h2 = ops.mamba2_scan(x[:, 7:], dt[:, 7:], a_log, b[:, 7:], c[:, 7:],
+                             h1, chunk=8)
+    np.testing.assert_allclose(np.asarray(y2), np.asarray(y_full[:, 7:]),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h2), np.asarray(h_full),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# moe grouped matmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("E,C,d,f", [
+    (2, 8, 16, 16),
+    (3, 10, 16, 24),             # padding path
+    (8, 32, 32, 8),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_moe_ffn(E, C, d, f, dtype):
+    ks = jax.random.split(KEY, 4)
+    xe = jax.random.normal(ks[0], (E, C, d), dtype)
+    wg = (jax.random.normal(ks[1], (E, d, f)) * 0.1).astype(dtype)
+    wu = (jax.random.normal(ks[2], (E, d, f)) * 0.1).astype(dtype)
+    wo = (jax.random.normal(ks[3], (E, f, d)) * 0.1).astype(dtype)
+    want = ref.moe_ffn(xe, wg, wu, wo)
+    got = ops.moe_ffn(xe, wg, wu, wo, block_c=8, block_f=8)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+# ---------------------------------------------------------------------------
+# chunked SSD (beyond-paper §Perf path) vs sequential oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,T,H,P,N,chunk", [
+    (1, 16, 1, 4, 4, 8),
+    (2, 50, 3, 4, 5, 16),        # padding path (50 % 16 != 0)
+    (1, 128, 4, 8, 16, 64),
+    (2, 30, 2, 4, 8, 64),        # chunk > T
+])
+def test_mamba2_chunked_matches_sequential(B, T, H, P, N, chunk):
+    ks = jax.random.split(KEY, 6)
+    x = jax.random.normal(ks[0], (B, T, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, T, H)))
+    a_log = jax.random.normal(ks[2], (H,)) * 0.1
+    b = jax.random.normal(ks[3], (B, T, N))
+    c = jax.random.normal(ks[4], (B, T, N))
+    h0 = jax.random.normal(ks[5], (B, H, P, N))
+    y_ref, h_ref = ref.mamba2_scan(x, dt, a_log, b, c, h0)
+    y, h = ref.mamba2_scan_chunked(x, dt, a_log, b, c, h0, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_mamba2_chunked_bf16_tolerance():
+    """The bf16 pairwise path (the §Perf memory fix) stays within ~2%."""
+    ks = jax.random.split(KEY, 6)
+    B, T, H, P, N = 2, 64, 2, 4, 8
+    x = jax.random.normal(ks[0], (B, T, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, T, H)))
+    a_log = jax.random.normal(ks[2], (H,)) * 0.1
+    b = jax.random.normal(ks[3], (B, T, N))
+    c = jax.random.normal(ks[4], (B, T, N))
+    h0 = jnp.zeros((B, H, P, N))
+    y_ref, _ = ref.mamba2_scan(x, dt, a_log, b, c, h0)
+    y, _ = ref.mamba2_scan_chunked(
+        x.astype(jnp.bfloat16), dt.astype(jnp.bfloat16), a_log,
+        b.astype(jnp.bfloat16), c.astype(jnp.bfloat16), h0, chunk=32)
+    rel = float(jnp.max(jnp.abs(y.astype(jnp.float32) - y_ref))
+                / jnp.max(jnp.abs(y_ref)))
+    assert rel < 0.02
+
+
+# ---------------------------------------------------------------------------
+# chunked WKV (beyond-paper §Perf path) vs sequential oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,T,H,D,chunk", [
+    (1, 16, 1, 4, 8),
+    (2, 50, 3, 8, 16),           # padding path
+    (1, 40, 2, 8, 64),           # chunk > T
+])
+def test_rwkv6_chunked_matches_sequential(B, T, H, D, chunk):
+    ks = jax.random.split(KEY, 6)
+    r, k, v = (jax.random.normal(ks[i], (B, T, H, D)) for i in range(3))
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, T, H, D)))
+    u = jax.random.normal(ks[4], (H, D))
+    s0 = jax.random.normal(ks[5], (B, H, D, D))
+    y_ref, s_ref = ref.rwkv6_scan(r, k, v, w, u, s0)
+    y, s = ref.rwkv6_scan_chunked(r, k, v, w, u, s0, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_rwkv6_chunked_extreme_decay():
+    """Channels with near-total per-step decay (w ~ e^-12) — the regime that
+    corrupts a factorized form — must stay oracle-exact."""
+    ks = jax.random.split(KEY, 6)
+    B, T, H, D = 2, 48, 2, 8
+    r, k, v = (jax.random.normal(ks[i], (B, T, H, D)) for i in range(3))
+    wlog = jax.random.normal(ks[3], (B, T, H, D)) + 0.5
+    w = jnp.exp(-jnp.exp(wlog))                  # harsh data-dependent decay
+    u = jax.random.normal(ks[4], (H, D))
+    s0 = jax.random.normal(ks[5], (B, H, D, D))
+    y_ref, s_ref = ref.rwkv6_scan(r, k, v, w, u, s0)
+    y, s = ref.rwkv6_scan_chunked(r, k, v, w, u, s0, chunk=16)
+    rel = float(jnp.max(jnp.abs(y - y_ref)) / jnp.max(jnp.abs(y_ref)))
+    assert rel < 1e-4
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref),
+                               rtol=1e-4, atol=1e-4)

@@ -1,0 +1,109 @@
+"""MoE routing/dispatch invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.nn.moe import (apply_moe, dispatch_indices, expert_capacity,
+                          load_balance_loss, route_topk)
+from repro.nn.param import ParamCtx, unbox
+from repro.nn import moe as moe_mod
+
+KEY = jax.random.PRNGKey(0)
+
+
+@settings(max_examples=30, deadline=None)
+@given(T=st.integers(1, 200), E=st.integers(2, 64), k=st.integers(1, 8),
+       cf=st.floats(0.5, 4.0))
+def test_capacity_bounds(T, E, k, cf):
+    k = min(k, E)
+    C = expert_capacity(T, E, k, cf)
+    assert C >= 8 and C % 8 == 0
+    assert C >= np.ceil(T * k / E * cf)
+
+
+def test_route_topk_normalized():
+    logits = jax.random.normal(KEY, (10, 8))
+    gates, idx, probs = route_topk(logits, 3)
+    np.testing.assert_allclose(np.asarray(gates.sum(-1)), 1.0, rtol=1e-5)
+    assert int(idx.max()) < 8
+    # picks are distinct per token
+    for row in np.asarray(idx):
+        assert len(set(row.tolist())) == 3
+
+
+def test_dispatch_each_assignment_at_most_once():
+    idx = jax.random.randint(KEY, (40, 2), 0, 4)
+    C = expert_capacity(40, 4, 2, 2.0)
+    buf, gatep, valid = dispatch_indices(idx, C, 4)
+    idxn = np.asarray(idx)
+    pairs = set()
+    for e in range(4):
+        for c in range(C):
+            if bool(valid[e, c]):
+                t, p = int(buf[e, c]), int(gatep[e, c])
+                assert idxn[t, p] == e            # slot really routed here
+                assert (t, p) not in pairs        # no duplicates
+                pairs.add((t, p))
+
+
+def test_no_drop_capacity_routes_everything():
+    idx = jax.random.randint(KEY, (64, 2), 0, 4)
+    C = expert_capacity(64, 4, 2, 4.0)            # cf = E/k * 2 -> no drops
+    buf, gatep, valid = dispatch_indices(idx, C, 4)
+    assert int(valid.sum()) == 64 * 2
+
+
+def test_balanced_router_low_aux():
+    T, E = 512, 8
+    uniform = jnp.ones((T, E)) / E
+    idx = jnp.tile(jnp.arange(E), T // E * 2)[:T * 2].reshape(T, 2) % E
+    aux_u = load_balance_loss(uniform, idx, E)
+    # collapsed router: all mass on expert 0
+    collapsed = jnp.zeros((T, E)).at[:, 0].set(1.0)
+    idx0 = jnp.zeros((T, 2), jnp.int32)
+    aux_c = load_balance_loss(collapsed, idx0, E)
+    assert float(aux_c) > 2 * float(aux_u)
+
+
+def test_apply_moe_zero_router_is_mean_of_topk():
+    """With huge capacity and no drops, output is a convex combination of
+    expert outputs; sanity: finite, correct shape, aux finite."""
+    ctx = ParamCtx(KEY, jnp.float32)
+    p = unbox(moe_mod.init_moe(ctx, 16, 32, 4))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 6, 16))
+    y, aux = apply_moe(p, x, 2, capacity_factor=4.0)
+    assert y.shape == x.shape
+    assert bool(jnp.all(jnp.isfinite(y))) and bool(jnp.isfinite(aux))
+
+
+def test_moe_pallas_path_matches_xla():
+    ctx = ParamCtx(KEY, jnp.float32)
+    p = unbox(moe_mod.init_moe(ctx, 16, 32, 4))
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 8, 16))
+    y1, _ = apply_moe(p, x, 2, capacity_factor=4.0, impl="xla")
+    y2, _ = apply_moe(p, x, 2, capacity_factor=4.0, impl="pallas")
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_grouped_dispatch_matches_global_no_drops():
+    """Local dispatch (per-group capacity) == global dispatch when capacity
+    admits every assignment."""
+    ctx = ParamCtx(KEY, jnp.float32)
+    p = unbox(moe_mod.init_moe(ctx, 16, 32, 4))
+    x = jax.random.normal(jax.random.PRNGKey(3), (4, 8, 16))
+    y1, _ = apply_moe(p, x, 2, capacity_factor=4.0, groups=0)
+    y2, _ = apply_moe(p, x, 2, capacity_factor=4.0, groups=4)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_grouped_dispatch_falls_back_when_indivisible():
+    ctx = ParamCtx(KEY, jnp.float32)
+    p = unbox(moe_mod.init_moe(ctx, 16, 32, 4))
+    x = jax.random.normal(jax.random.PRNGKey(4), (3, 5, 16))   # 15 tokens
+    y, aux = apply_moe(p, x, 2, capacity_factor=4.0, groups=4)  # 15 % 4 != 0
+    assert y.shape == x.shape and bool(jnp.all(jnp.isfinite(y)))

@@ -1,0 +1,69 @@
+"""Non-IID partitioner properties (Eqs. 8-10) — hypothesis-driven."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data.corpus import generate_corpus
+from repro.data.partition import (client_stats_table, partition,
+                                  quantity_split_sizes)
+
+DOCS = generate_corpus(240, seed=7)
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(1, 5000), k=st.integers(1, 16))
+def test_quantity_sizes_eq8(n, k):
+    sizes = quantity_split_sizes(n, k)
+    assert sum(sizes) == n                      # conservation
+    assert len(sizes) == k
+    denom = k * (k + 1) // 2
+    for i, s in enumerate(sizes):               # within 1 of i/sum(j) * Q
+        assert abs(s - (i + 1) / denom * n) <= 1
+    assert sizes == sorted(sizes)               # monotone in client index
+
+
+@pytest.mark.parametrize("skew", ["iid", "quantity", "length", "vocab"])
+@pytest.mark.parametrize("k", [2, 8])
+def test_partition_conservation(skew, k):
+    shards = partition(DOCS, k, skew, seed=0)
+    assert len(shards) == k
+    ids = [id(d) for s in shards for d in s]
+    assert len(ids) == len(DOCS)                # every doc exactly once
+    assert len(set(ids)) == len(DOCS)
+
+
+@pytest.mark.parametrize("k", [2, 8])
+def test_skews_maximize_their_sigma(k):
+    t = {s: client_stats_table(partition(DOCS, k, s, seed=0))
+         for s in ("iid", "quantity", "length", "vocab")}
+    # each skew's target sigma must dominate iid's by a wide margin
+    assert t["quantity"]["quantity"]["sigma"] > 5 * max(
+        t["iid"]["quantity"]["sigma"], 1e-9)
+    assert t["length"]["mean_sentence_length"]["sigma"] > \
+        3 * t["iid"]["mean_sentence_length"]["sigma"]
+    assert t["vocab"]["unique_words"]["sigma"] > \
+        2.0 * t["iid"]["unique_words"]["sigma"]
+
+
+@pytest.mark.parametrize("k", [2, 8])
+def test_skews_pin_other_metrics(k):
+    """The paper's objective: maximise ONE sigma, keep others almost flat."""
+    t = {s: client_stats_table(partition(DOCS, k, s, seed=0))
+         for s in ("iid", "quantity", "length", "vocab")}
+    # length skew keeps quantity exactly flat
+    assert t["length"]["quantity"]["sigma"] <= 1.0
+    assert t["vocab"]["quantity"]["sigma"] <= 1.0
+    # vocab skew keeps sentence length close to iid levels
+    assert t["vocab"]["mean_sentence_length"]["sigma"] < \
+        0.35 * t["length"]["mean_sentence_length"]["sigma"]
+    # quantity skew keeps per-document vocabulary flat (Table 3 analogue)
+    assert t["quantity"]["doc_vocab"]["sigma"] < \
+        3 * max(t["iid"]["doc_vocab"]["sigma"], 1.0)
+
+
+def test_partition_deterministic():
+    a = partition(DOCS, 4, "vocab", seed=3)
+    b = partition(DOCS, 4, "vocab", seed=3)
+    assert all([id(x) for x in sa] == [id(y) for y in sb]
+               for sa, sb in zip(a, b))

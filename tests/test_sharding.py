@@ -1,0 +1,89 @@
+"""Sharding-rule resolution: divisibility fallbacks, axis-reuse protection,
+per-arch spec sanity.  Uses a small host mesh (1 device is fine: rules are
+pure functions of mesh SHAPE, so we build abstract meshes)."""
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec
+
+from repro.nn import param as P
+from repro.sharding.rules import (DECODE_RULES, DEFAULT_RULES, FED_RULES,
+                                  LONG_CONTEXT_RULES, OPT_RULES,
+                                  logical_to_spec, spec_bytes_per_device)
+
+
+def _ent(spec, i):
+    """PartitionSpec trims trailing Nones; index safely."""
+    return spec[i] if i < len(spec) else None
+
+
+def _mesh(shape, axes):
+    devs = np.asarray(jax.devices() * int(np.prod(shape)))[:int(np.prod(shape))]
+    return Mesh(devs.reshape(shape), axes)
+
+
+MESH = _mesh((16, 16), ("data", "model"))
+POD = _mesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def test_divisible_dims_shard():
+    spec = logical_to_spec((P.EMBED, P.FFN), (4096, 16384), MESH)
+    assert spec == PartitionSpec("data", "model")
+
+
+def test_indivisible_falls_back_to_replicated():
+    # qwen2: 28 heads on a 16-way model axis
+    spec = logical_to_spec((P.EMBED, P.HEADS, P.HEAD_DIM), (3584, 28, 128), MESH)
+    assert _ent(spec, 1) is None             # heads replicated
+    assert _ent(spec, 0) == "data"
+
+
+def test_no_axis_reuse_within_tensor():
+    # batch takes ("pod","data"); embed must not reuse data
+    spec = logical_to_spec((P.BATCH, P.SEQ, P.EMBED), (256, 4096, 4096), POD)
+    assert spec[0] == ("pod", "data")
+    flat = []
+    for s in spec:
+        if s is None:
+            continue
+        flat.extend(s if isinstance(s, tuple) else (s,))
+    assert len(flat) == len(set(flat))
+
+
+def test_batch_takes_pod_and_data_multipod():
+    spec = logical_to_spec((P.BATCH, P.SEQ), (256, 4096), POD)
+    assert spec[0] == ("pod", "data")
+
+
+def test_decode_rules_shard_cache_seq():
+    spec = logical_to_spec((P.LAYERS, P.BATCH, P.SEQ, P.KV_HEADS, P.HEAD_DIM),
+                           (40, 128, 32768, 8, 128), MESH, DECODE_RULES)
+    assert _ent(spec, 1) == "data" and _ent(spec, 2) == "model"
+    assert _ent(spec, 3) is None             # 8 kv heads can't take model
+
+
+def test_long_context_rules_shard_seq_both_axes():
+    spec = logical_to_spec((P.LAYERS, P.BATCH, P.SEQ, P.KV_HEADS, P.HEAD_DIM),
+                           (28, 1, 8192, 4, 128), MESH, LONG_CONTEXT_RULES)
+    assert spec[2] == ("data", "model")
+
+
+def test_fed_rules_pin_client_to_pod():
+    spec = logical_to_spec((P.CLIENT, P.EMBED), (2, 4096), POD, FED_RULES)
+    assert spec[0] == "pod"
+
+
+def test_opt_rules_context_parallel_attention():
+    spec = logical_to_spec((P.BATCH, P.ATTN_SEQ, P.HEADS, P.HEAD_DIM),
+                           (256, 4096, 28, 128), MESH, OPT_RULES)
+    assert spec[1] == "model"                # seq takes model when heads can't
+    base = logical_to_spec((P.BATCH, P.ATTN_SEQ, P.HEADS, P.HEAD_DIM),
+                           (256, 4096, 28, 128), MESH, DEFAULT_RULES)
+    assert _ent(base, 1) is None
+
+
+def test_spec_bytes_per_device():
+    spec = PartitionSpec("data", "model")
+    b = spec_bytes_per_device((4096, 16384), np.float32, spec, MESH)
+    assert b == 4096 * 16384 * 4 // 256

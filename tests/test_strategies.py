@@ -1,0 +1,101 @@
+"""Beyond-paper federated strategies: FedAvgM, FedProx, upload compression."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.configs import get_config
+from repro.core import strategies as S
+from repro.core.fedavg import fedavg
+from repro.models.model import init_model
+from repro.nn import param as P
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _trees(k=3, seed=0):
+    rng = np.random.default_rng(seed)
+    return [{"w": jnp.asarray(rng.normal(0, 1, (6,)), jnp.float32)}
+            for _ in range(k)]
+
+
+def test_fedavgm_zero_beta_is_fedavg():
+    g = _trees(1)[0]
+    clients = _trees(3, 1)
+    new, st = S.fedavgm_update(g, clients, [1, 1, 1], S.ServerState(),
+                               beta=0.0, lr=1.0)
+    want = fedavg(clients, [1, 1, 1])
+    np.testing.assert_allclose(np.asarray(new["w"]), np.asarray(want["w"]),
+                               rtol=1e-6)
+
+
+def test_fedavgm_momentum_accumulates():
+    g = {"w": jnp.zeros((4,))}
+    clients = [{"w": jnp.ones((4,))}]
+    st = S.ServerState()
+    new1, st = S.fedavgm_update(g, clients, [1], st, beta=0.9)
+    new2, st = S.fedavgm_update(new1, [{"w": new1["w"] + 1.0}], [1], st,
+                                beta=0.9)
+    # second step's momentum includes 0.9 * first delta
+    assert float(new2["w"][0] - new1["w"][0]) > 1.0
+
+
+def test_quantize8_roundtrip_error_bounded():
+    rng = np.random.default_rng(0)
+    d = {"w": jnp.asarray(rng.normal(0, 1, (256,)), jnp.float32)}
+    dq, nbytes = S.quantize8(d)
+    err = float(jnp.max(jnp.abs(dq["w"] - d["w"])))
+    scale = float(jnp.max(jnp.abs(d["w"]))) / 127
+    assert err <= scale * 0.51 + 1e-7
+    assert nbytes == 256 + 4                     # 1B/entry + scale
+    assert nbytes < S.dense_bytes(d)
+
+
+def test_topk_keeps_largest():
+    d = {"w": jnp.asarray([0.1, -5.0, 0.2, 3.0, -0.05, 0.0], jnp.float32)}
+    sp, nbytes = S.topk_sparsify(d, frac=0.34)    # keep 2 of 6
+    w = np.asarray(sp["w"])
+    assert w[1] == -5.0 and w[3] == 3.0
+    assert np.count_nonzero(w) == 2
+    assert nbytes == 2 * 8
+
+
+def test_compressed_fedavg_identity_compressor():
+    rng = np.random.default_rng(2)
+    g = {"w": jnp.asarray(rng.normal(0, 1, (512,)), jnp.float32)}
+    clients = [{"w": jnp.asarray(rng.normal(0, 1, (512,)), jnp.float32)}
+               for _ in range(2)]
+    a, b_dense = S.compressed_fedavg(g, clients, [1, 2])
+    want = fedavg(clients, [1, 2])
+    np.testing.assert_allclose(np.asarray(a["w"]), np.asarray(want["w"]),
+                               rtol=1e-5, atol=1e-6)
+    a8, b_q = S.compressed_fedavg(g, clients, [1, 2], compressor=S.quantize8)
+    assert b_q < b_dense / 3                      # ~4x smaller upload
+    np.testing.assert_allclose(np.asarray(a8["w"]), np.asarray(want["w"]),
+                               atol=0.06)
+
+
+def test_fedprox_step_pulls_toward_anchor():
+    cfg = get_config("distilbert-mlm").reduced().replace(n_layers=2)
+    params = P.unbox(init_model(KEY, cfg))
+    anchor = params
+    opt = optim.sgd(1e-2)
+    # huge mu and a zero-information batch: the prox term dominates, so a
+    # step from a perturbed point must move BACK toward the anchor
+    step = jax.jit(S.make_fedprox_step(cfg, opt, mu=100.0, clip_norm=0.0))
+    rng = np.random.default_rng(0)
+    B, Sq = 2, 8
+    batch = {
+        "tokens": jnp.asarray(rng.integers(5, cfg.vocab_size, (B, Sq)), jnp.int32),
+        "targets": jnp.asarray(rng.integers(5, cfg.vocab_size, (B, Sq)), jnp.int32),
+        "loss_mask": jnp.ones((B, Sq), jnp.float32),
+    }
+    perturbed = jax.tree.map(lambda p: p + 0.1, params)
+    o = P.unbox(opt.init(perturbed))
+    d_before = float(S.proximal_penalty(perturbed, anchor))
+    p1, _, m = step(perturbed, o, anchor, batch)
+    d_after = float(S.proximal_penalty(p1, anchor))
+    assert d_after < d_before
+    assert float(m["prox"]) > 0

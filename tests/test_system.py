@@ -1,0 +1,201 @@
+"""End-to-end behaviour: the paper's pipeline on the paper's own backbone —
+centralized vs FDAPT (IID + skews) vs FFDAPT, plus the sharded lowering path
+on the host mesh and the quickstart example."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.configs import get_config
+from repro.core.ffdapt import FFDAPTConfig
+from repro.core.noniid import make_client_datasets
+from repro.core.rounds import run_fdapt
+from repro.data.corpus import generate_corpus
+from repro.models.model import init_model
+from repro.models.steps import make_eval_step, make_train_step
+from repro.nn import param as P
+
+CFG = get_config("distilbert-mlm").reduced()
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    from repro.data.corpus import split_holdout
+    docs, held = split_holdout(generate_corpus(160, seed=0))
+    params = P.unbox(init_model(KEY, CFG))
+    eval_step = jax.jit(make_eval_step(CFG))
+    heldout = make_client_datasets(held, CFG, k=1,
+                                   batch=2, seq=32)["batches"][0][:3]
+
+    def eval_loss(p):
+        return float(np.mean([float(eval_step(p, b)["loss"]) for b in heldout]))
+
+    return docs, params, eval_loss
+
+
+@pytest.mark.slow
+def test_centralized_vs_fdapt_parity(setup):
+    """The paper's headline: FDAPT stays close to centralized, both beat the
+    original model — at smoke scale, measured in eval loss."""
+    docs, params, eval_loss = setup
+    init = eval_loss(params)
+
+    # centralized = 1 client, same total data/steps
+    cen = make_client_datasets(docs, CFG, k=1, batch=2, seq=32)
+    p_cen, _ = run_fdapt(CFG, optim.adam(5e-4), params,
+                         [cen["batches"][0][:8]], n_rounds=2)
+    l_cen = eval_loss(p_cen)
+
+    results = {}
+    for skew in ("iid", "quantity"):
+        ds = make_client_datasets(docs, CFG, k=2, skew=skew, batch=2, seq=32)
+        bs = [b[:4] for b in ds["batches"]]
+        p_fd, _ = run_fdapt(CFG, optim.adam(5e-4), params, bs, n_rounds=2,
+                            client_sizes=ds["sizes"])
+        results[skew] = eval_loss(p_fd)
+
+    assert l_cen < init
+    for skew, l in results.items():
+        assert l < init, f"{skew} did not beat the original model"
+        assert l < l_cen * 1.15, f"{skew} too far from centralized"
+
+
+@pytest.mark.slow
+def test_ffdapt_faster_and_close(setup):
+    """FFDAPT (static windows) must not diverge from FDAPT; backward-work
+    reduction is checked via the analytic ledger (CPU wall time is noisy)."""
+    docs, params, eval_loss = setup
+    ds = make_client_datasets(docs, CFG, k=2, skew="iid", batch=2, seq=32)
+    bs = [b[:4] for b in ds["batches"]]
+    p_fd, _ = run_fdapt(CFG, optim.adam(5e-4), params, bs, n_rounds=2,
+                        client_sizes=ds["sizes"])
+    p_ffd, hist = run_fdapt(CFG, optim.adam(5e-4), params, bs, n_rounds=2,
+                            client_sizes=ds["sizes"], ffdapt=FFDAPTConfig())
+    assert abs(eval_loss(p_ffd) - eval_loss(p_fd)) / eval_loss(p_fd) < 0.05
+    from repro.core.ffdapt import backward_flop_saving
+    for h in hist:
+        assert h.windows is not None
+        assert backward_flop_saving(CFG.n_layers, h.windows) > 0
+
+
+def test_sharded_lowering_on_host_mesh():
+    """The launch-layer path (rules -> shardings -> jit -> lower) works on the
+    local host mesh too, not only the 512-device dry-run process."""
+    from repro.launch.mesh import make_host_mesh
+    from repro.sharding.ctx import activation_sharding
+    from repro.sharding.rules import DEFAULT_RULES, tree_shardings
+
+    cfg = get_config("phi4-mini-3.8b").reduced()
+    mesh = make_host_mesh()
+    opt = optim.adam(1e-4)
+
+    def full(key):
+        p = init_model(key, cfg)
+        return p, opt.init(p)
+
+    pb, ob = jax.eval_shape(full, KEY)
+    psh = tree_shardings(pb, mesh, DEFAULT_RULES)
+    osh = tree_shardings(ob, mesh, DEFAULT_RULES)
+    B, S = 2, 8
+    batch = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+             "targets": jax.ShapeDtypeStruct((B, S), jnp.int32),
+             "loss_mask": jax.ShapeDtypeStruct((B, S), jnp.float32)}
+    step = make_train_step(cfg, opt)
+    with activation_sharding(mesh, DEFAULT_RULES):
+        lowered = jax.jit(step, in_shardings=(psh, osh, None)).lower(
+            P.unbox(pb), P.unbox(ob), batch)
+    compiled = lowered.compile()
+    assert compiled.cost_analysis() is not None
+
+
+def test_quickstart_example_runs():
+    import os
+    import subprocess
+    import sys
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ, PYTHONPATH=os.path.join(root, "src"))
+    r = subprocess.run([sys.executable, "examples/quickstart.py", "--fast"],
+                       capture_output=True, text=True, env=env, cwd=root)
+    assert r.returncode == 0, r.stderr[-2000:]
+
+
+def test_fed_round_program_lowers_on_host_mesh():
+    """The production federated-round program (clients x local-steps x FedAvg
+    in ONE jit) lowers on the host mesh; the dry-run exercises it at 512."""
+    from repro.core.rounds import make_fed_round_program
+    from repro.launch.mesh import make_host_mesh
+    from repro.models.model import n_freeze_units
+
+    cfg = get_config("distilbert-mlm").reduced()
+    opt = optim.adam(1e-4)
+    prog = make_fed_round_program(cfg, opt)
+    K, steps, B, S = 2, 2, 2, 16
+
+    def full(key):
+        p = init_model(key, cfg)
+        return p, opt.init(p)
+
+    pb, ob = jax.eval_shape(full, KEY)
+
+    def stack(t):
+        return jax.tree.map(lambda l: jax.ShapeDtypeStruct(
+            (K,) + l.shape, l.dtype), P.unbox(t))
+
+    batch = {k: jax.ShapeDtypeStruct((K, steps, B, S),
+                                     jnp.float32 if k == "loss_mask"
+                                     else jnp.int32)
+             for k in ("tokens", "targets", "loss_mask")}
+    fm = jax.ShapeDtypeStruct((K, n_freeze_units(cfg)), jnp.float32)
+    sz = jax.ShapeDtypeStruct((K,), jnp.float32)
+    compiled = jax.jit(prog).lower(stack(pb), stack(ob), batch, fm, sz).compile()
+    assert compiled.cost_analysis() is not None
+
+
+def test_fed_round_program_executes():
+    """Execute the fed-round program concretely: equals broadcast+average of
+    per-client masked steps."""
+    from repro.core.rounds import make_fed_round_program
+    from repro.core.fedavg import broadcast_clients
+    from repro.models.model import n_freeze_units
+
+    cfg = get_config("distilbert-mlm").reduced()
+    opt = optim.adam(1e-3)
+    prog = jax.jit(make_fed_round_program(cfg, opt))
+    K, steps, B, S = 2, 2, 2, 16
+    rng = np.random.default_rng(0)
+    params = P.unbox(init_model(KEY, cfg))
+    sp = broadcast_clients(params, K)
+    so = broadcast_clients(P.unbox(opt.init(params)), K)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(5, cfg.vocab_size,
+                                           (K, steps, B, S)), jnp.int32),
+        "targets": jnp.asarray(rng.integers(5, cfg.vocab_size,
+                                            (K, steps, B, S)), jnp.int32),
+        "loss_mask": jnp.ones((K, steps, B, S), jnp.float32),
+    }
+    fm = jnp.zeros((K, n_freeze_units(cfg)), jnp.float32)
+    sizes = jnp.asarray([1.0, 3.0], jnp.float32)
+    new_sp, losses = prog(sp, so, batch, fm, sizes)
+    assert losses.shape == (K,)
+    assert all(np.isfinite(float(l)) for l in losses)
+    # all clients hold the same aggregated model afterwards
+    for leaf in jax.tree.leaves(new_sp):
+        np.testing.assert_array_equal(np.asarray(leaf[0]), np.asarray(leaf[1]))
+
+
+def test_roofline_report_example_runs():
+    import os
+    import subprocess
+    import sys
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    artifacts = os.path.join(root, "benchmarks", "results", "dryrun")
+    if not os.path.isdir(artifacts) or not os.listdir(artifacts):
+        pytest.skip("no dry-run artifacts (run repro.launch.dryrun --all)")
+    env = dict(os.environ, PYTHONPATH=os.path.join(root, "src"))
+    r = subprocess.run([sys.executable, "examples/roofline_report.py"],
+                       capture_output=True, text=True, env=env, cwd=root)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "pairs lowered+compiled" in r.stdout

@@ -2,7 +2,12 @@
 
 Per-round client->server upload bytes vs held-out quality for:
   dense FedAvg | int8-quantized deltas | top-10% sparsified deltas
-plus FedAvgM (server momentum) as the "other strategies" axis.
+plus FedAvgM (server momentum) as the "other strategies" axis — every row is
+one ``FedSession`` with a different ``FederatedStrategy``, and the byte
+column comes straight from ``RoundResult.upload_bytes`` (exact, dtype- and
+tie-aware accounting).
+
+    PYTHONPATH=src python benchmarks/comm_efficiency.py [--engine parallel]
 """
 
 from __future__ import annotations
@@ -12,23 +17,23 @@ import numpy as np
 
 from repro import optim
 from repro.configs import get_config
-from repro.core import strategies as S
 from repro.core.noniid import make_client_datasets
+from repro.core.rounds import FedSession, RoundPlan
+from repro.core.strategy import Compressed, FedAvg, FedAvgM
 from repro.data.corpus import generate_corpus, split_holdout
 from repro.models.model import init_model
-from repro.models.steps import make_eval_step, make_train_step
+from repro.models.steps import make_eval_step
 from repro.nn import param as P
 
 
-def run(rounds: int = 3, steps: int = 4, seed: int = 0):
+def run(rounds: int = 3, steps: int = 4, seed: int = 0,
+        engine: str = "sequential"):
     cfg = get_config("distilbert-mlm").reduced()
     docs, held_docs = split_holdout(generate_corpus(160, seed=seed))
     ds = make_client_datasets(docs, cfg, k=2, skew="iid", batch=2, seq=32,
                               seed=seed)
     batches = [b[:steps] for b in ds["batches"]]
     params0 = P.unbox(init_model(jax.random.PRNGKey(seed), cfg))
-    opt = optim.adam(1e-3)
-    step = jax.jit(make_train_step(cfg, opt))
     eval_step = jax.jit(make_eval_step(cfg))
     held = make_client_datasets(held_docs, cfg, k=1, batch=4,
                                 seq=64)["batches"][0][:8]
@@ -36,42 +41,23 @@ def run(rounds: int = 3, steps: int = 4, seed: int = 0):
     def eval_loss(p):
         return float(np.mean([float(eval_step(p, b)["loss"]) for b in held]))
 
-    def local_epoch(gparams):
-        outs = []
-        for bs in batches:
-            p, o = gparams, P.unbox(opt.init(gparams))
-            for b in bs:
-                p, o, _ = step(p, o, b)
-            outs.append(p)
-        return outs
+    def fed_run(strategy):
+        plan = RoundPlan(n_rounds=rounds, engine=engine, strategy=strategy,
+                         client_sizes=ds["sizes"])
+        p, hist = FedSession(cfg, optim.adam(1e-3), plan).run(params0, batches)
+        return eval_loss(p), sum(h.upload_bytes for h in hist)
 
-    def fed_run(compressor=None, server="avg"):
-        g = params0
-        st = S.ServerState()
-        total_bytes = 0
-        for _ in range(rounds):
-            clients = local_epoch(g)
-            if server == "avgm":
-                g, st = S.fedavgm_update(g, clients, ds["sizes"], st, beta=0.9)
-                total_bytes += sum(S.dense_bytes(S.tree_delta(c, g))
-                                   for c in clients)
-            else:
-                g, nbytes = S.compressed_fedavg(g, clients, ds["sizes"],
-                                                compressor=compressor)
-                total_bytes += nbytes
-        return eval_loss(g), total_bytes
-
-    rows = [("fedavg_dense", *fed_run())]
-    rows.append(("fedavg_int8", *fed_run(compressor=S.quantize8)))
-    rows.append(("fedavg_top10pct",
-                 *fed_run(compressor=lambda d: S.topk_sparsify(d, 0.10))))
-    rows.append(("fedavgm_dense", *fed_run(server="avgm")))
+    rows = [("fedavg_dense", *fed_run(FedAvg()))]
+    rows.append(("fedavg_int8", *fed_run(Compressed(kind="int8"))))
+    rows.append(("fedavg_top10pct", *fed_run(Compressed(kind="topk",
+                                                        frac=0.10))))
+    rows.append(("fedavgm_dense", *fed_run(FedAvgM(beta=0.9))))
     rows.append(("no_training", eval_loss(params0), 0))
     return rows
 
 
-def main():
-    rows = run()
+def main(engine: str = "sequential"):
+    rows = run(engine=engine)
     base_bytes = rows[0][2]
     print("strategy,eval_loss,upload_MB,compression_x")
     for name, loss, nbytes in rows:
@@ -80,4 +66,8 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--engine", default="sequential",
+                    choices=("sequential", "parallel"))
+    main(engine=ap.parse_args().engine)

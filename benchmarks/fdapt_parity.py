@@ -19,7 +19,7 @@ from repro import optim
 from repro.configs import get_config
 from repro.core.ffdapt import FFDAPTConfig
 from repro.core.noniid import make_client_datasets
-from repro.core.rounds import run_fdapt
+from repro.core.rounds import FedSession
 from repro.data.corpus import generate_corpus
 from repro.models.model import init_model
 from repro.models.steps import make_eval_step
@@ -47,8 +47,8 @@ def run(quick: bool = True, seed: int = 0):
     lr = 1e-3
     rows = [("original", 0, "-", eval_loss(params0))]
     cen = make_client_datasets(docs, cfg, k=1, batch=2, seq=32)
-    p, _ = run_fdapt(cfg, optim.adam(lr), params0,
-                     [cen["batches"][0][:steps * 2]], n_rounds=rounds)
+    p, _ = FedSession(cfg, optim.adam(lr), n_rounds=rounds).run(
+        params0, [cen["batches"][0][:steps * 2]])
     rows.append(("centralized", 1, "-", eval_loss(p)))
 
     for k in clients:
@@ -57,9 +57,9 @@ def run(quick: bool = True, seed: int = 0):
                                       batch=2, seq=32, seed=seed)
             bs = [b[:steps] for b in ds["batches"]]
             for ffd, tag in ((None, "fdapt"), (FFDAPTConfig(), "ffdapt")):
-                p, _ = run_fdapt(cfg, optim.adam(lr), params0, bs,
-                                 n_rounds=rounds, client_sizes=ds["sizes"],
-                                 ffdapt=ffd)
+                p, _ = FedSession(cfg, optim.adam(lr), n_rounds=rounds,
+                                  client_sizes=ds["sizes"],
+                                  ffdapt=ffd).run(params0, bs)
                 rows.append((tag, k, skew, eval_loss(p)))
     return rows
 

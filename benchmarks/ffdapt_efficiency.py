@@ -24,7 +24,7 @@ from repro import optim
 from repro.configs import get_config
 from repro.core import ffdapt
 from repro.core.noniid import make_client_datasets
-from repro.core.rounds import run_fdapt
+from repro.core.rounds import FedSession
 from repro.data.corpus import generate_corpus
 from repro.models.model import init_model
 from repro.nn import param as P
@@ -59,9 +59,9 @@ def wall(reps: int = 3, rounds: int = 2, steps: int = 6, seed: int = 0):
     opt = optim.adam(5e-5)            # single instance -> step-cache hits
 
     def one(ffd):
-        _, hist = run_fdapt(cfg, opt, params, batches,
-                            n_rounds=rounds, client_sizes=ds["sizes"],
-                            ffdapt=ffd)
+        _, hist = FedSession(cfg, opt, n_rounds=rounds,
+                             client_sizes=ds["sizes"],
+                             ffdapt=ffd).run(params, batches)
         return [h.round_time_s for h in hist]
 
     one(None), one(ffdapt.FFDAPTConfig(gamma=1.0))       # compile warmup

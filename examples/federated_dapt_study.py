@@ -16,7 +16,7 @@ from repro import optim
 from repro.configs import get_config
 from repro.core.ffdapt import FFDAPTConfig
 from repro.core.noniid import make_client_datasets
-from repro.core.rounds import run_fdapt
+from repro.core.rounds import FedSession
 from repro.data.corpus import generate_corpus
 from repro.models.model import init_model
 from repro.models.steps import make_eval_step
@@ -46,8 +46,8 @@ def main():
     print(f"{'original (no DAPT)':34s} {eval_loss(params0):9.4f}")
 
     cen = make_client_datasets(docs, cfg, k=1, batch=2, seq=32)
-    p, _ = run_fdapt(cfg, optim.adam(5e-4), params0,
-                     [cen["batches"][0][:args.steps * 2]], n_rounds=args.rounds)
+    p, _ = FedSession(cfg, optim.adam(5e-4), n_rounds=args.rounds).run(
+        params0, [cen["batches"][0][:args.steps * 2]])
     print(f"{'centralized':34s} {eval_loss(p):9.4f}")
 
     for k in args.clients:
@@ -56,9 +56,10 @@ def main():
                                       batch=2, seq=32)
             bs = [b[:args.steps] for b in ds["batches"]]
             for ffd, tag in ((None, "FDAPT"), (FFDAPTConfig(), "FFDAPT")):
-                p, _ = run_fdapt(cfg, optim.adam(5e-4), params0, bs,
-                                 n_rounds=args.rounds,
-                                 client_sizes=ds["sizes"], ffdapt=ffd)
+                p, _ = FedSession(cfg, optim.adam(5e-4),
+                                  n_rounds=args.rounds,
+                                  client_sizes=ds["sizes"],
+                                  ffdapt=ffd).run(params0, bs)
                 name = f"{tag} {k}c {skew}"
                 print(f"{name:34s} {eval_loss(p):9.4f}")
 

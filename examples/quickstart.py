@@ -17,7 +17,7 @@ from repro import optim
 from repro.configs import get_config
 from repro.core.ffdapt import FFDAPTConfig
 from repro.core.noniid import make_client_datasets
-from repro.core.rounds import run_fdapt
+from repro.core.rounds import FedSession, RoundPlan
 from repro.data.corpus import generate_corpus
 from repro.models.model import init_model
 from repro.models.steps import make_eval_step
@@ -38,13 +38,13 @@ print("client sizes (Eq. 8):", ds["sizes"],
 
 # 3. FFDAPT: FedAvg rounds with the rotating layer-freeze schedule
 batches = [b[:2 if FAST else 6] for b in ds["batches"]]
-params, hist = run_fdapt(
-    cfg, optim.adam(5e-4), params, batches,
-    n_rounds=2 if FAST else 5, client_sizes=ds["sizes"],
-    ffdapt=FFDAPTConfig(gamma=1.0), engine="sequential")
+plan = RoundPlan(n_rounds=2 if FAST else 5, engine="sequential",
+                 client_sizes=ds["sizes"], ffdapt=FFDAPTConfig(gamma=1.0))
+params, hist = FedSession(cfg, optim.adam(5e-4), plan).run(params, batches)
 for h in hist:
     print(f"round {h.round}: loss {h.loss:.4f} "
-          f"({h.round_time_s:.1f}s) frozen windows {h.windows}")
+          f"({h.round_time_s:.1f}s, {h.upload_bytes / 2**20:.1f}MB up, "
+          f"{h.tokens_per_s:.0f} tok/s) frozen windows {h.windows}")
 
 # 4. held-out evaluation
 eval_step = jax.jit(make_eval_step(cfg))

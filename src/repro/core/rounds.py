@@ -1,21 +1,29 @@
-"""Federated round engines.
+"""Federated round engines, driven by a pluggable ``FederatedStrategy``.
 
-``run_fdapt`` drives the full FDAPT/FFDAPT process from Appendix A: init
-every client from the global model, run one local epoch per round, FedAvg,
-repeat.  Two execution engines with identical math:
+``FedSession`` runs the full FDAPT/FFDAPT process from Appendix A: init every
+client from the global model, run one local epoch per round, aggregate with
+the session's strategy, repeat.  Two execution engines with identical math:
 
   * ``engine="sequential"`` — paper-faithful loop over clients (Flower runs
     clients as processes; we run them as successive jit calls).  Supports
     FFDAPT *static* windows: each (window pattern) compiles once, frozen
     layers truly skip backward dW.
-  * ``engine="parallel"``  — all K clients execute as ONE program, client
-    dim vmapped/mesh-sharded (clients <-> pod/data axes at production
-    scale); FedAvg is a weighted mean over the client dim (one all-reduce).
-    FFDAPT runs in *masked* mode here (traced per-client masks — a single
-    program for all rounds).
+  * ``engine="parallel"``  — all participating clients execute as ONE
+    program, client dim vmapped/mesh-sharded (clients <-> pod/data axes at
+    production scale); aggregation happens inside the jitted program via the
+    strategy's ``aggregate_stacked`` (FedAvg lowers to one weighted
+    all-reduce over the client dim).  FFDAPT runs in *masked* mode here
+    (traced per-client masks — a single program for all rounds).
+
+The round "what" lives in ``RoundPlan`` (strategy, FFDAPT schedule, client
+participation, engine); the engines only supply the "how".  Every round
+reports upload bytes and tokens/s in ``RoundResult``.
 
 Per the paper (Appendix E.1): optimizers are re-initialized at the start of
 each round's local training; 1 local epoch per round; 15 rounds.
+
+``run_fdapt`` remains as a thin shim over ``FedSession`` for existing
+callers (deprecation path tracked in ROADMAP.md).
 """
 
 from __future__ import annotations
@@ -26,10 +34,12 @@ from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import ffdapt as ffd
-from repro.core.fedavg import broadcast_clients, fedavg, fedavg_stacked
-from repro.models.steps import make_masked_train_step, make_train_step
+from repro.core.fedavg import broadcast_clients, fedavg_stacked
+from repro.core.strategy import FedAvg, FederatedStrategy
+from repro.models.steps import make_masked_train_step
 from repro.nn import param as P
 
 
@@ -39,82 +49,251 @@ class RoundResult:
     loss: float
     round_time_s: float
     windows: Optional[List[ffd.Window]] = None
+    upload_bytes: int = 0                 # client->server bytes this round
+    tokens: float = 0.0                   # tokens trained on this round
+    tokens_per_s: float = 0.0
+    clients: Optional[List[int]] = None   # participating client ids
 
 
-def _epoch(train_step, params, opt_state, batches: Sequence[Dict[str, Any]]):
-    losses = []
+@dataclasses.dataclass
+class RoundPlan:
+    """Everything that defines a federated run except model/opt/data."""
+
+    n_rounds: int = 15
+    engine: str = "sequential"            # sequential | parallel
+    impl: str = "xla"
+    strategy: FederatedStrategy = dataclasses.field(default_factory=FedAvg)
+    ffdapt: Optional[ffd.FFDAPTConfig] = None
+    participation: float = 1.0            # fraction of clients per round
+    seed: int = 0                         # client-sampling seed
+    client_sizes: Optional[Sequence[int]] = None   # n_k; default batch counts
+    eval_fn: Optional[Callable[[Any], float]] = None
+
+
+def _epoch(step, params, opt_state, batches: Sequence[Dict[str, Any]],
+           anchor=None):
+    losses, toks = [], []
     for b in batches:
-        params, opt_state, m = train_step(params, opt_state, b)
+        if anchor is not None:
+            params, opt_state, m = step(params, opt_state, anchor, b)
+        else:
+            params, opt_state, m = step(params, opt_state, b)
         losses.append(m["loss"])
-    return params, opt_state, float(jnp.mean(jnp.stack(losses)))
+        toks.append(m["tokens"])
+    return (params, opt_state, float(jnp.mean(jnp.stack(losses))),
+            float(jnp.sum(jnp.stack(toks))))
+
+
+def _participants(rng, k: int, participation: float) -> List[int]:
+    if participation >= 1.0:
+        return list(range(k))
+    m = max(1, int(round(participation * k)))
+    return sorted(rng.choice(k, size=m, replace=False).tolist())
+
+
+class FedSession:
+    """A federated training session: ``FedSession(cfg, opt, plan).run(...)``.
+
+    Construct with a ``RoundPlan`` or with plan fields as kwargs:
+    ``FedSession(cfg, opt, n_rounds=3, strategy=FedProx(mu=0.01))``.
+    """
+
+    def __init__(self, cfg, optimizer, plan: Optional[RoundPlan] = None,
+                 **plan_overrides):
+        if plan is None:
+            plan = RoundPlan(**plan_overrides)
+        elif plan_overrides:
+            plan = dataclasses.replace(plan, **plan_overrides)
+        self.cfg = cfg
+        self.optimizer = optimizer
+        self.plan = plan
+
+    def run(self, params, client_batches: List[List[Dict[str, Any]]]):
+        """Returns (final_params, [RoundResult...]).
+
+        client_batches[k] = that client's local batches for one epoch
+        (re-used each round — the paper re-iterates the local dataset every
+        round).  ``plan.client_sizes`` defaults to per-client batch counts
+        (n_k of Algorithm 1).
+        """
+        plan = self.plan
+        sizes = (list(plan.client_sizes) if plan.client_sizes is not None
+                 else [len(bs) for bs in client_batches])
+        from repro.models.model import n_freeze_units
+        n_units = n_freeze_units(self.cfg)
+        windows = (ffd.schedule(n_units, sizes, plan.n_rounds,
+                                epsilon=plan.ffdapt.epsilon,
+                                gamma=plan.ffdapt.gamma)
+                   if plan.ffdapt else None)
+        if plan.engine == "sequential":
+            return self._run_sequential(params, client_batches, sizes,
+                                        windows, n_units)
+        if plan.engine == "parallel":
+            return self._run_parallel(params, client_batches, sizes,
+                                      windows, n_units)
+        raise ValueError(plan.engine)
+
+    # -----------------------------------------------------------------
+    # Sequential (paper-faithful; static FFDAPT windows)
+    # -----------------------------------------------------------------
+
+    def _step_for(self, frozen):
+        # Keyed on the strategy's CLIENT-STEP identity, not the strategy
+        # itself: FedAvg/FedAvgM/Compressed share one compiled program,
+        # FedProx compiles per distinct mu.  Keys hold strong refs to
+        # cfg/optimizer, so a GC'd optimizer can never alias a live cache
+        # entry (the old ``id(optimizer.update)`` key could, after id reuse).
+        key = (self.cfg, self.optimizer, self.plan.strategy.client_step_key(),
+               frozen, self.plan.impl)
+        if key not in _STEP_CACHE:
+            _STEP_CACHE[key] = jax.jit(self.plan.strategy.make_client_step(
+                self.cfg, self.optimizer, frozen=frozen, impl=self.plan.impl))
+        return _STEP_CACHE[key]
+
+    def _run_sequential(self, params, client_batches, sizes, windows,
+                        n_units):
+        plan, optimizer, strategy = self.plan, self.optimizer, self.plan.strategy
+        rng = np.random.default_rng(plan.seed)
+        state = strategy.init_state(params)
+        history = []
+        for t in range(plan.n_rounds):
+            t0 = time.perf_counter()
+            part = _participants(rng, len(client_batches), plan.participation)
+            locals_, losses, tokens = [], [], 0.0
+            for k in part:
+                frozen = None
+                if windows is not None:
+                    frozen = ffd.window_mask(n_units, windows[t][k])
+                opt_state = P.unbox(optimizer.init(params))
+                anchor = params if strategy.needs_anchor else None
+                p_k, _, loss, tok = _epoch(self._step_for(frozen), params,
+                                           opt_state, client_batches[k],
+                                           anchor)
+                locals_.append(p_k)
+                losses.append(loss)
+                tokens += tok
+            params, state, nbytes = strategy.aggregate(
+                params, locals_, [sizes[k] for k in part], state)
+            dt = time.perf_counter() - t0
+            history.append(RoundResult(
+                t, float(np.mean(losses)), dt,
+                windows[t] if windows else None,
+                upload_bytes=nbytes, tokens=tokens,
+                tokens_per_s=tokens / max(dt, 1e-9), clients=part))
+            if plan.eval_fn is not None:
+                history[-1].loss = plan.eval_fn(params)
+        return params, history
+
+    # -----------------------------------------------------------------
+    # Parallel (mesh / vmap engine; masked FFDAPT)
+    # -----------------------------------------------------------------
+
+    def _run_parallel(self, params, client_batches, sizes, windows, n_units):
+        plan, optimizer, strategy = self.plan, self.optimizer, self.plan.strategy
+        K = len(client_batches)
+        max_steps = max(len(b) for b in client_batches)
+        # rectangular schedule for the stacked engine: pad short clients by
+        # CYCLING their local batches (quantity skew -> unequal local steps);
+        # the n_k aggregation weights stay the true sizes.  NOTE: cycling
+        # means a short client re-iterates its data within the round (>1
+        # local epoch), so sequential/parallel only match exactly when all
+        # clients have equal step counts; RoundResult.tokens counts the
+        # repeats (they were trained on).
+        padded = [[bs[i % len(bs)] for i in range(max_steps)]
+                  for bs in client_batches]
+        per_client = [jax.tree.map(lambda *xs: jnp.stack(xs), *bs)
+                      for bs in padded]
+        batches = jax.tree.map(lambda *xs: jnp.stack(xs), *per_client)
+        # leaves: (K, steps, B, ...)
+
+        use_mask = windows is not None
+        client_step = strategy.make_client_step(
+            self.cfg, optimizer, masked=use_mask, impl=plan.impl)
+        needs_anchor = strategy.needs_anchor
+
+        @jax.jit
+        def fed_round(global_params, state, bsub, fmasks, w):
+            ksub = fmasks.shape[0]
+            stacked = broadcast_clients(global_params, ksub)
+            opts = jax.vmap(lambda p: P.unbox(optimizer.init(p)))(stacked)
+
+            def client_epoch(p, o, bs, fm):
+                def one(carry, b):
+                    p_, o_ = carry
+                    args = (p_, o_)
+                    if needs_anchor:
+                        args += (global_params,)
+                    args += (b,)
+                    if use_mask:
+                        args += (fm,)
+                    p_, o_, m = client_step(*args)
+                    return (p_, o_), (m["loss"], m["tokens"])
+
+                (p, o), (ls, toks) = jax.lax.scan(one, (p, o), bs)
+                return p, jnp.mean(ls), jnp.sum(toks)
+
+            p_k, losses, toks = jax.vmap(client_epoch)(stacked, opts, bsub,
+                                                       fmasks)
+            new_global, new_state = strategy.aggregate_stacked(
+                global_params, p_k, w, state)
+            wn = w / jnp.sum(w)
+            return new_global, new_state, jnp.sum(losses * wn), jnp.sum(toks)
+
+        rng = np.random.default_rng(plan.seed)
+        w_all = jnp.asarray(sizes, jnp.float32)
+        state = strategy.init_state(params)
+        history = []
+        for t in range(plan.n_rounds):
+            t0 = time.perf_counter()
+            part = _participants(rng, K, plan.participation)
+            if windows is not None:
+                fmasks = jnp.stack([
+                    jnp.asarray(ffd.window_mask(n_units, windows[t][k]),
+                                jnp.float32) for k in part])
+            else:
+                fmasks = jnp.zeros((len(part), n_units), jnp.float32)
+            if len(part) == K:
+                bsub, w = batches, w_all
+            else:
+                idx = jnp.asarray(part, jnp.int32)
+                bsub = jax.tree.map(lambda x: x[idx], batches)
+                w = w_all[idx]
+            params, state, loss, toks = fed_round(params, state, bsub,
+                                                  fmasks, w)
+            jax.block_until_ready(loss)   # async dispatch would under-time
+            dt = time.perf_counter() - t0
+            toks = float(toks)
+            history.append(RoundResult(
+                t, float(loss), dt, windows[t] if windows else None,
+                upload_bytes=strategy.upload_bytes(params, len(part)),
+                tokens=toks, tokens_per_s=toks / max(dt, 1e-9), clients=part))
+            if plan.eval_fn is not None:
+                history[-1].loss = plan.eval_fn(params)
+        return params, history
+
+
+# process-wide program cache: one compiled step per distinct
+# (config, optimizer, strategy, frozen pattern, impl) — rotation reuses at
+# most N programs, and repeated sessions (benchmarks, resumed runs) pay zero
+# recompiles.
+_STEP_CACHE: Dict[Any, Callable] = {}
 
 
 def run_fdapt(cfg, optimizer, params, client_batches: List[List[Dict[str, Any]]],
               *, n_rounds: int = 15, client_sizes: Optional[Sequence[int]] = None,
               ffdapt: Optional[ffd.FFDAPTConfig] = None,
               engine: str = "sequential", impl: str = "xla",
-              eval_fn: Optional[Callable[[Any], float]] = None):
-    """Returns (final_params, [RoundResult...]).
-
-    client_batches[k] = that client's local batches for one epoch (re-used
-    each round — the paper re-iterates the local dataset every round).
-    client_sizes defaults to per-client batch counts (n_k of Algorithm 1).
-    """
-    K = len(client_batches)
-    sizes = list(client_sizes) if client_sizes is not None else [
-        len(bs) for bs in client_batches]
-    from repro.models.model import n_freeze_units
-    N = n_freeze_units(cfg)
-    windows = (ffd.schedule(N, sizes, n_rounds, epsilon=ffdapt.epsilon,
-                            gamma=ffdapt.gamma) if ffdapt else None)
-
-    if engine == "sequential":
-        return _run_sequential(cfg, optimizer, params, client_batches, sizes,
-                               n_rounds, windows, impl, eval_fn, N)
-    if engine == "parallel":
-        return _run_parallel(cfg, optimizer, params, client_batches, sizes,
-                             n_rounds, windows, impl, eval_fn, N)
-    raise ValueError(engine)
-
-
-# ---------------------------------------------------------------------------
-# Sequential (paper-faithful; static FFDAPT windows)
-# ---------------------------------------------------------------------------
-
-# process-wide program cache: one compiled step per distinct
-# (config, optimizer, frozen pattern) — rotation reuses at most N programs,
-# and repeated run_fdapt calls (benchmarks, resumed runs) pay zero recompiles.
-_STEP_CACHE: Dict[Any, Callable] = {}
-
-
-def _run_sequential(cfg, optimizer, params, client_batches, sizes, n_rounds,
-                    windows, impl, eval_fn, n_units):
-    def step_for(frozen):
-        key = (cfg, id(optimizer.update), frozen, impl)
-        if key not in _STEP_CACHE:
-            _STEP_CACHE[key] = jax.jit(make_train_step(
-                cfg, optimizer, frozen=frozen, impl=impl))
-        return _STEP_CACHE[key]
-
-    history = []
-    for t in range(n_rounds):
-        t0 = time.perf_counter()
-        locals_, losses = [], []
-        for k, batches in enumerate(client_batches):
-            frozen = None
-            if windows is not None:
-                frozen = ffd.window_mask(n_units, windows[t][k])
-            opt_state = P.unbox(optimizer.init(params))
-            p_k, _, loss = _epoch(step_for(frozen), params, opt_state, batches)
-            locals_.append(p_k)
-            losses.append(loss)
-        params = fedavg(locals_, sizes)
-        dt = time.perf_counter() - t0
-        history.append(RoundResult(t, float(jnp.mean(jnp.asarray(losses))), dt,
-                                   windows[t] if windows else None))
-        if eval_fn is not None:
-            history[-1].loss = eval_fn(params)
-    return params, history
+              eval_fn: Optional[Callable[[Any], float]] = None,
+              strategy: Optional[FederatedStrategy] = None,
+              participation: float = 1.0, seed: int = 0):
+    """Back-compat shim over ``FedSession`` — prefer
+    ``FedSession(cfg, optimizer, RoundPlan(...)).run(params, batches)``.
+    Returns (final_params, [RoundResult...])."""
+    plan = RoundPlan(n_rounds=n_rounds, engine=engine, impl=impl,
+                     strategy=strategy if strategy is not None else FedAvg(),
+                     ffdapt=ffdapt, participation=participation, seed=seed,
+                     client_sizes=client_sizes, eval_fn=eval_fn)
+    return FedSession(cfg, optimizer, plan).run(params, client_batches)
 
 
 def make_fed_round_program(cfg, optimizer, *, impl: str = "xla"):
@@ -147,64 +326,3 @@ def make_fed_round_program(cfg, optimizer, *, impl: str = "xla"):
         return broadcast_clients(new_global, K), losses
 
     return fed_round
-
-
-# ---------------------------------------------------------------------------
-# Parallel (mesh / vmap engine; masked FFDAPT)
-# ---------------------------------------------------------------------------
-
-def _run_parallel(cfg, optimizer, params, client_batches, sizes, n_rounds,
-                  windows, impl, eval_fn, n_units):
-    K = len(client_batches)
-    steps_per_client = min(len(b) for b in client_batches)
-    if any(len(b) != steps_per_client for b in client_batches):
-        # pad by cycling (quantity skew -> unequal local steps; the stacked
-        # engine needs a rectangular schedule, extras are dropped/cycled)
-        client_batches = [bs[:steps_per_client] for bs in client_batches]
-
-    def stack_batches():
-        per_client = [jax.tree.map(lambda *xs: jnp.stack(xs), *bs)
-                      for bs in client_batches]
-        return jax.tree.map(lambda *xs: jnp.stack(xs), *per_client)
-
-    batches = stack_batches()                 # leaves: (K, steps, B, ...)
-    masked_step = make_masked_train_step(cfg, optimizer, impl=impl)
-    plain_step = make_train_step(cfg, optimizer, impl=impl)
-
-    def client_epoch(p, o, bs, fmask):
-        def one(carry, b):
-            p_, o_ = carry
-            if windows is not None:
-                p_, o_, m = masked_step(p_, o_, b, fmask)
-            else:
-                p_, o_, m = plain_step(p_, o_, b)
-            return (p_, o_), m["loss"]
-        (p, o), losses = jax.lax.scan(one, (p, o), bs)
-        return p, jnp.mean(losses)
-
-    w = jnp.asarray(sizes, jnp.float32)
-
-    @jax.jit
-    def fed_round(global_params, batches, fmasks):
-        stacked = broadcast_clients(global_params, K)
-        opts = jax.vmap(lambda p: P.unbox(optimizer.init(p)))(stacked)
-        p_k, losses = jax.vmap(client_epoch)(stacked, opts, batches, fmasks)
-        new_global = fedavg_stacked(p_k, w)
-        return new_global, jnp.sum(losses * (w / jnp.sum(w)))
-
-    history = []
-    for t in range(n_rounds):
-        t0 = time.perf_counter()
-        if windows is not None:
-            fmasks = jnp.stack([
-                jnp.asarray(ffd.window_mask(n_units, windows[t][k]), jnp.float32)
-                for k in range(K)])
-        else:
-            fmasks = jnp.zeros((K, n_units), jnp.float32)
-        params, loss = fed_round(params, batches, fmasks)
-        dt = time.perf_counter() - t0
-        history.append(RoundResult(t, float(loss), dt,
-                                   windows[t] if windows else None))
-        if eval_fn is not None:
-            history[-1].loss = eval_fn(params)
-    return params, history

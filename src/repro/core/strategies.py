@@ -56,60 +56,35 @@ def fedavgm_update(global_params: Any, client_params: Sequence[Any],
 # FedProx client objective
 # ---------------------------------------------------------------------------
 
-def proximal_penalty(params: Any, anchor: Any) -> jax.Array:
-    """mu-less proximal term: 1/2 ||w - w_anchor||^2 (caller scales by mu)."""
-    leaves = jax.tree.map(
-        lambda p, a: jnp.sum(jnp.square(p.astype(jnp.float32)
-                                        - a.astype(jnp.float32))),
-        params, anchor)
-    return 0.5 * sum(jax.tree.leaves(leaves))
+# canonical implementation lives with the other step factories
+from repro.models.steps import proximal_penalty  # noqa: E402  (re-export)
 
 
 def make_fedprox_step(cfg, optimizer, *, mu: float = 0.01, impl: str = "xla",
                       clip_norm: float = 1.0):
     """Train step whose objective adds mu/2 ||w - w_global||^2.  The global
-    anchor is passed per call (it changes every round)."""
-    from repro.models.steps import _objective
-    from repro.optim import apply_updates, clip_by_global_norm
-
-    def objective(params, anchor, batch):
-        total, metrics = _objective(params, cfg, batch, None, impl)
-        prox = mu * proximal_penalty(params, anchor)
-        return total + prox, dict(metrics, prox=prox)
-
-    grad_fn = jax.value_and_grad(objective, has_aux=True)
-
-    def step(params, opt_state, anchor, batch):
-        (_, metrics), grads = grad_fn(params, anchor, batch)
-        if clip_norm:
-            grads, gnorm = clip_by_global_norm(grads, clip_norm)
-        else:
-            gnorm = jnp.zeros((), jnp.float32)
-        updates, opt_state = optimizer.update(grads, opt_state, params)
-        params = apply_updates(params, updates)
-        return params, opt_state, dict(metrics, grad_norm=gnorm)
-
-    return step
+    anchor is passed per call (it changes every round).
+    ``step(params, opt_state, anchor, batch)`` — a thin wrapper over
+    ``make_train_step(..., prox_mu=mu)``; prefer ``strategy.FedProx``."""
+    from repro.models.steps import make_train_step
+    return make_train_step(cfg, optimizer, impl=impl, clip_norm=clip_norm,
+                           prox_mu=mu)
 
 
 # ---------------------------------------------------------------------------
 # Upload compression (client deltas)
 # ---------------------------------------------------------------------------
 
-def tree_delta(new: Any, base: Any) -> Any:
-    return jax.tree.map(lambda n, b: n.astype(jnp.float32)
-                        - b.astype(jnp.float32), new, base)
-
-
-def tree_add(base: Any, delta: Any) -> Any:
-    return jax.tree.map(lambda b, d: (b.astype(jnp.float32) + d
-                                      ).astype(b.dtype), base, delta)
+# canonical delta/byte helpers live in repro.core.strategy
+from repro.core.strategy import tree_add, tree_delta  # noqa: E402  (re-export)
 
 
 def topk_sparsify(delta: Any, frac: float = 0.1):
     """Keep the top-``frac`` fraction of entries per leaf (by magnitude).
-    Returns (sparse_delta, upload_bytes) — bytes = kept values (4B) + indices
-    (4B) per entry, the standard sparse-upload accounting."""
+    Returns (sparse_delta, upload_bytes) — bytes = kept values (leaf dtype)
+    + int32 indices per entry, the standard sparse-upload accounting.  The
+    ``>= thresh`` tie rule can keep MORE than k entries, so the byte count
+    is taken from what actually survived, not from k."""
     total_bytes = 0
 
     def one(d):
@@ -119,7 +94,10 @@ def topk_sparsify(delta: Any, frac: float = 0.1):
         flat = d.reshape(-1)
         thresh = jnp.sort(jnp.abs(flat))[n - k]
         kept = jnp.where(jnp.abs(flat) >= thresh, flat, 0.0)
-        total_bytes += k * 8
+        # count nonzero survivors: a zero threshold (all-zero leaf, e.g. a
+        # frozen layer's delta) would otherwise "keep" the whole leaf
+        total_bytes += (max(int(jnp.sum(kept != 0.0)), 1)
+                        * (jnp.dtype(d.dtype).itemsize + 4))
         return kept.reshape(d.shape)
 
     out = jax.tree.map(one, delta)
@@ -143,7 +121,9 @@ def quantize8(delta: Any):
 
 
 def dense_bytes(tree: Any) -> int:
-    return int(sum(l.size * 4 for l in jax.tree.leaves(tree)))
+    """Dense upload size, dtype-aware (bf16 leaves count 2 B, not 4)."""
+    from repro.core.strategy import tree_bytes
+    return tree_bytes(tree)
 
 
 def compressed_fedavg(global_params: Any, client_params: Sequence[Any],

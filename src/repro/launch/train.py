@@ -6,7 +6,8 @@ configs are exercised by the dry-run); on a real TPU fleet the same driver
 runs the full config with the production mesh.
 
     PYTHONPATH=src python -m repro.launch.train \
-        --arch distilbert-mlm --clients 8 --skew length --rounds 15 --ffdapt
+        --arch distilbert-mlm --clients 8 --skew length --rounds 15 --ffdapt \
+        --strategy fedprox --compress topk --participation 0.5
 """
 
 from __future__ import annotations
@@ -23,7 +24,8 @@ from repro.checkpoint import save_checkpoint
 from repro.configs import get_config
 from repro.core.ffdapt import FFDAPTConfig
 from repro.core.noniid import make_client_datasets
-from repro.core.rounds import run_fdapt
+from repro.core.rounds import FedSession, RoundPlan
+from repro.core.strategy import COMPRESSORS, STRATEGIES, make_strategy
 from repro.data.corpus import generate_corpus
 from repro.models.model import init_model
 from repro.models.steps import make_eval_step
@@ -42,6 +44,17 @@ def main() -> None:
     ap.add_argument("--epsilon", type=int, default=0)
     ap.add_argument("--engine", default="sequential",
                     choices=("sequential", "parallel"))
+    ap.add_argument("--strategy", default="fedavg", choices=STRATEGIES)
+    ap.add_argument("--compress", default="none", choices=COMPRESSORS,
+                    help="client-upload delta compression")
+    ap.add_argument("--mu", type=float, default=0.01,
+                    help="FedProx proximal coefficient")
+    ap.add_argument("--server-beta", type=float, default=0.9,
+                    help="FedAvgM server momentum")
+    ap.add_argument("--topk-frac", type=float, default=0.1,
+                    help="fraction of delta entries kept by --compress topk")
+    ap.add_argument("--participation", type=float, default=1.0,
+                    help="fraction of clients sampled each round")
     ap.add_argument("--docs", type=int, default=240)
     ap.add_argument("--batch-size", type=int, default=8)
     ap.add_argument("--seq-len", type=int, default=128)
@@ -74,18 +87,33 @@ def main() -> None:
     params = P.unbox(init_model(jax.random.PRNGKey(args.seed), cfg))
     print(f"params: {sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params)):,}")
 
-    ffd = FFDAPTConfig(epsilon=args.epsilon, gamma=args.gamma) \
-        if args.ffdapt else None
+    strategy = make_strategy(args.strategy, compress=args.compress,
+                             mu=args.mu, beta=args.server_beta,
+                             frac=args.topk_frac)
+    plan = RoundPlan(n_rounds=args.rounds, engine=args.engine,
+                     strategy=strategy,
+                     ffdapt=FFDAPTConfig(epsilon=args.epsilon,
+                                         gamma=args.gamma) if args.ffdapt
+                     else None,
+                     participation=args.participation, seed=args.seed,
+                     client_sizes=ds["sizes"])
+    print(f"strategy={strategy.name} engine={args.engine} "
+          f"participation={args.participation}")
     t0 = time.perf_counter()
-    params, hist = run_fdapt(cfg, optim.adam(args.lr), params, batches,
-                             n_rounds=args.rounds, client_sizes=ds["sizes"],
-                             ffdapt=ffd, engine=args.engine)
+    params, hist = FedSession(cfg, optim.adam(args.lr), plan).run(params,
+                                                                  batches)
     wall = time.perf_counter() - t0
 
     for h in hist:
         w = f" windows={h.windows}" if h.windows else ""
-        print(f"round {h.round:3d}  loss {h.loss:7.4f}  {h.round_time_s:6.2f}s{w}")
-    print(f"total {wall:.1f}s; mean round {np.mean([h.round_time_s for h in hist]):.2f}s")
+        c = (f" clients={h.clients}"
+             if h.clients is not None and len(h.clients) < args.clients else "")
+        print(f"round {h.round:3d}  loss {h.loss:7.4f}  {h.round_time_s:6.2f}s"
+              f"  up {h.upload_bytes / 2**20:7.1f}MB  "
+              f"{h.tokens_per_s:8.0f} tok/s{w}{c}")
+    print(f"total {wall:.1f}s; mean round "
+          f"{np.mean([h.round_time_s for h in hist]):.2f}s; upload "
+          f"{sum(h.upload_bytes for h in hist) / 2**20:.1f}MB")
 
     eval_step = jax.jit(make_eval_step(cfg))
     heldout = make_client_datasets(held_docs,

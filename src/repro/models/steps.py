@@ -50,6 +50,16 @@ def _objective(params, cfg, batch, frozen, impl):
     return total, {"loss": loss, "aux": aux, "tokens": count}
 
 
+def proximal_penalty(params: Any, anchor: Any) -> jax.Array:
+    """mu-less proximal term: 1/2 ||w - w_anchor||^2 (caller scales by mu).
+    The FedProx client objective (Li et al., 2020)."""
+    leaves = jax.tree.map(
+        lambda p, a: jnp.sum(jnp.square(p.astype(jnp.float32)
+                                        - a.astype(jnp.float32))),
+        params, anchor)
+    return 0.5 * sum(jax.tree.leaves(leaves))
+
+
 def _split_microbatches(batch: Dict[str, Any], m: int):
     def split(x):
         return x.reshape(m, x.shape[0] // m, *x.shape[1:])
@@ -94,25 +104,36 @@ def _apply_freeze_to_updates(cfg, frozen, updates, new_opt, old_opt):
 
 def make_train_step(cfg, optimizer, *, frozen: Optional[Tuple[bool, ...]] = None,
                     microbatches: int = 1, impl: str = "xla",
-                    clip_norm: float = 1.0):
+                    clip_norm: float = 1.0, prox_mu: float = 0.0):
     """-> train_step(params, opt_state, batch) -> (params, opt_state, metrics).
 
     ``frozen``: static per-freeze-unit mask (FFDAPT); recompiled per distinct
     window — at most N distinct programs over a whole federated run.
+    ``prox_mu`` > 0 adds FedProx's mu/2 ||w - w_global||^2 to the objective
+    and changes the signature to ``step(params, opt_state, anchor, batch)``
+    (the global anchor changes every round, so it is a per-call argument).
     """
-    grad_fn = jax.value_and_grad(_objective, has_aux=True)
+    def objective(params, anchor, batch):
+        total, metrics = _objective(params, cfg, batch, frozen, impl)
+        if prox_mu:
+            prox = prox_mu * proximal_penalty(params, anchor)
+            total = total + prox
+            metrics = dict(metrics, prox=prox)
+        return total, metrics
 
-    def one_micro(params, mb):
-        (total, metrics), grads = grad_fn(params, cfg, mb, frozen, impl)
+    grad_fn = jax.value_and_grad(objective, has_aux=True)
+
+    def one_micro(params, anchor, mb):
+        (total, metrics), grads = grad_fn(params, anchor, mb)
         return grads, metrics
 
-    def train_step(params, opt_state, batch):
+    def train_step(params, opt_state, anchor, batch):
         if microbatches > 1:
             mbs = _split_microbatches(batch, microbatches)
 
             def acc(carry, mb):
                 g_acc, m_acc = carry
-                g, m = one_micro(params, mb)
+                g, m = one_micro(params, anchor, mb)
                 g_acc = jax.tree.map(lambda a, b: a + b.astype(a.dtype), g_acc, g)
                 m_acc = jax.tree.map(lambda a, b: a + b, m_acc, m)
                 return (g_acc, m_acc), None
@@ -121,12 +142,14 @@ def make_train_step(cfg, optimizer, *, frozen: Optional[Tuple[bool, ...]] = None
             m0 = {"loss": jnp.zeros((), jnp.float32),
                   "aux": jnp.zeros((), jnp.float32),
                   "tokens": jnp.zeros((), jnp.float32)}
+            if prox_mu:
+                m0["prox"] = jnp.zeros((), jnp.float32)
             (grads, metrics), _ = jax.lax.scan(acc, (g0, m0), mbs)
             grads = jax.tree.map(lambda g: g / microbatches, grads)
             metrics = {k: v / microbatches if k != "tokens" else v
                        for k, v in metrics.items()}
         else:
-            grads, metrics = one_micro(params, batch)
+            grads, metrics = one_micro(params, anchor, batch)
 
         if clip_norm:
             grads, gnorm = clip_by_global_norm(grads, clip_norm)
@@ -140,19 +163,32 @@ def make_train_step(cfg, optimizer, *, frozen: Optional[Tuple[bool, ...]] = None
         metrics = dict(metrics, grad_norm=gnorm)
         return params, new_opt, metrics
 
-    return train_step
+    if prox_mu:
+        return train_step
+    return lambda params, opt_state, batch: train_step(params, opt_state,
+                                                       None, batch)
 
 
 def make_masked_train_step(cfg, optimizer, *, impl: str = "xla",
-                           clip_norm: float = 1.0):
+                           clip_norm: float = 1.0, prox_mu: float = 0.0):
     """Single-program FFDAPT variant: ``freeze_mask`` is a TRACED (L,) float
     {0,1} array multiplying the main-stack gradients — one compiled program
     serves every round, but backward FLOPs are NOT saved (only updates are
-    suppressed).  Supported for uniform-stack archs (``layers`` leading dim)."""
-    grad_fn = jax.value_and_grad(_objective, has_aux=True)
+    suppressed).  Supported for uniform-stack archs (``layers`` leading dim).
+    ``prox_mu`` > 0 adds the FedProx term and the signature becomes
+    ``step(params, opt_state, anchor, batch, freeze_mask)``."""
+    def objective(params, anchor, batch):
+        total, metrics = _objective(params, cfg, batch, None, impl)
+        if prox_mu:
+            prox = prox_mu * proximal_penalty(params, anchor)
+            total = total + prox
+            metrics = dict(metrics, prox=prox)
+        return total, metrics
 
-    def train_step(params, opt_state, batch, freeze_mask):
-        (total, metrics), grads = grad_fn(params, cfg, batch, None, impl)
+    grad_fn = jax.value_and_grad(objective, has_aux=True)
+
+    def train_step(params, opt_state, anchor, batch, freeze_mask):
+        (total, metrics), grads = grad_fn(params, anchor, batch)
         keep = 1.0 - freeze_mask                       # (L,) traced
 
         def mask_stacked(path_grads):
@@ -186,7 +222,10 @@ def make_masked_train_step(cfg, optimizer, *, impl: str = "xla",
         params = apply_updates(params, updates)
         return params, new_opt, dict(metrics, grad_norm=gnorm)
 
-    return train_step
+    if prox_mu:
+        return train_step
+    return lambda params, opt_state, batch, freeze_mask: train_step(
+        params, opt_state, None, batch, freeze_mask)
 
 
 def make_eval_step(cfg, *, impl: str = "xla"):

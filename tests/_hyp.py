@@ -1,0 +1,77 @@
+"""Hypothesis shim: the property tests use the real library when it is
+installed, and fall back to a tiny deterministic random-example runner when it
+is not (this container has no ``hypothesis``), so the tier-1 suite always
+collects and runs.
+
+The fallback covers exactly the strategy surface the suite uses —
+``integers / floats / booleans / lists / text / sampled_from`` — drawing
+``max_examples`` examples from a PRNG seeded by the test's qualified name
+(stable across runs).  It does not shrink failures; install
+``requirements-dev.txt`` for the real engine.
+"""
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+except ImportError:
+    import random as _random
+    import zlib as _zlib
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value=0, max_value=1 << 30):
+            return _Strategy(lambda r: r.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_kw):
+            return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda r: r.random() < 0.5)
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10, **_kw):
+            return _Strategy(lambda r: [
+                elements.draw(r)
+                for _ in range(r.randint(min_size, max_size))])
+
+        @staticmethod
+        def text(min_size=0, max_size=10, **_kw):
+            chars = ("abcdefghijklmnopqrstuvwxyz"
+                     "ABCDEFGHIJKLMNOPQRSTUVWXYZ0123456789_-., äöμλ汉")
+            return _Strategy(lambda r: "".join(
+                r.choice(chars) for _ in range(r.randint(min_size, max_size))))
+
+        @staticmethod
+        def sampled_from(seq):
+            items = list(seq)
+            return _Strategy(lambda r: r.choice(items))
+
+    st = _Strategies()
+
+    def given(**strategies):
+        def deco(fn):
+            # No functools.wraps: __wrapped__ would make pytest read the
+            # original signature and treat drawn args as fixtures.
+            def wrapper():
+                n = getattr(wrapper, "_max_examples", 20)
+                rnd = _random.Random(_zlib.crc32(fn.__qualname__.encode()))
+                for _ in range(n):
+                    fn(**{k: s.draw(rnd) for k, s in strategies.items()})
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__qualname__ = fn.__qualname__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+        return deco
+
+    def settings(max_examples=20, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco

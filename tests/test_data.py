@@ -2,7 +2,7 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.configs import get_config
 from repro.data.batching import clm_batches, mlm_batches, shard_batches, tokenize_shard

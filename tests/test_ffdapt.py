@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro import optim
 from repro.configs import get_config
@@ -131,9 +131,11 @@ def test_static_equals_masked():
     p_m, o_m, _ = masked(params, opt_state, batch,
                          jnp.asarray(frozen, jnp.float32))
     for a, b in zip(jax.tree.leaves(p_s), jax.tree.leaves(p_m)):
+        # atol 5e-5: XLA reassociates the two lowerings differently; a
+        # handful of elements land ~1e-5 apart after one Adam step
         np.testing.assert_allclose(np.asarray(a, np.float32),
                                    np.asarray(b, np.float32),
-                                   rtol=1e-4, atol=1e-5)
+                                   rtol=1e-4, atol=5e-5)
 
 
 def test_freeze_units_per_family():

@@ -2,7 +2,7 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.data.corpus import generate_corpus
 from repro.data.partition import (client_stats_table, partition,

@@ -53,6 +53,14 @@ def test_quantize8_roundtrip_error_bounded():
     assert nbytes < S.dense_bytes(d)
 
 
+def test_topk_zero_delta_counts_minimum():
+    # all-zero leaf (e.g. a frozen layer's delta): threshold is 0, which
+    # "keeps" everything — accounting must not bill the whole leaf
+    d = {"w": jnp.zeros((100,), jnp.float32)}
+    _, nbytes = S.topk_sparsify(d, frac=0.1)
+    assert nbytes == 8
+
+
 def test_topk_keeps_largest():
     d = {"w": jnp.asarray([0.1, -5.0, 0.2, 3.0, -0.05, 0.0], jnp.float32)}
     sp, nbytes = S.topk_sparsify(d, frac=0.34)    # keep 2 of 6

@@ -1,0 +1,226 @@
+"""FederatedStrategy parity suite.
+
+Pins the strategy API to the legacy math it replaced:
+  (a) FedAvg-as-strategy is BITWISE equal to the legacy hand-rolled
+      train-then-``fedavg`` loop, on both engines;
+  (b) ``aggregate`` (list layout) and ``aggregate_stacked`` (client-dim
+      layout) agree for every strategy;
+  (c) FedProx with mu=0 collapses to plain FedAvg;
+  (d) compressed uploads report fewer bytes than dense.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.configs import get_config
+from repro.core.fedavg import broadcast_clients, fedavg, fedavg_stacked
+from repro.core.rounds import FedSession, RoundPlan
+from repro.core.strategy import (Compressed, FedAvg, FedAvgM, FedProx,
+                                 make_strategy, tree_bytes)
+from repro.core.noniid import make_client_datasets
+from repro.data.corpus import generate_corpus
+from repro.models.model import init_model
+from repro.models.steps import make_train_step
+from repro.nn import param as P
+
+CFG = get_config("distilbert-mlm").reduced()
+KEY = jax.random.PRNGKey(0)
+DOCS = generate_corpus(100, seed=0)
+
+
+@pytest.fixture(scope="module")
+def params0():
+    return P.unbox(init_model(KEY, CFG))
+
+
+@pytest.fixture(scope="module")
+def clients():
+    ds = make_client_datasets(DOCS, CFG, k=2, skew="iid", batch=2, seq=32)
+    return [b[:2] for b in ds["batches"]], ds["sizes"]
+
+
+def _maxdiff(a, b):
+    return max(float(jnp.max(jnp.abs(x.astype(jnp.float32)
+                                     - y.astype(jnp.float32))))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+# ---------------------------------------------------------------------------
+# (a) FedAvg strategy == legacy loop, bitwise, both engines
+# ---------------------------------------------------------------------------
+
+def _legacy_sequential(opt, params, batches, sizes, rounds):
+    step = jax.jit(make_train_step(CFG, opt))
+    for _ in range(rounds):
+        locals_ = []
+        for bs in batches:
+            p, o = params, P.unbox(opt.init(params))
+            for b in bs:
+                p, o, _ = step(p, o, b)
+            locals_.append(p)
+        params = fedavg(locals_, sizes)
+    return params
+
+
+def _legacy_parallel(opt, params, batches_list, sizes, rounds):
+    """The pre-strategy mesh round: vmapped epochs + stacked FedAvg."""
+    K = len(batches_list)
+    per_client = [jax.tree.map(lambda *xs: jnp.stack(xs), *bs)
+                  for bs in batches_list]
+    batches = jax.tree.map(lambda *xs: jnp.stack(xs), *per_client)
+    plain_step = make_train_step(CFG, opt)
+    w = jnp.asarray(sizes, jnp.float32)
+
+    @jax.jit
+    def fed_round(gp, bs_all):
+        stacked = broadcast_clients(gp, K)
+        opts = jax.vmap(lambda p: P.unbox(opt.init(p)))(stacked)
+
+        def client_epoch(p, o, bs):
+            def one(carry, b):
+                p_, o_ = carry
+                p_, o_, m = plain_step(p_, o_, b)
+                return (p_, o_), m["loss"]
+            (p, o), losses = jax.lax.scan(one, (p, o), bs)
+            return p, jnp.mean(losses)
+
+        p_k, _ = jax.vmap(client_epoch)(stacked, opts, batches)
+        return fedavg_stacked(p_k, w)
+
+    for _ in range(rounds):
+        params = fed_round(params, batches)
+    return params
+
+
+@pytest.mark.parametrize("engine", ["sequential", "parallel"])
+def test_fedavg_strategy_bitwise_equals_legacy(params0, clients, engine):
+    batches, sizes = clients
+    p_new, hist = FedSession(CFG, optim.adam(1e-4), RoundPlan(
+        n_rounds=2, engine=engine, client_sizes=sizes)).run(params0, batches)
+    legacy = (_legacy_sequential if engine == "sequential"
+              else _legacy_parallel)
+    p_old = legacy(optim.adam(1e-4), params0, batches, sizes, 2)
+    assert _maxdiff(p_new, p_old) == 0.0
+    assert hist[-1].upload_bytes == len(batches) * tree_bytes(params0)
+
+
+# ---------------------------------------------------------------------------
+# (b) aggregate == aggregate_stacked for every strategy
+# ---------------------------------------------------------------------------
+
+def _rand_trees(k, seed=0):
+    rng = np.random.default_rng(seed)
+    def tree():
+        return {"a": jnp.asarray(rng.normal(0, 1, (4, 5)), jnp.float32),
+                "b": {"c": jnp.asarray(rng.normal(0, 1, (64,)), jnp.float32)}}
+    return tree(), [tree() for _ in range(k)]
+
+
+@pytest.mark.parametrize("strategy", [
+    FedAvg(), FedAvgM(beta=0.7, lr=0.9), FedProx(mu=0.1),
+    Compressed(kind="topk", frac=0.25), Compressed(kind="int8"),
+    Compressed(inner=FedAvgM(), kind="int8"),
+], ids=lambda s: s.name)
+def test_aggregate_layouts_agree(strategy):
+    g, client_trees = _rand_trees(3, seed=1)
+    sizes = [1.0, 2.0, 3.0]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *client_trees)
+    w = jnp.asarray(sizes, jnp.float32)
+
+    st_a = strategy.init_state(g)
+    new_a, st_a, nbytes = strategy.aggregate(g, client_trees, sizes, st_a)
+    st_b = strategy.init_state(g)
+    new_b, st_b = jax.jit(strategy.aggregate_stacked)(g, stacked, w, st_b)
+
+    assert _maxdiff(new_a, new_b) < 1e-6
+    if jax.tree.leaves(st_a):                      # stateful (FedAvgM)
+        assert _maxdiff(st_a, st_b) < 1e-6
+    assert nbytes > 0
+
+
+def test_aggregate_layouts_agree_second_round_state():
+    """FedAvgM momentum threads identically through both layouts."""
+    strategy = FedAvgM(beta=0.9)
+    g, client_trees = _rand_trees(2, seed=2)
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *client_trees)
+    w = jnp.asarray([1.0, 1.0], jnp.float32)
+
+    st_a, st_b = strategy.init_state(g), strategy.init_state(g)
+    a, st_a, _ = strategy.aggregate(g, client_trees, [1, 1], st_a)
+    b, st_b = strategy.aggregate_stacked(g, stacked, w, st_b)
+    a2, st_a, _ = strategy.aggregate(a, client_trees, [1, 1], st_a)
+    b2, st_b = strategy.aggregate_stacked(b, stacked, w, st_b)
+    assert _maxdiff(a2, b2) < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# (c) FedProx(mu=0) == FedAvg
+# ---------------------------------------------------------------------------
+
+def test_fedprox_zero_mu_matches_fedavg(params0, clients):
+    batches, sizes = clients
+    p_avg, _ = FedSession(CFG, optim.adam(1e-4), n_rounds=1,
+                          client_sizes=sizes).run(params0, batches)
+    p_prox, _ = FedSession(CFG, optim.adam(1e-4), n_rounds=1,
+                           client_sizes=sizes,
+                           strategy=FedProx(mu=0.0)).run(params0, batches)
+    assert _maxdiff(p_avg, p_prox) == 0.0
+
+
+def test_fedprox_positive_mu_changes_result_and_reports_anchor(params0,
+                                                               clients):
+    batches, sizes = clients
+    p_avg, _ = FedSession(CFG, optim.adam(1e-3), n_rounds=1,
+                          client_sizes=sizes).run(params0, batches)
+    p_prox, _ = FedSession(CFG, optim.adam(1e-3), n_rounds=1,
+                           client_sizes=sizes,
+                           strategy=FedProx(mu=1.0)).run(params0, batches)
+    assert _maxdiff(p_avg, p_prox) > 0.0
+    # the proximal pull keeps clients nearer the round's anchor
+    assert _maxdiff(p_prox, params0) <= _maxdiff(p_avg, params0) * 1.5
+
+
+# ---------------------------------------------------------------------------
+# (d) compressed uploads < dense
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ["sequential", "parallel"])
+@pytest.mark.parametrize("kind,bound", [("topk", 0.5), ("int8", 0.3)])
+def test_compressed_upload_bytes_below_dense(params0, clients, engine, kind,
+                                             bound):
+    batches, sizes = clients
+    dense = len(batches) * tree_bytes(params0)
+    _, hist = FedSession(CFG, optim.adam(1e-4), RoundPlan(
+        n_rounds=1, engine=engine, client_sizes=sizes,
+        strategy=Compressed(kind=kind, frac=0.1))).run(params0, batches)
+    assert 0 < hist[-1].upload_bytes < dense * bound
+
+
+def test_make_strategy_registry():
+    assert make_strategy("fedavg").name == "fedavg"
+    assert make_strategy("fedavgm", beta=0.5) == FedAvgM(beta=0.5)
+    assert make_strategy("fedprox", mu=0.3) == FedProx(mu=0.3)
+    s = make_strategy("fedprox", compress="topk", frac=0.2)
+    assert isinstance(s, Compressed) and s.inner == FedProx() \
+        and s.needs_anchor
+    with pytest.raises(ValueError):
+        make_strategy("fedsgd")
+    with pytest.raises(ValueError):
+        make_strategy("fedavg", compress="gzip")
+
+
+def test_participation_samples_clients(params0):
+    ds = make_client_datasets(DOCS, CFG, k=4, skew="iid", batch=2, seq=32)
+    batches = [b[:1] for b in ds["batches"]]
+    _, hist = FedSession(CFG, optim.adam(1e-4), n_rounds=3,
+                         participation=0.5, seed=7,
+                         client_sizes=ds["sizes"]).run(params0, batches)
+    for h in hist:
+        assert len(h.clients) == 2
+        assert h.upload_bytes == 2 * tree_bytes(params0)
+    assert len({tuple(h.clients) for h in hist}) > 1    # rounds vary

@@ -45,24 +45,27 @@ def run(rounds: int = 3, steps: int = 4, seed: int = 0,
         plan = RoundPlan(n_rounds=rounds, engine=engine, strategy=strategy,
                          client_sizes=ds["sizes"])
         p, hist = FedSession(cfg, optim.adam(1e-3), plan).run(params0, batches)
-        return eval_loss(p), sum(h.upload_bytes for h in hist)
+        return (eval_loss(p), sum(h.upload_bytes for h in hist),
+                sum(h.comm_bytes for h in hist),
+                sum(h.flops_estimate for h in hist))
 
     rows = [("fedavg_dense", *fed_run(FedAvg()))]
     rows.append(("fedavg_int8", *fed_run(Compressed(kind="int8"))))
     rows.append(("fedavg_top10pct", *fed_run(Compressed(kind="topk",
                                                         frac=0.10))))
     rows.append(("fedavgm_dense", *fed_run(FedAvgM(beta=0.9))))
-    rows.append(("no_training", eval_loss(params0), 0))
+    rows.append(("no_training", eval_loss(params0), 0, 0, 0.0))
     return rows
 
 
-def main(engine: str = "sequential"):
-    rows = run(engine=engine)
+def main(engine: str = "sequential", rounds: int = 3, steps: int = 4):
+    rows = run(rounds=rounds, steps=steps, engine=engine)
     base_bytes = rows[0][2]
-    print("strategy,eval_loss,upload_MB,compression_x")
-    for name, loss, nbytes in rows:
+    print("strategy,eval_loss,upload_MB,comm_MB,compute_GFLOP,compression_x")
+    for name, loss, nbytes, comm, flops in rows:
         ratio = base_bytes / nbytes if nbytes else 0.0
-        print(f"{name},{loss:.4f},{nbytes / 2**20:.1f},{ratio:.1f}")
+        print(f"{name},{loss:.4f},{nbytes / 2**20:.1f},{comm / 2**20:.1f},"
+              f"{flops / 1e9:.2f},{ratio:.1f}")
 
 
 if __name__ == "__main__":
@@ -70,4 +73,11 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--engine", default="sequential",
                     choices=("sequential", "parallel"))
-    main(engine=ap.parse_args().engine)
+    ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--steps", type=int, default=4)
+    ap.add_argument("--tiny", action="store_true",
+                    help="smoke mode: 1 round, 2 local steps")
+    a = ap.parse_args()
+    if a.tiny:
+        a.rounds, a.steps = 1, 2
+    main(engine=a.engine, rounds=a.rounds, steps=a.steps)

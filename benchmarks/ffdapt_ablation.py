@@ -14,7 +14,7 @@ from repro import optim
 from repro.configs import get_config
 from repro.core import ffdapt
 from repro.core.noniid import make_client_datasets
-from repro.core.rounds import run_fdapt
+from repro.core.rounds import FedSession
 from repro.data.corpus import generate_corpus, split_holdout
 from repro.models.model import init_model
 from repro.models.steps import make_eval_step
@@ -37,8 +37,8 @@ def run(rounds: int = 3, steps: int = 4, seed: int = 0):
     def eval_loss(p):
         return float(np.mean([float(eval_step(p, b)["loss"]) for b in held]))
 
-    p_fd, _ = run_fdapt(cfg, opt, params0, batches, n_rounds=rounds,
-                        client_sizes=ds["sizes"])
+    p_fd, _ = FedSession(cfg, opt, n_rounds=rounds,
+                         client_sizes=ds["sizes"]).run(params0, batches)
     base = eval_loss(p_fd)
 
     rows = [("fdapt", "-", "-", 0.0, base, 0.0)]
@@ -51,8 +51,9 @@ def run(rounds: int = 3, steps: int = 4, seed: int = 0):
             saving = float(np.mean([
                 ffdapt.backward_flop_saving(full.n_layers, rnd)
                 for rnd in sched]))
-            p, _ = run_fdapt(cfg, opt, params0, batches, n_rounds=rounds,
-                             client_sizes=ds["sizes"], ffdapt=cfg_f)
+            p, _ = FedSession(cfg, opt, n_rounds=rounds,
+                              client_sizes=ds["sizes"],
+                              ffdapt=cfg_f).run(params0, batches)
             l = eval_loss(p)
             rows.append(("ffdapt", gamma, eps or "N-1", saving, l,
                          (l - base) / base * 100))

@@ -1,0 +1,13 @@
+#!/usr/bin/env bash
+# Benchmark smoke: run the efficiency benchmarks in tiny-config mode so the
+# scripts cannot silently rot (CI runs this after tier-1; see
+# .github/workflows/ci.yml).  Run from anywhere.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+
+echo "== comm_efficiency (tiny) =="
+python benchmarks/comm_efficiency.py --tiny
+
+echo "== ffdapt_efficiency (tiny) =="
+python benchmarks/ffdapt_efficiency.py --tiny

@@ -17,13 +17,14 @@ the session's strategy, repeat.  Two execution engines with identical math:
 
 The round "what" lives in ``RoundPlan`` (strategy, FFDAPT schedule, client
 participation, engine); the engines only supply the "how".  Every round
-reports upload bytes and tokens/s in ``RoundResult``.
+reports upload bytes and tokens/s in ``RoundResult``, plus a static
+compute/comm ledger (``flops_estimate`` / ``hbm_bytes_estimate`` /
+``comm_bytes``) derived from a scan-aware HLO analysis of the compiled
+client step (``repro.telemetry``) — computed once per distinct program and
+cached process-wide, so the per-round cost is a dictionary lookup.
 
 Per the paper (Appendix E.1): optimizers are re-initialized at the start of
 each round's local training; 1 local epoch per round; 15 rounds.
-
-``run_fdapt`` remains as a thin shim over ``FedSession`` for existing
-callers (deprecation path tracked in ROADMAP.md).
 """
 
 from __future__ import annotations
@@ -41,6 +42,7 @@ from repro.core.fedavg import broadcast_clients, fedavg_stacked
 from repro.core.strategy import FedAvg, FederatedStrategy
 from repro.models.steps import make_masked_train_step
 from repro.nn import param as P
+from repro.telemetry import batch_struct, client_step_cost
 
 
 @dataclasses.dataclass
@@ -53,6 +55,14 @@ class RoundResult:
     tokens: float = 0.0                   # tokens trained on this round
     tokens_per_s: float = 0.0
     clients: Optional[List[int]] = None   # participating client ids
+    # static ledger from the compiled client step (repro.telemetry).  With
+    # telemetry=False the compute terms are zero and comm_bytes keeps only
+    # its shape-derived wire components (down broadcast + upload) — the
+    # in-step collective term needs the compiled-program analysis.
+    flops_estimate: float = 0.0           # dot/conv FLOPs across all clients
+    hbm_bytes_estimate: float = 0.0       # HBM traffic across all clients
+    comm_bytes: int = 0                   # down broadcast + upload [+ in-step
+                                          # collective bytes, telemetry only]
 
 
 @dataclasses.dataclass
@@ -68,6 +78,7 @@ class RoundPlan:
     seed: int = 0                         # client-sampling seed
     client_sizes: Optional[Sequence[int]] = None   # n_k; default batch counts
     eval_fn: Optional[Callable[[Any], float]] = None
+    telemetry: bool = True                # per-round compute/comm ledger
 
 
 def _epoch(step, params, opt_state, batches: Sequence[Dict[str, Any]],
@@ -150,6 +161,13 @@ class FedSession:
                 self.cfg, self.optimizer, frozen=frozen, impl=self.plan.impl))
         return _STEP_CACHE[key]
 
+    def _step_cost(self, batch, *, frozen=None, masked=False):
+        """Cached telemetry for ONE client step of this session's program
+        family (same cache cardinality as the compiled-step cache)."""
+        return client_step_cost(self.cfg, self.optimizer, self.plan.strategy,
+                                batch_struct(batch), frozen=frozen,
+                                masked=masked, impl=self.plan.impl)
+
     def _run_sequential(self, params, client_batches, sizes, windows,
                         n_units):
         plan, optimizer, strategy = self.plan, self.optimizer, self.plan.strategy
@@ -159,11 +177,19 @@ class FedSession:
         for t in range(plan.n_rounds):
             t0 = time.perf_counter()
             part = _participants(rng, len(client_batches), plan.participation)
+            down = strategy.download_bytes(params, len(part))
             locals_, losses, tokens = [], [], 0.0
+            flops_e = hbm_e = coll_e = 0.0
             for k in part:
                 frozen = None
                 if windows is not None:
                     frozen = ffd.window_mask(n_units, windows[t][k])
+                if plan.telemetry:
+                    cost = self._step_cost(client_batches[k][0], frozen=frozen)
+                    steps_k = len(client_batches[k])
+                    flops_e += cost.flops * steps_k
+                    hbm_e += cost.hbm_bytes * steps_k
+                    coll_e += cost.collective_bytes * steps_k
                 opt_state = P.unbox(optimizer.init(params))
                 anchor = params if strategy.needs_anchor else None
                 p_k, _, loss, tok = _epoch(self._step_for(frozen), params,
@@ -179,7 +205,9 @@ class FedSession:
                 t, float(np.mean(losses)), dt,
                 windows[t] if windows else None,
                 upload_bytes=nbytes, tokens=tokens,
-                tokens_per_s=tokens / max(dt, 1e-9), clients=part))
+                tokens_per_s=tokens / max(dt, 1e-9), clients=part,
+                flops_estimate=flops_e, hbm_bytes_estimate=hbm_e,
+                comm_bytes=down + nbytes + int(coll_e)))
             if plan.eval_fn is not None:
                 history[-1].loss = plan.eval_fn(params)
         return params, history
@@ -242,6 +270,10 @@ class FedSession:
         rng = np.random.default_rng(plan.seed)
         w_all = jnp.asarray(sizes, jnp.float32)
         state = strategy.init_state(params)
+        # one program family for the whole session: a single cached analysis
+        # covers every round (masked FFDAPT has no per-window programs)
+        step_cost = (self._step_cost(client_batches[0][0], masked=use_mask)
+                     if plan.telemetry else None)
         history = []
         for t in range(plan.n_rounds):
             t0 = time.perf_counter()
@@ -263,10 +295,23 @@ class FedSession:
             jax.block_until_ready(loss)   # async dispatch would under-time
             dt = time.perf_counter() - t0
             toks = float(toks)
+            nbytes = strategy.upload_bytes(params, len(part))
+            # rectangular schedule: every participant runs max_steps steps
+            # (short clients cycle their data), so the ledger multiplies the
+            # single analyzed program by steps x participants
+            n_steps = max_steps * len(part)
             history.append(RoundResult(
                 t, float(loss), dt, windows[t] if windows else None,
-                upload_bytes=strategy.upload_bytes(params, len(part)),
-                tokens=toks, tokens_per_s=toks / max(dt, 1e-9), clients=part))
+                upload_bytes=nbytes,
+                tokens=toks, tokens_per_s=toks / max(dt, 1e-9), clients=part,
+                flops_estimate=(step_cost.flops * n_steps
+                                if step_cost else 0.0),
+                hbm_bytes_estimate=(step_cost.hbm_bytes * n_steps
+                                    if step_cost else 0.0),
+                comm_bytes=(strategy.download_bytes(params, len(part))
+                            + nbytes
+                            + int(step_cost.collective_bytes * n_steps
+                                  if step_cost else 0))))
             if plan.eval_fn is not None:
                 history[-1].loss = plan.eval_fn(params)
         return params, history
@@ -277,23 +322,6 @@ class FedSession:
 # most N programs, and repeated sessions (benchmarks, resumed runs) pay zero
 # recompiles.
 _STEP_CACHE: Dict[Any, Callable] = {}
-
-
-def run_fdapt(cfg, optimizer, params, client_batches: List[List[Dict[str, Any]]],
-              *, n_rounds: int = 15, client_sizes: Optional[Sequence[int]] = None,
-              ffdapt: Optional[ffd.FFDAPTConfig] = None,
-              engine: str = "sequential", impl: str = "xla",
-              eval_fn: Optional[Callable[[Any], float]] = None,
-              strategy: Optional[FederatedStrategy] = None,
-              participation: float = 1.0, seed: int = 0):
-    """Back-compat shim over ``FedSession`` — prefer
-    ``FedSession(cfg, optimizer, RoundPlan(...)).run(params, batches)``.
-    Returns (final_params, [RoundResult...])."""
-    plan = RoundPlan(n_rounds=n_rounds, engine=engine, impl=impl,
-                     strategy=strategy if strategy is not None else FedAvg(),
-                     ffdapt=ffdapt, participation=participation, seed=seed,
-                     client_sizes=client_sizes, eval_fn=eval_fn)
-    return FedSession(cfg, optimizer, plan).run(params, client_batches)
 
 
 def make_fed_round_program(cfg, optimizer, *, impl: str = "xla"):

@@ -164,6 +164,13 @@ class FederatedStrategy:
         """Static per-round client->server bytes for ``k`` participants."""
         return k * tree_bytes(global_params)
 
+    def download_bytes(self, global_params: Any, k: int) -> int:
+        """Static per-round server->client bytes: the round-start broadcast
+        of the global model to ``k`` participants.  Dense for every strategy
+        here — ``Compressed`` only compresses the upload direction (client
+        deltas; the server's broadcast is the full aggregated model)."""
+        return k * tree_bytes(global_params)
+
 
 @dataclasses.dataclass(frozen=True)
 class FedAvg(FederatedStrategy):

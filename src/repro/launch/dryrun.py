@@ -18,7 +18,6 @@ Writes one JSON artifact per run under benchmarks/results/dryrun/.
 import argparse
 import dataclasses
 import json
-import re
 import time
 import traceback
 from typing import Any, Dict, Optional
@@ -27,13 +26,13 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec
 
-from repro import optim
+from repro import optim, telemetry
 from repro.configs import ASSIGNED, get_config
-from repro.launch import hlo_analysis
 from repro.configs.shapes import SHAPES, input_specs, shape_config
 from repro.launch import mesh as meshlib
 from repro.models.model import init_model
-from repro.models.steps import make_prefill_step, make_serve_step, make_train_step
+from repro.models.steps import (abstract_train_state, make_prefill_step,
+                                make_serve_step, make_train_step)
 from repro.nn import param as P
 from repro.sharding.ctx import activation_sharding
 from repro.sharding.rules import (DECODE_RULES, DEFAULT_RULES,
@@ -42,15 +41,6 @@ from repro.sharding.rules import (DECODE_RULES, DEFAULT_RULES,
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                            "benchmarks", "results", "dryrun")
-
-_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
-                "collective-permute")
-
-_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
-                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
-                "f64": 8, "c64": 8, "c128": 16}
-
-_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
 
 
 @dataclasses.dataclass
@@ -63,41 +53,6 @@ class Knobs:
     impl: str = "xla"                         # "chunked": blockwise SSM scans
     frozen_frac: float = 0.0                  # FFDAPT window fraction (train)
     moe_groups: int = 0                       # local (per-group) MoE dispatch
-
-
-def _parse_shapes(text: str) -> int:
-    """Sum byte-size of every typed shape literal in an HLO op result."""
-    total = 0
-    for dt, dims in _SHAPE_RE.findall(text):
-        if dt not in _DTYPE_BYTES:
-            continue
-        n = 1
-        for d in dims.split(","):
-            if d:
-                n *= int(d)
-        total += n * _DTYPE_BYTES[dt]
-    return total
-
-
-_OP_RE = re.compile(r"=\s+(.+?)\s+([\w-]+?)(?:\.\d+)?\(")
-
-
-def collective_bytes(hlo_text: str) -> Dict[str, int]:
-    """Per-collective-kind byte totals from the partitioned HLO.  HLO line
-    format: ``%name = <result shapes> <opcode>(operands...)``; we sum the
-    RESULT shape bytes of every collective op (per-device bytes moved is
-    proportional; ring all-reduce moves ~2x this — noted in the report)."""
-    out = {k: 0 for k in _COLLECTIVES}
-    for line in hlo_text.splitlines():
-        m = _OP_RE.search(line)
-        if not m:
-            continue
-        result_ty, op = m.group(1), m.group(2)
-        for kind in _COLLECTIVES:
-            if op == kind or op.startswith(kind + "-start"):
-                out[kind] += _parse_shapes(result_ty)
-                break
-    return out
 
 
 def count_params_split(cfg):
@@ -129,12 +84,6 @@ def model_flops(cfg, spec) -> float:
     return 2.0 * active * spec.global_batch          # decode: one token
 
 
-def _abstract_state(cfg, optimizer):
-    """(boxed params, boxed opt state) as ShapeDtypeStructs — no allocation."""
-    def full(key):
-        p = init_model(key, cfg)
-        return p, optimizer.init(p)
-    return jax.eval_shape(full, jax.random.PRNGKey(0))
 
 
 def lower_pair(arch: str, shape: str, *, multi_pod: bool = False,
@@ -164,7 +113,7 @@ def lower_pair(arch: str, shape: str, *, multi_pod: bool = False,
     if spec.kind == "train":
         sdt = jnp.dtype(knobs.opt_state_dtype) if knobs.opt_state_dtype else None
         optimizer = optim.adam(5e-5, state_dtype=sdt)
-        params_b, opt_b = _abstract_state(cfg, optimizer)
+        params_b, opt_b = abstract_train_state(cfg, optimizer, boxed=True)
         p_sh = tree_shardings(params_b, mesh, rules)
         o_sh = tree_shardings(opt_b, mesh, rules)
         frozen = None
@@ -211,10 +160,10 @@ def lower_pair(arch: str, shape: str, *, multi_pod: bool = False,
     t_compile = time.perf_counter() - t0
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = telemetry.xla_cost(compiled)
     # scan-aware static analysis of the partitioned HLO (cost_analysis counts
     # a while body once; the analyzer multiplies by trip count)
-    stats = hlo_analysis.analyze(compiled.as_text())
+    stats = telemetry.analyze(compiled.as_text())
     coll = {k: int(v) for k, v in stats.collective_bytes.items()}
 
     flops = float(stats.dot_flops)
@@ -314,7 +263,7 @@ def lower_fed_round(arch: str = "distilbert-mlm", *, clients: int = 2,
             P.unbox(spb), P.unbox(sob), P.unbox(batch), fmasks, sizes)
     compiled = lowered.compile()
     t_compile = time.perf_counter() - t0
-    stats = hlo_analysis.analyze(compiled.as_text())
+    stats = telemetry.analyze(compiled.as_text())
     mem = compiled.memory_analysis()
     coll = {k: int(v) for k, v in stats.collective_bytes.items()}
     return {

@@ -110,10 +110,14 @@ def main() -> None:
              if h.clients is not None and len(h.clients) < args.clients else "")
         print(f"round {h.round:3d}  loss {h.loss:7.4f}  {h.round_time_s:6.2f}s"
               f"  up {h.upload_bytes / 2**20:7.1f}MB  "
+              f"comm {h.comm_bytes / 2**20:7.1f}MB  "
+              f"{h.flops_estimate / 1e9:8.2f} GFLOP  "
               f"{h.tokens_per_s:8.0f} tok/s{w}{c}")
     print(f"total {wall:.1f}s; mean round "
           f"{np.mean([h.round_time_s for h in hist]):.2f}s; upload "
-          f"{sum(h.upload_bytes for h in hist) / 2**20:.1f}MB")
+          f"{sum(h.upload_bytes for h in hist) / 2**20:.1f}MB; comm "
+          f"{sum(h.comm_bytes for h in hist) / 2**20:.1f}MB; compute "
+          f"{sum(h.flops_estimate for h in hist) / 1e12:.3f} TFLOP (ledger)")
 
     eval_step = jax.jit(make_eval_step(cfg))
     heldout = make_client_datasets(held_docs,

@@ -18,8 +18,26 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.models.model import apply_model, init_cache
+from repro.models.model import apply_model, init_cache, init_model
 from repro.optim import apply_updates, clip_by_global_norm
+
+
+def abstract_train_state(cfg, optimizer, *, boxed: bool = False
+                         ) -> Tuple[Any, Any]:
+    """(params, opt_state) as ShapeDtypeStructs — no allocation.  The shared
+    entry point for everything that lowers a train step on abstract inputs
+    (dry-run, telemetry).  ``boxed=True`` keeps the sharding-axis boxes (the
+    dry-run derives shardings from them)."""
+    from repro.nn import param as P
+
+    def full(key):
+        p = init_model(key, cfg)
+        return p, optimizer.init(p)
+
+    pb, ob = jax.eval_shape(full, jax.random.PRNGKey(0))
+    if boxed:
+        return pb, ob
+    return P.unbox(pb), P.unbox(ob)
 
 
 def lm_loss(logits: jax.Array, targets: jax.Array, loss_mask: jax.Array):

@@ -1,0 +1,25 @@
+"""Static compute/comm telemetry: scan-aware roofline analysis of compiled
+HLO (:mod:`repro.telemetry.cost` over :mod:`repro.telemetry.hlo`) and cached
+per-client-step costs for the federated round ledger
+(:mod:`repro.telemetry.step`)."""
+
+from repro.telemetry.cost import (COLLECTIVES, HloStats, analyze,
+                                  collective_kind, conv_flops, dot_flops,
+                                  multiplicities, op_hbm_bytes,
+                                  top_contributors, xla_cost, xla_flops)
+from repro.telemetry.hlo import (DTYPE_BYTES, Computation, Op,
+                                 cond_trip_count, entry_name, parse_op,
+                                 parse_computations, shape_bytes, shape_dims,
+                                 trip_count, while_parts)
+from repro.telemetry.step import (StepCost, batch_struct, client_step_cost,
+                                  train_batch_struct)
+
+__all__ = [
+    "COLLECTIVES", "DTYPE_BYTES", "Computation", "HloStats", "Op",
+    "StepCost", "analyze", "batch_struct", "client_step_cost",
+    "collective_kind", "cond_trip_count", "conv_flops", "dot_flops",
+    "entry_name", "multiplicities", "op_hbm_bytes", "parse_computations",
+    "parse_op", "shape_bytes", "shape_dims", "top_contributors",
+    "train_batch_struct", "trip_count", "while_parts", "xla_cost",
+    "xla_flops",
+]

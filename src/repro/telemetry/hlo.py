@@ -1,0 +1,239 @@
+"""HLO text parsing: computations, ops, typed operands, while trip counts.
+
+The compiled-module dump (``compiled.as_text()``) is the one artifact every
+backend produces; this module turns it into a small object model the cost
+rules (:mod:`repro.telemetry.cost`) walk.  Parsing notes that matter for
+correctness:
+
+  * Operands are printed WITH their types in full dumps
+    (``dot(f32[17,33]{1,0} %Arg_0.1, ...)``), and tuple-typed operands nest
+    parentheses (``get-tuple-element((s32[], f32[4]{0}) %arg, ...)``), so the
+    operand list must be split with a balanced-delimiter scan — a first-``)``
+    split silently drops every operand type, which zeroes both the dot
+    contracting dims and the operand HBM bytes.
+  * While trip counts come from the op's own
+    ``backend_config={"known_trip_count":{"n":...}}`` when the compiler
+    recorded one (it does for ``lax.scan``), with the seed heuristic — the
+    largest integer constant in the condition computation — as fallback.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {"pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+               "f8e5m2": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+               "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+               "c64": 8, "c128": 16, "token": 0}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def shape_bytes(text: str) -> int:
+    """Total byte size of every typed shape literal in ``text`` (a result or
+    operand type — tuple types sum their elements)."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def shape_dims(text: str) -> List[int]:
+    """Dims of the FIRST shape literal in ``text`` ([] for scalars/no match)."""
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    result: str                  # result type text (may be a tuple type)
+    opcode: str
+    rest: str                    # operand list + attributes after "opcode("
+    is_root: bool = False
+    operand_names: List[str] = dataclasses.field(default_factory=list)
+    operand_types: List[str] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[Op] = dataclasses.field(default_factory=list)
+    symtab: Dict[str, str] = dataclasses.field(default_factory=dict)
+
+    def operand_type(self, op: Op, i: int) -> str:
+        """Type text of operand ``i``: inline type if printed, else symtab."""
+        if i >= len(op.operand_names):
+            return ""
+        return op.operand_types[i] or self.symtab.get(op.operand_names[i], "")
+
+    def root(self) -> Optional[Op]:
+        for op in self.ops:
+            if op.is_root:
+                return op
+        return self.ops[-1] if self.ops else None
+
+
+_OPEN = {"(": ")", "[": "]", "{": "}"}
+_CLOSE = {")", "]", "}"}
+
+
+def _balanced_span(text: str, start: int = 0) -> int:
+    """Index one past the ``)`` matching the ``(`` at ``text[start]``."""
+    depth = 0
+    for i in range(start, len(text)):
+        ch = text[i]
+        if ch in _OPEN:
+            depth += 1
+        elif ch in _CLOSE:
+            depth -= 1
+            if depth == 0:
+                return i + 1
+    return len(text)
+
+
+def _split_top_commas(text: str) -> List[str]:
+    """Split on commas at delimiter depth 0 (layout/tuple commas stay put)."""
+    parts, depth, start = [], 0, 0
+    for i, ch in enumerate(text):
+        if ch in _OPEN:
+            depth += 1
+        elif ch in _CLOSE:
+            depth -= 1
+        elif ch == "," and depth == 0:
+            parts.append(text[start:i])
+            start = i + 1
+    parts.append(text[start:])
+    return [p.strip() for p in parts if p.strip()]
+
+
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*")
+_OPCODE_RE = re.compile(r"^([\w\-]+)\(")
+
+
+def parse_op(line: str) -> Optional[Op]:
+    """One instruction line -> Op, or None for non-instruction lines."""
+    m = _NAME_RE.match(line)
+    if not m:
+        return None
+    is_root = line.lstrip().startswith("ROOT ")
+    name, rest = m.group(1), line[m.end():]
+    if rest.startswith("("):                    # tuple-shaped result
+        end = _balanced_span(rest)
+        result, rest = rest[:end], rest[end:].lstrip()
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        result, rest = rest[:sp], rest[sp + 1:].lstrip()
+    m = _OPCODE_RE.match(rest)
+    if not m:
+        return None
+    opcode = m.group(1)
+    rest = rest[m.end():]                       # operands..) , attributes
+    op = Op(name, result, opcode, rest, is_root)
+    # operand list: everything up to the ")" that closes the opcode's "("
+    end = _balanced_span("(" + rest) - 1        # index into rest
+    for tok in _split_top_commas(rest[:max(end - 1, 0)]):
+        # "<type> %name" | "%name" | literal (skipped)
+        pct = tok.rfind("%")
+        if pct < 0:
+            continue
+        op.operand_names.append(tok[pct + 1:].strip())
+        op.operand_types.append(tok[:pct].strip())
+    return op
+
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+
+
+def parse_computations(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            # computation headers start at column 0, declare "->", end in "{"
+            if line and not line[0].isspace() and "->" in line \
+                    and line.endswith("{"):
+                m = _COMP_HDR.match(line)
+                if m:
+                    cur = Computation(m.group(1))
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        op = parse_op(line)
+        if op is not None:
+            cur.ops.append(op)
+            cur.symtab[op.name] = op.result
+    return comps
+
+
+def entry_name(comps: Dict[str, Computation], hlo: str) -> str:
+    m = re.search(r"^ENTRY\s+%?([\w.\-]+)", hlo, re.M)
+    if m and m.group(1) in comps:
+        return m.group(1)
+    return next(iter(comps))
+
+
+# ---------------------------------------------------------------------------
+# Control flow: called computations and while trip counts
+# ---------------------------------------------------------------------------
+
+_CALLED_RE = re.compile(
+    r"(?:condition|body|calls|to_apply|branch_computations)="
+    r"\{?%?([\w.\-]+(?:,\s*%?[\w.\-]+)*)\}?")
+
+
+def called_computations(op: Op) -> List[str]:
+    names: List[str] = []
+    for m in _CALLED_RE.finditer(op.rest):
+        for n in m.group(1).split(","):
+            names.append(n.strip().lstrip("%"))
+    return names
+
+
+def while_parts(op: Op) -> Tuple[Optional[str], Optional[str]]:
+    cond = re.search(r"condition=%?([\w.\-]+)", op.rest)
+    body = re.search(r"body=%?([\w.\-]+)", op.rest)
+    return (cond.group(1) if cond else None, body.group(1) if body else None)
+
+
+_TRIP_RE = re.compile(r'"known_trip_count"\s*:\s*\{\s*"n"\s*:\s*"?(\d+)"?')
+_SCALAR_CONST_RE = re.compile(r"^\s*(-?\d+)\s*\)")
+
+
+def cond_trip_count(cond: Computation) -> int:
+    """Fallback heuristic: scan conditions compare the induction variable
+    against the scan length — take the largest scalar integer constant."""
+    best = 1
+    for op in cond.ops:
+        if op.opcode == "constant":
+            m = _SCALAR_CONST_RE.match(op.rest)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+def trip_count(op: Op, comps: Dict[str, Computation]) -> int:
+    """Trip count of one ``while`` op: the compiler-recorded
+    ``known_trip_count`` when present, else the condition-constant heuristic."""
+    m = _TRIP_RE.search(op.rest)
+    if m:
+        return int(m.group(1))
+    cond, _ = while_parts(op)
+    if cond in comps:
+        return cond_trip_count(comps[cond])
+    return 1

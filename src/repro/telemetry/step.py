@@ -1,0 +1,103 @@
+"""Per-client-step compute/comm costs, cached per (config, strategy, window).
+
+``client_step_cost`` lowers + compiles the strategy's client train step on
+abstract inputs (ShapeDtypeStructs — no allocation) and runs the scan-aware
+HLO analyzer over the compiled text.  The result is cached process-wide on
+the program's identity — (cfg, optimizer, strategy client-step key, frozen
+window, masked, impl, batch shapes) — so a federated session pays one
+analysis per distinct compiled program (the same cardinality as the engine's
+own step cache), and repeated sessions and benchmarks pay zero.
+
+Estimates are static: they describe the compiled program, not a measured
+run.  On CPU/interpret hosts the numbers are per-(single-)device; on a real
+sharded mesh they are per-device terms of the partitioned program.
+
+Cost note: this is a SECOND compile of the engine's program family — jax
+exposes no way to read the HLO text back out of a jitted function's own
+executable cache, and ``jit(f).lower().compile()`` does not pre-populate it.
+The price is one extra compile per (cfg, strategy, window, impl) family,
+amortized across every round, session, and benchmark in the process;
+``RoundPlan(telemetry=False)`` skips it for compile-time-sensitive sweeps.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.telemetry.cost import analyze
+
+
+@dataclasses.dataclass(frozen=True)
+class StepCost:
+    """Roofline terms of ONE compiled client train step."""
+
+    flops: float                      # analyzer dot/conv FLOPs
+    hbm_bytes: float                  # analyzer HBM traffic
+    collective_bytes: float           # intra-program collective result bytes
+
+
+def train_batch_struct(cfg, batch: int, seq: int) -> Dict[str, Any]:
+    """Abstract train batch for any arch in the zoo (mirrors the concrete
+    batches ``repro.core.noniid`` builds)."""
+    ids = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    out = {"tokens": ids, "targets": ids,
+           "loss_mask": jax.ShapeDtypeStruct((batch, seq), jnp.float32)}
+    if cfg.arch_type == "vlm":
+        out["image_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.n_image_tokens, cfg.d_model), jnp.float32)
+    if cfg.arch_type == "audio":
+        out["frames"] = jax.ShapeDtypeStruct(
+            (batch, cfg.n_audio_frames, cfg.d_model), jnp.float32)
+    return out
+
+
+def batch_struct(batch: Dict[str, Any]) -> Dict[str, Any]:
+    """Concrete batch -> abstract template (shape/dtype only)."""
+    return jax.tree.map(lambda l: jax.ShapeDtypeStruct(jnp.shape(l),
+                                                       jnp.asarray(l).dtype),
+                        batch)
+
+
+def _batch_key(batch_sds: Dict[str, Any]) -> Tuple:
+    leaves, treedef = jax.tree.flatten(batch_sds)
+    return (str(treedef),) + tuple((l.shape, str(l.dtype)) for l in leaves)
+
+
+_COST_CACHE: Dict[Tuple, StepCost] = {}
+
+
+def client_step_cost(cfg, optimizer, strategy, batch_sds: Dict[str, Any], *,
+                     frozen: Optional[Tuple[bool, ...]] = None,
+                     masked: bool = False, impl: str = "xla") -> StepCost:
+    """Analyze (cached) the compiled client step a round engine would run.
+
+    ``frozen``/``masked``/``impl`` mirror ``strategy.make_client_step``; the
+    cache key holds strong refs to cfg/optimizer (same discipline as the
+    engines' step cache — an id()-keyed entry could alias after GC)."""
+    key = (cfg, optimizer, strategy.client_step_key(), strategy.needs_anchor,
+           frozen, masked, impl, _batch_key(batch_sds))
+    if key in _COST_CACHE:
+        return _COST_CACHE[key]
+
+    from repro.models.steps import abstract_train_state
+    params_sds, opt_sds = abstract_train_state(cfg, optimizer)
+    step = strategy.make_client_step(cfg, optimizer, frozen=frozen,
+                                     masked=masked, impl=impl)
+    args = [params_sds, opt_sds]
+    if strategy.needs_anchor:
+        args.append(params_sds)
+    args.append(batch_sds)
+    if masked:
+        from repro.models.model import n_freeze_units
+        args.append(jax.ShapeDtypeStruct((n_freeze_units(cfg),), jnp.float32))
+    compiled = jax.jit(step).lower(*args).compile()
+    stats = analyze(compiled.as_text())
+    cost = StepCost(flops=float(stats.dot_flops),
+                    hbm_bytes=float(stats.hbm_bytes),
+                    collective_bytes=float(stats.collective_total))
+    _COST_CACHE[key] = cost
+    return cost

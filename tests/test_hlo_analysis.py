@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.launch import hlo_analysis as H
+from repro import telemetry as T
 
 
 def _grad_prog(unroll):
@@ -25,8 +25,8 @@ X = jnp.zeros((32, 256))
 
 def test_analyzer_matches_cost_analysis_unrolled():
     c = jax.jit(_grad_prog(True)).lower(W, X).compile()
-    want = float(c.cost_analysis()["flops"])
-    got = H.analyze(c.as_text()).dot_flops
+    want = T.xla_flops(c)
+    got = T.analyze(c.as_text()).dot_flops
     assert abs(got - want) / want < 0.05
 
 
@@ -34,26 +34,41 @@ def test_analyzer_scan_counts_trip():
     """Scanned program: analyzer must count ~L x body (cost_analysis doesn't)."""
     cs = jax.jit(_grad_prog(False)).lower(W, X).compile()
     cu = jax.jit(_grad_prog(True)).lower(W, X).compile()
-    scanned = H.analyze(cs.as_text()).dot_flops
-    unrolled = float(cu.cost_analysis()["flops"])
+    scanned = T.analyze(cs.as_text()).dot_flops
+    unrolled = T.xla_flops(cu)
     # scanned remat keeps the last layer's recompute (no DCE) -> up to 4/3
     assert 0.9 * unrolled < scanned < 1.5 * unrolled
     # and cost_analysis on the scanned program is known to undercount
-    assert float(cs.cost_analysis()["flops"]) < 0.5 * scanned
+    assert T.xla_flops(cs) < 0.5 * scanned
 
 
 def test_trip_count_extraction():
     def f(xs, c):
         return jax.lax.scan(lambda c, x: (c + x, None), c, xs)[0]
     co = jax.jit(f).lower(jnp.zeros((23, 4)), jnp.zeros((4,))).compile()
-    comps = H.parse_computations(co.as_text())
+    comps = T.parse_computations(co.as_text())
     trips = []
     for comp in comps.values():
         for op in comp.ops:
             if op.opcode == "while":
-                cond, _ = H._while_parts(op)
+                trips.append(T.trip_count(op, comps))
+    assert 23 in trips
+
+
+def test_trip_count_condition_fallback():
+    """Without a recorded known_trip_count the condition-constant heuristic
+    must still find the scan length."""
+    def f(xs, c):
+        return jax.lax.scan(lambda c, x: (c + x, None), c, xs)[0]
+    co = jax.jit(f).lower(jnp.zeros((23, 4)), jnp.zeros((4,))).compile()
+    comps = T.parse_computations(co.as_text())
+    trips = []
+    for comp in comps.values():
+        for op in comp.ops:
+            if op.opcode == "while":
+                cond, _ = T.while_parts(op)
                 if cond in comps:
-                    trips.append(H.trip_count(comps[cond]))
+                    trips.append(T.cond_trip_count(comps[cond]))
     assert 23 in trips
 
 
@@ -67,14 +82,26 @@ def test_dot_flops_formula():
     def f(a, b):
         return jnp.einsum("ij,jk->ik", a, b)
     co = jax.jit(f).lower(jnp.zeros((17, 33)), jnp.zeros((33, 9))).compile()
-    got = H.analyze(co.as_text()).dot_flops
+    got = T.analyze(co.as_text()).dot_flops
     assert got == pytest.approx(2 * 17 * 33 * 9, rel=0.01)
+
+
+def test_dot_flops_batched():
+    """Batch dims count once (via the result), contracting dims once (via
+    the lhs) — the dot_general rule the seed analyzer miscounted."""
+    def f(a, b):
+        return jnp.einsum("bij,bjk->bik", a, b)
+    co = jax.jit(f).lower(jnp.zeros((5, 17, 33)), jnp.zeros((5, 33, 9))
+                          ).compile()
+    got = T.analyze(co.as_text()).dot_flops
+    assert got == pytest.approx(2 * 5 * 17 * 33 * 9, rel=0.01)
+    assert got == pytest.approx(T.xla_flops(co), rel=0.01)
 
 
 def test_hbm_bytes_order_of_magnitude():
     def f(a, b):
         return a @ b
     co = jax.jit(f).lower(jnp.zeros((512, 512)), jnp.zeros((512, 512))).compile()
-    got = H.analyze(co.as_text()).hbm_bytes
+    got = T.analyze(co.as_text()).hbm_bytes
     want = 3 * 512 * 512 * 4              # 2 reads + 1 write
     assert 0.5 * want < got < 4 * want

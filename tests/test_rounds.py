@@ -10,7 +10,7 @@ from repro import optim
 from repro.configs import get_config
 from repro.core.ffdapt import FFDAPTConfig
 from repro.core.noniid import make_client_datasets
-from repro.core.rounds import run_fdapt
+from repro.core.rounds import FedSession, RoundPlan
 from repro.data.corpus import generate_corpus
 from repro.models.model import init_model
 from repro.models.steps import make_eval_step, make_train_step
@@ -42,21 +42,22 @@ def _maxdiff(a, b):
 
 def test_sequential_equals_parallel(params0):
     batches, sizes = _clients()
-    p1, h1 = run_fdapt(CFG, optim.adam(1e-4), params0, batches, n_rounds=2,
-                       client_sizes=sizes, engine="sequential")
-    p2, h2 = run_fdapt(CFG, optim.adam(1e-4), params0, batches, n_rounds=2,
-                       client_sizes=sizes, engine="parallel")
+    plan = RoundPlan(n_rounds=2, client_sizes=sizes)
+    p1, h1 = FedSession(CFG, optim.adam(1e-4), plan,
+                        engine="sequential").run(params0, batches)
+    p2, h2 = FedSession(CFG, optim.adam(1e-4), plan,
+                        engine="parallel").run(params0, batches)
     assert _maxdiff(p1, p2) < 1e-5
     assert abs(h1[-1].loss - h2[-1].loss) < 1e-3
 
 
 def test_ffdapt_static_vs_masked_engines(params0):
     batches, sizes = _clients()
-    ffd = FFDAPTConfig()
-    p1, _ = run_fdapt(CFG, optim.adam(1e-4), params0, batches, n_rounds=2,
-                      client_sizes=sizes, ffdapt=ffd, engine="sequential")
-    p2, _ = run_fdapt(CFG, optim.adam(1e-4), params0, batches, n_rounds=2,
-                      client_sizes=sizes, ffdapt=ffd, engine="parallel")
+    plan = RoundPlan(n_rounds=2, client_sizes=sizes, ffdapt=FFDAPTConfig())
+    p1, _ = FedSession(CFG, optim.adam(1e-4), plan,
+                       engine="sequential").run(params0, batches)
+    p2, _ = FedSession(CFG, optim.adam(1e-4), plan,
+                       engine="parallel").run(params0, batches)
     assert _maxdiff(p1, p2) < 5e-4
 
 
@@ -73,10 +74,11 @@ def test_fdapt_learns_and_ffdapt_tracks(params0):
         return float(np.mean([float(eval_step(p, b)["loss"]) for b in heldout]))
 
     init_loss = eval_loss(params0)
-    p_fd, _ = run_fdapt(CFG, optim.adam(1e-3), params0, batches, n_rounds=3,
-                        client_sizes=sizes)
-    p_ffd, _ = run_fdapt(CFG, optim.adam(1e-3), params0, batches, n_rounds=3,
-                         client_sizes=sizes, ffdapt=FFDAPTConfig())
+    p_fd, _ = FedSession(CFG, optim.adam(1e-3), n_rounds=3,
+                         client_sizes=sizes).run(params0, batches)
+    p_ffd, _ = FedSession(CFG, optim.adam(1e-3), n_rounds=3,
+                          client_sizes=sizes,
+                          ffdapt=FFDAPTConfig()).run(params0, batches)
     l_fd, l_ffd = eval_loss(p_fd), eval_loss(p_ffd)
     assert l_fd < init_loss
     assert l_ffd < init_loss

@@ -11,7 +11,7 @@ from repro import optim
 from repro.configs import get_config
 from repro.core.ffdapt import FFDAPTConfig
 from repro.core.noniid import make_client_datasets
-from repro.core.rounds import run_fdapt
+from repro.core.rounds import FedSession
 from repro.data.corpus import generate_corpus
 from repro.models.model import init_model
 from repro.models.steps import make_eval_step, make_train_step
@@ -45,16 +45,16 @@ def test_centralized_vs_fdapt_parity(setup):
 
     # centralized = 1 client, same total data/steps
     cen = make_client_datasets(docs, CFG, k=1, batch=2, seq=32)
-    p_cen, _ = run_fdapt(CFG, optim.adam(5e-4), params,
-                         [cen["batches"][0][:8]], n_rounds=2)
+    p_cen, _ = FedSession(CFG, optim.adam(5e-4), n_rounds=2).run(
+        params, [cen["batches"][0][:8]])
     l_cen = eval_loss(p_cen)
 
     results = {}
     for skew in ("iid", "quantity"):
         ds = make_client_datasets(docs, CFG, k=2, skew=skew, batch=2, seq=32)
         bs = [b[:4] for b in ds["batches"]]
-        p_fd, _ = run_fdapt(CFG, optim.adam(5e-4), params, bs, n_rounds=2,
-                            client_sizes=ds["sizes"])
+        p_fd, _ = FedSession(CFG, optim.adam(5e-4), n_rounds=2,
+                             client_sizes=ds["sizes"]).run(params, bs)
         results[skew] = eval_loss(p_fd)
 
     assert l_cen < init
@@ -70,10 +70,11 @@ def test_ffdapt_faster_and_close(setup):
     docs, params, eval_loss = setup
     ds = make_client_datasets(docs, CFG, k=2, skew="iid", batch=2, seq=32)
     bs = [b[:4] for b in ds["batches"]]
-    p_fd, _ = run_fdapt(CFG, optim.adam(5e-4), params, bs, n_rounds=2,
-                        client_sizes=ds["sizes"])
-    p_ffd, hist = run_fdapt(CFG, optim.adam(5e-4), params, bs, n_rounds=2,
-                            client_sizes=ds["sizes"], ffdapt=FFDAPTConfig())
+    p_fd, _ = FedSession(CFG, optim.adam(5e-4), n_rounds=2,
+                         client_sizes=ds["sizes"]).run(params, bs)
+    p_ffd, hist = FedSession(CFG, optim.adam(5e-4), n_rounds=2,
+                             client_sizes=ds["sizes"],
+                             ffdapt=FFDAPTConfig()).run(params, bs)
     assert abs(eval_loss(p_ffd) - eval_loss(p_fd)) / eval_loss(p_fd) < 0.05
     from repro.core.ffdapt import backward_flop_saving
     for h in hist:

@@ -1,0 +1,279 @@
+"""Telemetry package: golden-HLO parser fixtures, property tests for the
+byte/FLOP rules, and the RoundResult ledger on both round engines."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st
+from repro import optim, telemetry as T
+
+
+# ---------------------------------------------------------------------------
+# Golden HLO fixtures (hand-written module text with known totals)
+# ---------------------------------------------------------------------------
+
+_WHILE_HLO = """\
+HloModule golden_while
+
+%body (p.1: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p.1 = (s32[], f32[8,8]) parameter(0)
+  %i.1 = s32[] get-tuple-element((s32[], f32[8,8]) %p.1), index=0
+  %x.1 = f32[8,8] get-tuple-element((s32[], f32[8,8]) %p.1), index=1
+  %d.1 = f32[8,8] dot(f32[8,8] %x.1, f32[8,8] %x.1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %one = s32[] constant(1)
+  %i.2 = s32[] add(s32[] %i.1, s32[] %one)
+  ROOT %t.1 = (s32[], f32[8,8]) tuple(s32[] %i.2, f32[8,8] %d.1)
+}
+
+%cond (p.2: (s32[], f32[8,8])) -> pred[] {
+  %p.2 = (s32[], f32[8,8]) parameter(0)
+  %i.3 = s32[] get-tuple-element((s32[], f32[8,8]) %p.2), index=0
+  %n.1 = s32[] constant(7)
+  ROOT %lt = pred[] compare(s32[] %i.3, s32[] %n.1), direction=LT
+}
+
+ENTRY %main (a: f32[8,8]) -> f32[8,8] {
+  %a = f32[8,8] parameter(0)
+  %zero = s32[] constant(0)
+  %t.0 = (s32[], f32[8,8]) tuple(s32[] %zero, f32[8,8] %a)
+  %w = (s32[], f32[8,8]) while((s32[], f32[8,8]) %t.0), condition=%cond, body=%body{TRIP}
+  ROOT %out = f32[8,8] get-tuple-element((s32[], f32[8,8]) %w), index=1
+}
+"""
+
+
+@pytest.mark.parametrize("trip_attr", [
+    ', backend_config={"known_trip_count":{"n":"7"}}',   # compiler-recorded
+    "",                                                  # condition fallback
+])
+def test_golden_while_trip_propagation(trip_attr):
+    stats = T.analyze(_WHILE_HLO.replace("{TRIP}", trip_attr))
+    # dot: 2 * 8*8 * 8 per iteration, body runs 7x
+    assert stats.dot_flops == pytest.approx(7 * 2 * 8 * 8 * 8)
+
+
+def test_golden_while_body_bytes_scale_with_trips():
+    hlo7 = _WHILE_HLO.replace(
+        "{TRIP}", ', backend_config={"known_trip_count":{"n":"7"}}')
+    hlo1 = _WHILE_HLO.replace(
+        "{TRIP}", ', backend_config={"known_trip_count":{"n":"1"}}')
+    b7 = T.analyze(hlo7).hbm_bytes
+    b1 = T.analyze(hlo1).hbm_bytes
+    # per extra iteration: dot (3 x 8*8*4) + s32 add (4+4+4); per extra cond
+    # evaluation: compare (pred 1 + 4+4); everything outside the loop equal
+    assert b7 - b1 == pytest.approx(6 * (3 * 8 * 8 * 4 + 12) + 6 * 9)
+
+
+def test_golden_tuple_shaped_results():
+    comps = T.parse_computations(_WHILE_HLO.replace("{TRIP}", ""))
+    w = [op for op in comps["main"].ops if op.opcode == "while"][0]
+    assert T.shape_bytes(w.result) == 4 + 8 * 8 * 4
+    assert w.operand_names == ["t.0"]
+    assert T.shape_bytes(w.operand_types[0]) == 4 + 8 * 8 * 4
+
+
+_FUSION_HLO = """\
+HloModule golden_fusion
+
+%fc (fp0: f32[16,16], fp1: f32[16,16]) -> f32[16,16] {
+  %fp0 = f32[16,16] parameter(0)
+  %fp1 = f32[16,16] parameter(1)
+  %big = f32[16,16] multiply(f32[16,16] %fp0, f32[16,16] %fp1)
+  ROOT %fd = f32[16,16] dot(f32[16,16] %big, f32[16,16] %fp1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+
+ENTRY %main (a: f32[16,16], b: f32[16,16]) -> f32[16,16] {
+  %a = f32[16,16] parameter(0)
+  %b = f32[16,16] parameter(1)
+  ROOT %f = f32[16,16] fusion(f32[16,16] %a, f32[16,16] %b), kind=kLoop, calls=%fc
+}
+"""
+
+
+def test_golden_fusion_hides_internal_bytes_counts_internal_flops():
+    stats = T.analyze(_FUSION_HLO)
+    # the dot INSIDE the fusion still executes
+    assert stats.dot_flops == pytest.approx(2 * 16 * 16 * 16)
+    # but HBM traffic is only the fusion op's operands + result — the
+    # internal %big buffer never leaves VMEM
+    assert stats.hbm_bytes == pytest.approx(3 * 16 * 16 * 4)
+
+
+_COLLECTIVE_HLO = """\
+HloModule golden_collective
+
+%sum (sa: f32[], sb: f32[]) -> f32[] {
+  %sa = f32[] parameter(0)
+  %sb = f32[] parameter(1)
+  ROOT %s = f32[] add(f32[] %sa, f32[] %sb)
+}
+
+ENTRY %main (a: f32[64,4]) -> f32[64,4] {
+  %a = f32[64,4] parameter(0)
+  ROOT %ar = f32[64,4] all-reduce(f32[64,4] %a), replica_groups={}, to_apply=%sum
+}
+"""
+
+
+def test_golden_collective_bytes():
+    stats = T.analyze(_COLLECTIVE_HLO)
+    assert stats.collective_bytes["all-reduce"] == pytest.approx(64 * 4 * 4)
+    assert stats.collective_total == pytest.approx(64 * 4 * 4)
+
+
+# ---------------------------------------------------------------------------
+# Property tests for the byte / FLOP rules
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40)
+@given(dims=st.lists(st.integers(min_value=1, max_value=16), min_size=0,
+                     max_size=4),
+       dt=st.sampled_from(sorted(T.DTYPE_BYTES)))
+def test_shape_bytes_property(dims, dt):
+    text = f"{dt}[{','.join(str(d) for d in dims)}]{{1,0}}"
+    want = T.DTYPE_BYTES[dt]
+    for d in dims:
+        want *= d
+    assert T.shape_bytes(text) == want
+
+
+@settings(max_examples=40)
+@given(shapes=st.lists(st.lists(st.integers(min_value=1, max_value=9),
+                                min_size=1, max_size=3),
+                       min_size=1, max_size=3))
+def test_shape_bytes_tuple_property(shapes):
+    text = "(" + ", ".join(
+        f"f32[{','.join(str(d) for d in s)}]" for s in shapes) + ")"
+    want = sum(4 * int(np.prod(s)) for s in shapes)
+    assert T.shape_bytes(text) == want
+
+
+@settings(max_examples=40)
+@given(m=st.integers(min_value=1, max_value=64),
+       k=st.integers(min_value=1, max_value=64),
+       n=st.integers(min_value=1, max_value=64))
+def test_dot_flops_rule_property(m, k, n):
+    line = (f"  %d = f32[{m},{n}] dot(f32[{m},{k}] %a, f32[{k},{n}] %b), "
+            "lhs_contracting_dims={1}, rhs_contracting_dims={0}")
+    op = T.parse_op(line)
+    comp = T.Computation("c", [op], {})
+    assert T.dot_flops(op, comp) == pytest.approx(2.0 * m * k * n)
+
+
+@settings(max_examples=40)
+@given(b=st.integers(min_value=1, max_value=8),
+       m=st.integers(min_value=1, max_value=32),
+       k=st.integers(min_value=1, max_value=32),
+       n=st.integers(min_value=1, max_value=32))
+def test_dot_flops_batched_rule_property(b, m, k, n):
+    """Batch dims count once via the result; contracting dims via the lhs."""
+    line = (f"  %d = f32[{b},{m},{n}] dot(f32[{b},{m},{k}] %a, "
+            f"f32[{b},{k},{n}] %b), lhs_batch_dims={{0}}, "
+            "lhs_contracting_dims={2}, rhs_batch_dims={0}, "
+            "rhs_contracting_dims={1}")
+    op = T.parse_op(line)
+    comp = T.Computation("c", [op], {})
+    assert T.dot_flops(op, comp) == pytest.approx(2.0 * b * m * k * n)
+
+
+def test_parse_op_operand_types_from_symtab():
+    """Operands printed without inline types resolve through the symtab."""
+    op = T.parse_op("  %d = f32[4,4] dot(%a, %b), lhs_contracting_dims={0}")
+    comp = T.Computation("c", [op], {"a": "f32[9,4]", "b": "f32[9,4]"})
+    assert op.operand_names == ["a", "b"]
+    assert comp.operand_type(op, 0) == "f32[9,4]"
+    assert T.dot_flops(op, comp) == pytest.approx(2.0 * 4 * 4 * 9)
+
+
+# ---------------------------------------------------------------------------
+# RoundResult ledger: both engines, and agreement with XLA cost_analysis
+# ---------------------------------------------------------------------------
+
+def _session_inputs(steps=2, seed=0, batch=2, seq=32):
+    from repro.configs import get_config
+    from repro.core.noniid import make_client_datasets
+    from repro.data.corpus import generate_corpus
+    from repro.models.model import init_model
+    from repro.nn import param as P
+
+    cfg = get_config("distilbert-mlm").reduced()
+    docs = generate_corpus(80, seed=seed)
+    ds = make_client_datasets(docs, cfg, k=2, batch=batch, seq=seq, seed=seed)
+    batches = [b[:steps] for b in ds["batches"]]
+    params = P.unbox(init_model(jax.random.PRNGKey(seed), cfg))
+    return cfg, params, batches, ds["sizes"]
+
+
+def test_round_result_telemetry_parity_across_engines():
+    from repro.core.rounds import FedSession
+    from repro.core.strategy import FedAvg, tree_bytes
+
+    cfg, params, batches, sizes = _session_inputs()
+    opt = optim.adam(1e-4)
+    _, hs = FedSession(cfg, opt, n_rounds=1, client_sizes=sizes,
+                       engine="sequential").run(params, batches)
+    _, hp = FedSession(cfg, opt, n_rounds=1, client_sizes=sizes,
+                       engine="parallel").run(params, batches)
+    total_steps = sum(len(b) for b in batches)
+    for h in (hs[0], hp[0]):
+        assert h.flops_estimate > 0
+        assert h.hbm_bytes_estimate > 0
+        # single device: no in-step collectives -> comm = down + up
+        assert h.comm_bytes == 2 * tree_bytes(params) + h.upload_bytes
+    # same client-step program, same step counts -> identical ledgers
+    assert hs[0].flops_estimate == pytest.approx(hp[0].flops_estimate)
+    assert hs[0].hbm_bytes_estimate == pytest.approx(hp[0].hbm_bytes_estimate)
+    assert hs[0].comm_bytes == hp[0].comm_bytes
+    # and the per-step cost seen by the engines matches the cached analysis
+    cost = T.client_step_cost(cfg, opt, FedAvg(),
+                              T.batch_struct(batches[0][0]))
+    assert hs[0].flops_estimate == pytest.approx(cost.flops * total_steps)
+
+
+def test_round_result_telemetry_off():
+    from repro.core.rounds import FedSession
+
+    cfg, params, batches, sizes = _session_inputs()
+    _, h = FedSession(cfg, optim.adam(1e-4), n_rounds=1, client_sizes=sizes,
+                      telemetry=False).run(params, batches)
+    # no compiled-step analysis -> no compute ledger; the wire accounting
+    # (down broadcast + upload) is shape-derived and stays populated
+    assert h[0].flops_estimate == 0.0
+    assert h[0].hbm_bytes_estimate == 0.0
+    from repro.core.strategy import tree_bytes
+    assert h[0].comm_bytes == 2 * tree_bytes(params) + h[0].upload_bytes
+
+
+def test_ledger_matches_cost_analysis_on_unrolled_config():
+    """Acceptance: flops/hbm estimates within 5% of XLA cost_analysis on a
+    small config compiled WITHOUT loops (scan unrolled, no remat) — the
+    regime where cost_analysis itself is trustworthy.  cost_analysis counts
+    EVERY flop (optimizer elementwise, softmax) while the analyzer counts
+    dots, so the comparison uses a dot-dominated batch shape — per-param
+    elementwise work is fixed while dot work scales with tokens."""
+    from repro.core.rounds import FedSession
+    from repro.models.steps import abstract_train_state, make_train_step
+
+    cfg, params, batches, sizes = _session_inputs(batch=4, seq=128)
+    cfg = cfg.replace(scan_unroll=True, remat=False)
+    opt = optim.adam(1e-4)
+    _, hist = FedSession(cfg, opt, n_rounds=1, client_sizes=sizes).run(
+        params, batches)
+    total_steps = sum(len(b) for b in batches)
+
+    p_sds, o_sds = abstract_train_state(cfg, opt)
+    compiled = jax.jit(make_train_step(cfg, opt)).lower(
+        p_sds, o_sds, T.batch_struct(batches[0][0])).compile()
+    # the layer stack is unrolled (the FLOP-carrying loops); only dot-free
+    # bookkeeping loops like the embedding scatter-add may remain
+    want_flops = T.xla_flops(compiled) * total_steps
+    got = hist[0].flops_estimate
+    assert abs(got - want_flops) / want_flops < 0.05
+    # bytes: same order as cost_analysis' "bytes accessed" (fusion-hiding
+    # conventions differ; the magnitude must agree within 2x either way)
+    want_bytes = float(T.xla_cost(compiled).get("bytes accessed", 0.0))
+    if want_bytes:
+        ratio = hist[0].hbm_bytes_estimate / (want_bytes * total_steps)
+        assert 0.5 < ratio < 2.0

@@ -1,9 +1,16 @@
 """§Roofline assembler: read the dry-run JSON artifacts and emit the per
 (arch x shape x mesh) roofline table — the three terms in seconds, the
-dominant bottleneck, MODEL_FLOPS/HLO_FLOPs, and per-device memory."""
+dominant bottleneck, MODEL_FLOPS/HLO_FLOPs, and per-device memory.
+
+``--session`` additionally runs a small live ``FedSession`` and merges its
+per-round ``RoundResult`` ledger into the same table through the
+``repro.sim`` clock (``--device`` picks the fleet preset the rounds are
+timed on), so dry-run programs and real federated rounds are comparable
+rows."""
 
 from __future__ import annotations
 
+import argparse
 import glob
 import json
 import os
@@ -55,8 +62,66 @@ def table(rows=None, *, pods=None, baseline_only=True):
     return out
 
 
+def session_rows(history, arch: str = "session", device: str = "tpu-v4"):
+    """RoundResult ledger -> roofline rows on one device preset: the same
+    three terms in seconds the dry-run reports, derived from the round's
+    flops/hbm/comm estimates via the ``repro.sim`` clock."""
+    from repro.sim import PRESETS, device_roofline_s
+    dev = PRESETS[device]
+    out = []
+    for h in history:
+        rl = device_roofline_s(h.flops_estimate, h.hbm_bytes_estimate,
+                               h.comm_bytes, dev)
+        out.append({
+            "arch": arch, "shape": f"round{h.round}@{device}",
+            "pods": 0,
+            "compute_s": rl["compute"], "memory_s": rl["memory"],
+            "collective_s": rl["collective"],
+            "bottleneck": max(rl, key=rl.get),
+            "model_vs_hlo": 0.0, "mem_gib": 0.0, "compile_s": 0.0,
+        })
+    return out
+
+
+def run_session(arch: str = "distilbert-mlm", *, clients: int = 2,
+                rounds: int = 2, steps: int = 2, device: str = "tpu-v4"):
+    """Run a small real FedSession and ledger it (the live counterpart of
+    the dry-run artifacts)."""
+    import jax
+    from repro import optim
+    from repro.configs import get_config
+    from repro.core.noniid import make_client_datasets
+    from repro.core.rounds import FedSession
+    from repro.data.corpus import generate_corpus
+    from repro.models.model import init_model
+    from repro.nn import param as P
+
+    cfg = get_config(arch).reduced()
+    ds = make_client_datasets(generate_corpus(120, seed=0), cfg, k=clients,
+                              batch=2, seq=32)
+    batches = [b[:steps] for b in ds["batches"]]
+    params = P.unbox(init_model(jax.random.PRNGKey(0), cfg))
+    _, hist = FedSession(cfg, optim.adam(5e-5), n_rounds=rounds,
+                         client_sizes=ds["sizes"]).run(params, batches)
+    return session_rows(hist, arch=arch, device=device)
+
+
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--session", action="store_true",
+                    help="also run a small live FedSession and merge its "
+                         "per-round ledger into the table")
+    ap.add_argument("--arch", default="distilbert-mlm")
+    ap.add_argument("--device", default="tpu-v4",
+                    help="repro.sim device preset the session rounds are "
+                         "timed on")
+    ap.add_argument("--rounds", type=int, default=2)
+    args = ap.parse_args()
+
     rows = table(pods=1)
+    if args.session:
+        rows += run_session(args.arch, rounds=args.rounds,
+                            device=args.device)
     print("arch,shape,compute_s,memory_s,collective_s,bottleneck,"
           "model_vs_hlo,mem_gib")
     for r in rows:

@@ -1,0 +1,99 @@
+"""Fleet study: one real federated session, many simulated deployments.
+
+Trains a small FDAPT session once (the numbers are real — losses, ledger,
+per-client replay fields), then replays its round history on several device
+fleets under the three server schedules:
+
+  * sync FedAvg          — the round waits for the slowest client;
+  * deadline + over-select — stragglers are dropped (never below quorum);
+  * buffered async (FedBuff) — aggregate every K uploads; the observed
+    staleness schedule is fed back into ``AsyncFedAvg`` to run the learning
+    math the schedule implies.
+
+    PYTHONPATH=src python examples/fleet_study.py [--clients 4] [--rounds 3]
+"""
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro import optim
+from repro.configs import get_config
+from repro.core.noniid import make_client_datasets
+from repro.core.rounds import FedSession
+from repro.core.strategies import AsyncFedAvg
+from repro.data.corpus import generate_corpus
+from repro.models.model import init_model
+from repro.nn import param as P
+from repro.sim import make_fleet, simulate
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--steps", type=int, default=2)
+    ap.add_argument("--deadline", type=float, default=0.0,
+                    help="deadline seconds (default: 1.2x the homogeneous "
+                         "sync round)")
+    ap.add_argument("--buffer", type=int, default=2)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config("distilbert-mlm").reduced()
+    docs = generate_corpus(160, seed=args.seed)
+    ds = make_client_datasets(docs, cfg, k=args.clients, skew="quantity",
+                              batch=2, seq=32, seed=args.seed)
+    batches = [b[:args.steps] for b in ds["batches"]]
+    params = P.unbox(init_model(jax.random.PRNGKey(args.seed), cfg))
+
+    print(f"training: {args.clients} clients x {args.rounds} rounds "
+          f"(quantity skew, steps {[len(b) for b in batches]})")
+    params, hist = FedSession(cfg, optim.adam(5e-4), n_rounds=args.rounds,
+                              client_sizes=ds["sizes"]).run(params, batches)
+    for h in hist:
+        print(f"  round {h.round}  loss {h.loss:.4f}  "
+              f"{h.flops_estimate / 1e9:.1f} GFLOP  "
+              f"comm {h.comm_bytes / 2**20:.0f} MB")
+
+    # baseline deadline: a bit above the homogeneous sync round time
+    base = simulate(hist, make_fleet("uniform-a100", args.clients,
+                                     seed=args.seed), mode="sync")
+    deadline = args.deadline or 1.2 * base.mean_round_s
+
+    print(f"\n{'fleet':14s} {'sync_s':>9s} {'deadline_s':>10s} "
+          f"{'dropped':>7s} {'async_s':>9s} {'stale(tau:n)':>14s}")
+    for name in ("uniform-a100", "paper-2080ti", "silo-mixed", "edge-mixed",
+                 "crossdevice"):
+        fleet = make_fleet(name, args.clients, seed=args.seed)
+        sync = simulate(hist, fleet, mode="sync", seed=args.seed)
+        dl = simulate(hist, fleet, mode="deadline",
+                      deadline_s=deadline, seed=args.seed)
+        asy = simulate(hist, fleet, mode="async", buffer_size=args.buffer,
+                       seed=args.seed)
+        taus = ",".join(f"{t}:{n}" for t, n in
+                        sorted(asy.staleness_histogram().items()))
+        print(f"{name:14s} {sync.total_s:9.1f} {dl.total_s:10.1f} "
+              f"{dl.dropped_total:7d} {asy.total_s:9.1f} {taus:>14s}")
+
+    # close the loop: run the async schedule's staleness through the
+    # AsyncFedAvg learning math on the slowest fleet
+    fleet = make_fleet("edge-mixed", args.clients, seed=args.seed)
+    asy = simulate(hist, fleet, mode="async", buffer_size=args.buffer,
+                   seed=args.seed)
+    taus = tuple(tau for r in asy.rounds for tau in r.staleness)
+    strat = AsyncFedAvg(alpha=0.5, staleness=taus or (0,))
+    params2 = P.unbox(init_model(jax.random.PRNGKey(args.seed), cfg))
+    _, hist2 = FedSession(cfg, optim.adam(5e-4), n_rounds=args.rounds,
+                          client_sizes=ds["sizes"],
+                          strategy=strat).run(params2, batches)
+    print(f"\nasync learning math (edge-mixed schedule, "
+          f"taus={list(taus)}, s(tau)={[round(strat.discount(t), 3) for t in sorted(set(taus))]}):")
+    for a, b in zip(hist, hist2):
+        print(f"  round {a.round}  fedavg loss {a.loss:.4f}  "
+              f"asyncfedavg loss {b.loss:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -11,3 +11,6 @@ python benchmarks/comm_efficiency.py --tiny
 
 echo "== ffdapt_efficiency (tiny) =="
 python benchmarks/ffdapt_efficiency.py --tiny
+
+echo "== wallclock (tiny) =="
+python benchmarks/wallclock.py --tiny

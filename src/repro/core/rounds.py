@@ -22,6 +22,9 @@ compute/comm ledger (``flops_estimate`` / ``hbm_bytes_estimate`` /
 ``comm_bytes``) derived from a scan-aware HLO analysis of the compiled
 client step (``repro.telemetry``) — computed once per distinct program and
 cached process-wide, so the per-round cost is a dictionary lookup.
+``RoundPlan.simulate`` names a device fleet (``repro.sim``); the engines
+then also record each round's per-client replay ledger and its ideal
+synchronous wall-clock time on that fleet.
 
 Per the paper (Appendix E.1): optimizers are re-initialized at the start of
 each round's local training; 1 local epoch per round; 15 rounds.
@@ -63,6 +66,18 @@ class RoundResult:
     hbm_bytes_estimate: float = 0.0       # HBM traffic across all clients
     comm_bytes: int = 0                   # down broadcast + upload [+ in-step
                                           # collective bytes, telemetry only]
+    download_bytes: int = 0               # server->client bytes this round
+    # per-client replay ledger (aligned with ``clients``) — what the
+    # wall-clock simulator (repro.sim) needs to place each client's local
+    # work on a heterogeneous device: local step count, per-STEP compute
+    # terms (FFDAPT windows differ per client), and wire bytes.
+    client_steps: Optional[List[int]] = None
+    client_step_flops: Optional[List[float]] = None
+    client_step_hbm: Optional[List[float]] = None
+    client_upload_bytes: Optional[List[int]] = None
+    # filled when RoundPlan.simulate is set: ideal (dropout-free) sync
+    # round seconds on the plan's fleet (repro.sim.clock.sync_round_s)
+    sim_round_s: float = 0.0
 
 
 @dataclasses.dataclass
@@ -79,6 +94,13 @@ class RoundPlan:
     client_sizes: Optional[Sequence[int]] = None   # n_k; default batch counts
     eval_fn: Optional[Callable[[Any], float]] = None
     telemetry: bool = True                # per-round compute/comm ledger
+    # wall-clock simulation hook: a repro.sim Fleet, a named-fleet string
+    # ("edge-mixed", ...), or a {preset: weight} mixture.  When set, every
+    # RoundResult carries sim_round_s — the ideal synchronous round time on
+    # that fleet (slowest sampled client; requires telemetry=True for the
+    # compute terms).  Deadline/async schedules are post-hoc replays:
+    # repro.sim.events.simulate(history, fleet, mode=...).
+    simulate: Optional[Any] = None
 
 
 def _epoch(step, params, opt_state, batches: Sequence[Dict[str, Any]],
@@ -168,11 +190,19 @@ class FedSession:
                                 batch_struct(batch), frozen=frozen,
                                 masked=masked, impl=self.plan.impl)
 
+    def _fleet(self, n_clients: int):
+        """Resolve plan.simulate into a repro.sim Fleet (None = no sim)."""
+        if self.plan.simulate is None:
+            return None
+        from repro.sim.clock import resolve_fleet
+        return resolve_fleet(self.plan.simulate, n_clients, self.plan.seed)
+
     def _run_sequential(self, params, client_batches, sizes, windows,
                         n_units):
         plan, optimizer, strategy = self.plan, self.optimizer, self.plan.strategy
         rng = np.random.default_rng(plan.seed)
         state = strategy.init_state(params)
+        fleet = self._fleet(len(client_batches))
         history = []
         for t in range(plan.n_rounds):
             t0 = time.perf_counter()
@@ -180,13 +210,17 @@ class FedSession:
             down = strategy.download_bytes(params, len(part))
             locals_, losses, tokens = [], [], 0.0
             flops_e = hbm_e = coll_e = 0.0
+            c_steps, c_flops, c_hbm = [], [], []
             for k in part:
                 frozen = None
                 if windows is not None:
                     frozen = ffd.window_mask(n_units, windows[t][k])
+                steps_k = len(client_batches[k])
+                c_steps.append(steps_k)
                 if plan.telemetry:
                     cost = self._step_cost(client_batches[k][0], frozen=frozen)
-                    steps_k = len(client_batches[k])
+                    c_flops.append(cost.flops)
+                    c_hbm.append(cost.hbm_bytes)
                     flops_e += cost.flops * steps_k
                     hbm_e += cost.hbm_bytes * steps_k
                     coll_e += cost.collective_bytes * steps_k
@@ -201,13 +235,24 @@ class FedSession:
             params, state, nbytes = strategy.aggregate(
                 params, locals_, [sizes[k] for k in part], state)
             dt = time.perf_counter() - t0
-            history.append(RoundResult(
+            rr = RoundResult(
                 t, float(np.mean(losses)), dt,
                 windows[t] if windows else None,
                 upload_bytes=nbytes, tokens=tokens,
                 tokens_per_s=tokens / max(dt, 1e-9), clients=part,
                 flops_estimate=flops_e, hbm_bytes_estimate=hbm_e,
-                comm_bytes=down + nbytes + int(coll_e)))
+                comm_bytes=down + nbytes + int(coll_e),
+                download_bytes=down, client_steps=c_steps,
+                client_step_flops=c_flops or None,
+                client_step_hbm=c_hbm or None,
+                # aggregate() reports the exact round total; per-client
+                # shares are the static even split (Compressed tie-keeps
+                # can skew individual clients by a few entries)
+                client_upload_bytes=[nbytes // len(part)] * len(part))
+            if fleet is not None:
+                from repro.sim.clock import sync_round_s
+                rr.sim_round_s = sync_round_s(rr, fleet)
+            history.append(rr)
             if plan.eval_fn is not None:
                 history[-1].loss = plan.eval_fn(params)
         return params, history
@@ -274,6 +319,7 @@ class FedSession:
         # covers every round (masked FFDAPT has no per-window programs)
         step_cost = (self._step_cost(client_batches[0][0], masked=use_mask)
                      if plan.telemetry else None)
+        fleet = self._fleet(K)
         history = []
         for t in range(plan.n_rounds):
             t0 = time.perf_counter()
@@ -300,7 +346,8 @@ class FedSession:
             # (short clients cycle their data), so the ledger multiplies the
             # single analyzed program by steps x participants
             n_steps = max_steps * len(part)
-            history.append(RoundResult(
+            down = strategy.download_bytes(params, len(part))
+            rr = RoundResult(
                 t, float(loss), dt, windows[t] if windows else None,
                 upload_bytes=nbytes,
                 tokens=toks, tokens_per_s=toks / max(dt, 1e-9), clients=part,
@@ -308,10 +355,20 @@ class FedSession:
                                 if step_cost else 0.0),
                 hbm_bytes_estimate=(step_cost.hbm_bytes * n_steps
                                     if step_cost else 0.0),
-                comm_bytes=(strategy.download_bytes(params, len(part))
-                            + nbytes
+                comm_bytes=(down + nbytes
                             + int(step_cost.collective_bytes * n_steps
-                                  if step_cost else 0))))
+                                  if step_cost else 0)),
+                download_bytes=down,
+                client_steps=[max_steps] * len(part),
+                client_step_flops=([step_cost.flops] * len(part)
+                                   if step_cost else None),
+                client_step_hbm=([step_cost.hbm_bytes] * len(part)
+                                 if step_cost else None),
+                client_upload_bytes=[nbytes // len(part)] * len(part))
+            if fleet is not None:
+                from repro.sim.clock import sync_round_s
+                rr.sim_round_s = sync_round_s(rr, fleet)
+            history.append(rr)
             if plan.eval_fn is not None:
                 history[-1].loss = plan.eval_fn(params)
         return params, history

@@ -19,12 +19,13 @@ each, implemented server-side over the same round engines:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional, Sequence
+from typing import Any, Callable, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.fedavg import fedavg
+from repro.core.fedavg import fedavg, fedavg_stacked
+from repro.core.strategy import FederatedStrategy, tree_bytes
 
 
 # ---------------------------------------------------------------------------
@@ -50,6 +51,82 @@ def fedavgm_update(global_params: Any, client_params: Sequence[Any],
     new = jax.tree.map(lambda g, mo: (g.astype(jnp.float32) + lr * mo
                                       ).astype(g.dtype), global_params, m)
     return new, ServerState(momentum=m)
+
+
+# ---------------------------------------------------------------------------
+# Buffered-async aggregation (FedBuff-style)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AsyncFedAvg(FederatedStrategy):
+    """FedBuff-style staleness-discounted aggregation (Nguyen et al., 2022)
+    as a ``FederatedStrategy``.
+
+    In a real async deployment each buffered update k arrives with staleness
+    tau_k = (server version now) - (version client k downloaded).  The
+    server aggregates the buffer with discounted weights
+
+        w'_k = n_k x s(tau_k),   s(tau) = (1 + tau)^-alpha
+
+    then moves ``server_lr`` of the way to the discounted weighted mean.
+    The round engines execute synchronously, so they cannot *produce*
+    staleness — ``staleness[i]`` assigns client position i its tau (cycled;
+    empty = all fresh).  ``repro.sim.events.simulate_async`` produces the
+    taus a fleet's timing actually implies; feeding its observed schedule
+    back in here runs the learning math of that schedule — the simulator
+    and the strategy share this one discount rule.
+
+    Parity contract (pinned in tests/test_sim.py): with no staleness and
+    ``server_lr=1`` both layouts take the exact ``fedavg`` code path, so
+    AsyncFedAvg degenerates BITWISE to FedAvg on both engines.
+
+    The buffer size itself is a *schedule* parameter, not a learning-math
+    one — pass it to ``repro.sim.events.simulate_async(buffer_size=...)``;
+    the numeric engines aggregate every round as usual.
+    """
+
+    alpha: float = 0.5
+    server_lr: float = 1.0
+    staleness: Tuple[int, ...] = ()        # tau per client position (cycled)
+    name = "asyncfedavg"
+
+    def discount(self, tau: float) -> float:
+        """s(tau) = (1 + tau)^-alpha, the polynomial FedBuff discount."""
+        return float((1.0 + float(tau)) ** (-self.alpha))
+
+    def _taus(self, k: int):
+        if not self.staleness:
+            return [0] * k
+        return [self.staleness[i % len(self.staleness)] for i in range(k)]
+
+    def _fresh(self, k: int) -> bool:
+        return (self.server_lr == 1.0
+                and all(t == 0 for t in self._taus(k)))
+
+    def _server_step(self, global_params, mean):
+        return jax.tree.map(
+            lambda g, m: (g.astype(jnp.float32)
+                          + self.server_lr * (m.astype(jnp.float32)
+                                              - g.astype(jnp.float32))
+                          ).astype(g.dtype), global_params, mean)
+
+    def aggregate(self, global_params, client_params, sizes, state):
+        k = len(client_params)
+        nbytes = k * tree_bytes(global_params)
+        if self._fresh(k):                 # bitwise-FedAvg fast path
+            return fedavg(client_params, sizes), state, nbytes
+        w = [s * self.discount(t) for s, t in zip(sizes, self._taus(k))]
+        return (self._server_step(global_params, fedavg(client_params, w)),
+                state, nbytes)
+
+    def aggregate_stacked(self, global_params, stacked, weights, state):
+        k = int(weights.shape[0])
+        if self._fresh(k):
+            return fedavg_stacked(stacked, weights), state
+        d = jnp.asarray([self.discount(t) for t in self._taus(k)],
+                        jnp.float32)
+        mean = fedavg_stacked(stacked, weights * d)
+        return self._server_step(global_params, mean), state
 
 
 # ---------------------------------------------------------------------------

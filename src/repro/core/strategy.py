@@ -301,13 +301,14 @@ class Compressed(FederatedStrategy):
 # Registry (the ``--strategy`` / ``--compress`` driver surface)
 # ---------------------------------------------------------------------------
 
-STRATEGIES = ("fedavg", "fedavgm", "fedprox")
+STRATEGIES = ("fedavg", "fedavgm", "fedprox", "asyncfedavg")
 COMPRESSORS = ("none", "topk", "int8")
 
 
 def make_strategy(name: str = "fedavg", *, compress: str = "none",
                   mu: float = 0.01, beta: float = 0.9, server_lr: float = 1.0,
-                  frac: float = 0.1) -> FederatedStrategy:
+                  frac: float = 0.1, alpha: float = 0.5,
+                  staleness: Sequence[int] = ()) -> FederatedStrategy:
     """Build a strategy from flag-shaped arguments (see ``launch/train.py``)."""
     base: FederatedStrategy
     if name == "fedavg":
@@ -316,6 +317,12 @@ def make_strategy(name: str = "fedavg", *, compress: str = "none",
         base = FedAvgM(beta=beta, lr=server_lr)
     elif name == "fedprox":
         base = FedProx(mu=mu)
+    elif name == "asyncfedavg":
+        # defined with the other server-side algorithms; imported lazily
+        # (strategies.py imports this module's helpers)
+        from repro.core.strategies import AsyncFedAvg
+        base = AsyncFedAvg(alpha=alpha, server_lr=server_lr,
+                           staleness=tuple(staleness))
     else:
         raise ValueError(f"unknown strategy {name!r} (want one of {STRATEGIES})")
     if compress == "none":

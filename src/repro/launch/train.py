@@ -26,6 +26,7 @@ from repro.core.ffdapt import FFDAPTConfig
 from repro.core.noniid import make_client_datasets
 from repro.core.rounds import FedSession, RoundPlan
 from repro.core.strategy import COMPRESSORS, STRATEGIES, make_strategy
+from repro.sim import FLEETS
 from repro.data.corpus import generate_corpus
 from repro.models.model import init_model
 from repro.models.steps import make_eval_step
@@ -55,6 +56,20 @@ def main() -> None:
                     help="fraction of delta entries kept by --compress topk")
     ap.add_argument("--participation", type=float, default=1.0,
                     help="fraction of clients sampled each round")
+    ap.add_argument("--fleet", default="",
+                    help="simulate wall-clock on a named device fleet "
+                         f"(one of {FLEETS}); empty = no simulation")
+    ap.add_argument("--deadline", type=float, default=0.0,
+                    help="with --fleet: also simulate deadline-based "
+                         "over-selection (seconds per round)")
+    ap.add_argument("--async-buffer", type=int, default=0,
+                    help="with --fleet: also simulate FedBuff-style async "
+                         "aggregation with this buffer size")
+    ap.add_argument("--async-alpha", type=float, default=0.5,
+                    help="staleness discount exponent for --strategy "
+                         "asyncfedavg / the async simulation report")
+    ap.add_argument("--sim-seed", type=int, default=0,
+                    help="seed for the fleet's availability process")
     ap.add_argument("--docs", type=int, default=240)
     ap.add_argument("--batch-size", type=int, default=8)
     ap.add_argument("--seq-len", type=int, default=128)
@@ -89,14 +104,15 @@ def main() -> None:
 
     strategy = make_strategy(args.strategy, compress=args.compress,
                              mu=args.mu, beta=args.server_beta,
-                             frac=args.topk_frac)
+                             frac=args.topk_frac, alpha=args.async_alpha)
     plan = RoundPlan(n_rounds=args.rounds, engine=args.engine,
                      strategy=strategy,
                      ffdapt=FFDAPTConfig(epsilon=args.epsilon,
                                          gamma=args.gamma) if args.ffdapt
                      else None,
                      participation=args.participation, seed=args.seed,
-                     client_sizes=ds["sizes"])
+                     client_sizes=ds["sizes"],
+                     simulate=args.fleet or None)
     print(f"strategy={strategy.name} engine={args.engine} "
           f"participation={args.participation}")
     t0 = time.perf_counter()
@@ -108,8 +124,9 @@ def main() -> None:
         w = f" windows={h.windows}" if h.windows else ""
         c = (f" clients={h.clients}"
              if h.clients is not None and len(h.clients) < args.clients else "")
+        s = f"  sim {h.sim_round_s:7.1f}s" if args.fleet else ""
         print(f"round {h.round:3d}  loss {h.loss:7.4f}  {h.round_time_s:6.2f}s"
-              f"  up {h.upload_bytes / 2**20:7.1f}MB  "
+              f"{s}  up {h.upload_bytes / 2**20:7.1f}MB  "
               f"comm {h.comm_bytes / 2**20:7.1f}MB  "
               f"{h.flops_estimate / 1e9:8.2f} GFLOP  "
               f"{h.tokens_per_s:8.0f} tok/s{w}{c}")
@@ -118,6 +135,22 @@ def main() -> None:
           f"{sum(h.upload_bytes for h in hist) / 2**20:.1f}MB; comm "
           f"{sum(h.comm_bytes for h in hist) / 2**20:.1f}MB; compute "
           f"{sum(h.flops_estimate for h in hist) / 1e12:.3f} TFLOP (ledger)")
+
+    if args.fleet:
+        from repro.sim import ledger_lines, make_fleet, simulate
+        fleet = make_fleet(args.fleet, args.clients, seed=args.seed)
+        print(f"fleet {args.fleet}: {fleet.counts()}")
+        reports = [simulate(hist, fleet, mode="sync", seed=args.sim_seed)]
+        if args.deadline > 0:
+            reports.append(simulate(hist, fleet, mode="deadline",
+                                    deadline_s=args.deadline,
+                                    seed=args.sim_seed))
+        if args.async_buffer > 0:
+            reports.append(simulate(hist, fleet, mode="async",
+                                    buffer_size=args.async_buffer,
+                                    seed=args.sim_seed))
+        for rep in reports:
+            print("\n".join(ledger_lines(rep)))
 
     eval_step = jax.jit(make_eval_step(cfg))
     heldout = make_client_datasets(held_docs,

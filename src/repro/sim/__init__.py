@@ -1,0 +1,30 @@
+"""Event-driven wall-clock federation simulator.
+
+Converts the static per-round ledger a ``FedSession`` records
+(``repro.telemetry`` step costs + strategy wire bytes) into simulated
+seconds on heterogeneous device fleets, under sync, deadline-dropping, and
+FedBuff-style buffered-async server schedules.
+
+  * :mod:`repro.sim.fleet`  — device profiles, presets, seeded fleet sampling
+  * :mod:`repro.sim.clock`  — roofline time model (ledger -> seconds)
+  * :mod:`repro.sim.events` — the event-queue simulator over a round history
+"""
+
+from repro.sim.clock import (ClientTiming, client_timing, comm_time_s,
+                             device_roofline_s, ledger_lists, resolve_fleet,
+                             round_timings, step_time_s, sync_round_s)
+from repro.sim.events import (RoundSim, SimReport, ledger_lines, simulate,
+                              simulate_async, simulate_deadline,
+                              simulate_sync)
+from repro.sim.fleet import (FLEET_MIXES, FLEETS, PRESETS, DeviceProfile,
+                             Fleet, gbps, make_fleet, mbps, sample_fleet)
+
+__all__ = [
+    "FLEETS", "FLEET_MIXES", "PRESETS", "ClientTiming", "DeviceProfile",
+    "Fleet", "RoundSim", "SimReport", "client_timing", "comm_time_s",
+    "device_roofline_s", "gbps", "ledger_lines", "ledger_lists",
+    "make_fleet", "mbps",
+    "resolve_fleet", "round_timings", "sample_fleet", "simulate",
+    "simulate_async", "simulate_deadline", "simulate_sync", "step_time_s",
+    "sync_round_s",
+]

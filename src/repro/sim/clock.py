@@ -1,0 +1,125 @@
+"""Roofline time model: per-round ledger -> per-client seconds on a fleet.
+
+Maps the static compute/comm ledger a ``FedSession`` round records (per-step
+dot FLOPs and HBM bytes from ``repro.telemetry``, wire bytes from the
+strategy) onto a ``DeviceProfile``:
+
+    step_s    = max(flops / peak_flops, hbm_bytes / hbm_bw)   (roofline)
+    compute_s = n_steps x step_s
+    down_s    = latency + download_bytes / down_bw
+    up_s      = latency + upload_bytes / up_bw
+
+The model is intentionally first-order: no overlap of compute with
+communication, no batching of the two transfer directions.  That is the
+conservative sync-FL schedule (download, train, upload) every deployment
+starts from; the event simulator (``repro.sim.events``) layers dropouts,
+deadlines, and async aggregation on top of these per-client terms.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional, Sequence
+
+from repro.sim.fleet import DeviceProfile, Fleet
+
+
+@dataclasses.dataclass(frozen=True)
+class ClientTiming:
+    """One client's simulated round, split into the sync-FL phases."""
+
+    client: int
+    device: str
+    down_s: float
+    compute_s: float
+    up_s: float
+
+    @property
+    def total_s(self) -> float:
+        return self.down_s + self.compute_s + self.up_s
+
+
+def step_time_s(step_flops: float, step_hbm_bytes: float,
+                dev: DeviceProfile) -> float:
+    """Roofline time of ONE local step: bounded by compute or HBM traffic,
+    whichever is slower on this device."""
+    return max(step_flops / dev.peak_flops, step_hbm_bytes / dev.hbm_bw)
+
+
+def comm_time_s(nbytes: float, bw: float, latency_s: float) -> float:
+    return latency_s + nbytes / max(bw, 1.0)
+
+
+def client_timing(k: int, dev: DeviceProfile, *, n_steps: int,
+                  step_flops: float, step_hbm_bytes: float,
+                  upload_bytes: float, download_bytes: float) -> ClientTiming:
+    return ClientTiming(
+        client=k, device=dev.name,
+        down_s=comm_time_s(download_bytes, dev.down_bw, dev.latency_s),
+        compute_s=n_steps * step_time_s(step_flops, step_hbm_bytes, dev),
+        up_s=comm_time_s(upload_bytes, dev.up_bw, dev.latency_s))
+
+
+def ledger_lists(rr: Any):
+    """Resolve a round's per-client replay ledger with its defaults:
+    ``(clients, steps, step_flops, step_hbm, upload_bytes, down_each)``.
+
+    ``rr`` is duck-typed on the ``RoundResult`` replay fields
+    (``clients``, ``client_steps``, ``client_step_flops``,
+    ``client_step_hbm``, ``client_upload_bytes``, ``download_bytes``);
+    missing per-client lists fall back to even splits of the round totals.
+    The single source of the default rules — the event simulator's
+    mean-workload extras average THIS function's output."""
+    clients = list(rr.clients) if rr.clients is not None else []
+    n = len(clients)
+    if n == 0:
+        return [], [], [], [], [], 0
+    steps = list(rr.client_steps) if rr.client_steps else [1] * n
+    flops = (list(rr.client_step_flops) if rr.client_step_flops
+             else [0.0] * n)
+    hbm = list(rr.client_step_hbm) if rr.client_step_hbm else [0.0] * n
+    up = (list(rr.client_upload_bytes) if rr.client_upload_bytes
+          else [rr.upload_bytes // n] * n)
+    down_each = rr.download_bytes // n if rr.download_bytes else 0
+    return clients, steps, flops, hbm, up, down_each
+
+
+def round_timings(rr: Any, fleet: Fleet) -> List[ClientTiming]:
+    """Per-client timings for one recorded round (see ``ledger_lists`` for
+    the accepted record shape).  Sessions run with ``telemetry=False``
+    record zero compute terms — the simulation then degenerates to
+    comm-only time; run with telemetry on for wall-clock numbers."""
+    clients, steps, flops, hbm, up, down_each = ledger_lists(rr)
+    return [client_timing(k, fleet[k], n_steps=steps[i],
+                          step_flops=flops[i], step_hbm_bytes=hbm[i],
+                          upload_bytes=up[i], download_bytes=down_each)
+            for i, k in enumerate(clients)]
+
+
+def sync_round_s(rr: Any, fleet: Fleet) -> float:
+    """Ideal (dropout-free) synchronous round time: the server waits for the
+    slowest sampled client.  This is what ``RoundPlan.simulate`` records
+    live; ``repro.sim.events`` adds availability noise and other modes."""
+    ts = round_timings(rr, fleet)
+    return max((t.total_s for t in ts), default=0.0)
+
+
+def resolve_fleet(spec: Any, n_clients: int, seed: int = 0) -> Fleet:
+    """Accept a ``Fleet``, a named-fleet string, or a mixture dict."""
+    from repro.sim.fleet import make_fleet, sample_fleet
+    if isinstance(spec, Fleet):
+        return spec
+    if isinstance(spec, str):
+        return make_fleet(spec, n_clients, seed=seed)
+    if isinstance(spec, dict):
+        return sample_fleet(spec, n_clients, seed=seed)
+    raise TypeError(f"cannot resolve fleet from {spec!r}")
+
+
+def device_roofline_s(flops: float, hbm_bytes: float, comm_bytes: float,
+                      dev: DeviceProfile) -> dict:
+    """Ledger totals -> the three roofline terms in seconds on one device
+    (``benchmarks/roofline.py`` merges session rounds through this)."""
+    return {"compute": flops / dev.peak_flops,
+            "memory": hbm_bytes / dev.hbm_bw,
+            "collective": comm_bytes / max(dev.up_bw, 1.0)}

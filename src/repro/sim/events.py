@@ -1,0 +1,293 @@
+"""Event-driven wall-clock simulator over a ``FedSession`` round history.
+
+Replays the per-client ledger each ``RoundResult`` records (steps, per-step
+FLOPs/HBM bytes, wire bytes) on a heterogeneous ``Fleet`` under three server
+schedules:
+
+  * ``simulate_sync``     — FedAvg as the paper runs it: the round closes
+    when the slowest sampled client uploads.  Device dropout is a seeded
+    mid-round failure + restart, so one flaky phone stalls everyone.
+  * ``simulate_deadline`` — over-select ``over_select x n`` clients, close
+    the round at ``deadline_s``, DROP stragglers — but never below a quorum
+    of ``ceil(quorum_frac x n)`` (the round extends to the quorum-th upload
+    when too few beat the deadline).
+  * ``simulate_async``    — FedBuff-style buffered async: clients train
+    continuously against the version they last downloaded; the server
+    aggregates whenever ``buffer_size`` updates are buffered and bumps its
+    version.  Staleness tau = server_version_at_upload - version_at_download
+    is recorded per update — feed the observed taus to
+    ``AsyncFedAvg(staleness=...)`` to run the learning math the schedule
+    implies (the simulator and the strategy share one discount rule).
+
+Everything is deterministic in ``seed``: failures, over-selection draws, and
+the event heap's tie-break (time, then client id) are all
+``np.random.default_rng``-driven, so a simulated ledger is a reproducible
+artifact of (history, fleet, mode, seed).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.sim.clock import ClientTiming, round_timings
+from repro.sim.fleet import Fleet
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundSim:
+    """One simulated server aggregation (a round in sync/deadline modes,
+    one buffer flush in async mode)."""
+
+    round: int
+    t_start: float
+    t_end: float
+    clients: Tuple[int, ...]              # whose updates were aggregated
+    dropped: Tuple[int, ...] = ()         # selected but not aggregated
+    staleness: Tuple[int, ...] = ()       # per aggregated update (async)
+    timings: Tuple[ClientTiming, ...] = ()
+
+    @property
+    def round_s(self) -> float:
+        return self.t_end - self.t_start
+
+
+@dataclasses.dataclass(frozen=True)
+class SimReport:
+    mode: str
+    fleet: str
+    rounds: Tuple[RoundSim, ...]
+    seed: int = 0
+
+    @property
+    def total_s(self) -> float:
+        return self.rounds[-1].t_end if self.rounds else 0.0
+
+    @property
+    def mean_round_s(self) -> float:
+        return (float(np.mean([r.round_s for r in self.rounds]))
+                if self.rounds else 0.0)
+
+    @property
+    def dropped_total(self) -> int:
+        return sum(len(r.dropped) for r in self.rounds)
+
+    def staleness_histogram(self) -> Dict[int, int]:
+        out: Dict[int, int] = {}
+        for r in self.rounds:
+            for tau in r.staleness:
+                out[tau] = out.get(tau, 0) + 1
+        return out
+
+
+def _failed_compute_s(timing: ClientTiming, dev_dropout: float,
+                      rng: np.random.Generator) -> float:
+    """Compute seconds including availability noise: with probability
+    ``dropout`` the client dies at a uniform point of its local epoch and
+    restarts from scratch (no local checkpointing), once per round."""
+    extra = 0.0
+    if dev_dropout > 0.0 and rng.random() < dev_dropout:
+        extra = rng.random() * timing.compute_s
+    return timing.compute_s + extra
+
+
+def _noisy_total(timing: ClientTiming, dropout: float,
+                 rng: np.random.Generator) -> float:
+    return (timing.down_s + _failed_compute_s(timing, dropout, rng)
+            + timing.up_s)
+
+
+# ---------------------------------------------------------------------------
+# Sync FedAvg: wait for the slowest client
+# ---------------------------------------------------------------------------
+
+def simulate_sync(history: Sequence[Any], fleet: Fleet, *,
+                  seed: int = 0) -> SimReport:
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    rounds: List[RoundSim] = []
+    for rr in history:
+        ts = round_timings(rr, fleet)
+        totals = [_noisy_total(x, fleet[x.client].dropout, rng) for x in ts]
+        end = t + (max(totals) if totals else 0.0)
+        rounds.append(RoundSim(rr.round, t, end,
+                               tuple(x.client for x in ts),
+                               timings=tuple(ts)))
+        t = end
+    return SimReport("sync", fleet.name, tuple(rounds), seed)
+
+
+# ---------------------------------------------------------------------------
+# Deadline + over-selection: drop stragglers, keep quorum
+# ---------------------------------------------------------------------------
+
+def _mean_work(rr: Any) -> Tuple[int, float, float, float, float]:
+    """The round's average local workload, assigned to over-selected extras
+    (their data size is unknown to the replay — the server would hand them
+    an average shard).  Defaults resolve through ``clock.ledger_lists`` so
+    extras and sampled clients share one rule set."""
+    from repro.sim.clock import ledger_lists
+    _, steps, flops, hbm, up, down = ledger_lists(rr)
+    return (int(round(np.mean(steps))), float(np.mean(flops)),
+            float(np.mean(hbm)), float(np.mean(up)), float(down))
+
+
+def simulate_deadline(history: Sequence[Any], fleet: Fleet, *,
+                      deadline_s: float, over_select: float = 1.5,
+                      quorum_frac: float = 0.8, seed: int = 0) -> SimReport:
+    """Sync FedAvg with a round deadline: the server selects
+    ``ceil(over_select x n)`` clients, aggregates whoever uploaded by
+    ``deadline_s``, and drops the rest — but never below
+    ``quorum = ceil(quorum_frac x n)``; when fewer beat the deadline the
+    round runs long until the quorum-th upload (availability must not
+    silently shrink the effective cohort)."""
+    from repro.sim.clock import client_timing
+    if not 0.0 < quorum_frac <= 1.0:
+        raise ValueError(f"quorum_frac {quorum_frac} not in (0, 1]")
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    rounds: List[RoundSim] = []
+    for rr in history:
+        ts = list(round_timings(rr, fleet))
+        n = len(ts)
+        if n == 0:
+            rounds.append(RoundSim(rr.round, t, t, ()))
+            continue
+        # over-select extra clients from the rest of the fleet, seeded
+        m = min(len(fleet), max(n, math.ceil(over_select * n)))
+        have = {x.client for x in ts}
+        pool = [k for k in range(len(fleet)) if k not in have]
+        extra = (sorted(rng.choice(pool, size=m - n, replace=False).tolist())
+                 if m > n and pool else [])
+        steps, flops, hbm, up, down = _mean_work(rr)
+        for k in extra:
+            ts.append(client_timing(k, fleet[k], n_steps=steps,
+                                    step_flops=flops, step_hbm_bytes=hbm,
+                                    upload_bytes=up, download_bytes=down))
+        finish = sorted((_noisy_total(x, fleet[x.client].dropout, rng),
+                         x.client) for x in ts)
+        quorum = max(1, math.ceil(quorum_frac * n))
+        made_it = [(f, k) for f, k in finish if f <= deadline_s]
+        if len(made_it) == len(finish):
+            kept = made_it                  # nobody to wait for: close early
+            round_s = finish[-1][0]
+        elif len(made_it) >= quorum:
+            kept = made_it
+            round_s = deadline_s
+        else:
+            kept = finish[:quorum]          # run long to the quorum-th upload
+            round_s = kept[-1][0]
+        kept_ids = {k for _, k in kept}
+        rounds.append(RoundSim(
+            rr.round, t, t + round_s, tuple(sorted(kept_ids)),
+            dropped=tuple(sorted(x.client for x in ts
+                                 if x.client not in kept_ids)),
+            timings=tuple(ts)))
+        t += round_s
+    return SimReport("deadline", fleet.name, tuple(rounds), seed)
+
+
+# ---------------------------------------------------------------------------
+# Buffered async (FedBuff): aggregate every buffer_size uploads
+# ---------------------------------------------------------------------------
+
+def simulate_async(history: Sequence[Any], fleet: Fleet, *,
+                   buffer_size: int = 2, seed: int = 0) -> SimReport:
+    """FedBuff schedule: every client loops download -> local epoch ->
+    upload, immediately restarting on the server's CURRENT version; the
+    server flushes its buffer every ``buffer_size`` uploads.  Runs until as
+    many aggregations happened as the history had rounds, so sync and async
+    ledgers describe the same number of model updates.
+
+    Per-client epoch time is the mean of that client's recorded rounds
+    (async has no rounds, so the replay assigns each client its average
+    local workload).  Staleness per update is recorded; its histogram is
+    the fleet's heterogeneity made visible — feed the taus to
+    ``AsyncFedAvg(staleness=...)`` for the matching aggregation math."""
+    if buffer_size < 1:
+        raise ValueError(f"buffer_size {buffer_size} < 1")
+    rng = np.random.default_rng(seed)
+    # mean per-client epoch seconds over the recorded history
+    per_client: Dict[int, List[ClientTiming]] = {}
+    for rr in history:
+        for x in round_timings(rr, fleet):
+            per_client.setdefault(x.client, []).append(x)
+    if not per_client:
+        return SimReport("async", fleet.name, (), seed)
+    epoch_s = {k: float(np.mean([x.total_s for x in xs]))
+               for k, xs in per_client.items()}
+    compute_s = {k: float(np.mean([x.compute_s for x in xs]))
+                 for k, xs in per_client.items()}
+
+    def next_finish(k: int, now: float) -> float:
+        # availability noise: seeded failure mid-epoch + restart
+        extra = 0.0
+        if fleet[k].dropout > 0.0 and rng.random() < fleet[k].dropout:
+            extra = rng.random() * compute_s[k]
+        return now + epoch_s[k] + extra
+
+    n_agg_target = len(history)
+    heap: List[Tuple[float, int]] = []      # (finish time, client)
+    version_at_start: Dict[int, int] = {}
+    server_version = 0
+    for k in sorted(per_client):
+        version_at_start[k] = 0
+        heapq.heappush(heap, (next_finish(k, 0.0), k))
+
+    buffer: List[Tuple[int, int]] = []      # (client, staleness)
+    rounds: List[RoundSim] = []
+    t_prev = 0.0
+    while heap and len(rounds) < n_agg_target:
+        t, k = heapq.heappop(heap)
+        buffer.append((k, server_version - version_at_start[k]))
+        if len(buffer) >= buffer_size:
+            server_version += 1
+            rounds.append(RoundSim(
+                len(rounds), t_prev, t,
+                tuple(c for c, _ in buffer),
+                staleness=tuple(tau for _, tau in buffer)))
+            t_prev = t
+            buffer = []
+        version_at_start[k] = server_version
+        heapq.heappush(heap, (next_finish(k, t), k))
+    return SimReport("async", fleet.name, tuple(rounds), seed)
+
+
+# ---------------------------------------------------------------------------
+# Driver surface
+# ---------------------------------------------------------------------------
+
+def simulate(history: Sequence[Any], fleet: Fleet, *, mode: str = "sync",
+             seed: int = 0, deadline_s: float = 0.0,
+             over_select: float = 1.5, quorum_frac: float = 0.8,
+             buffer_size: int = 2) -> SimReport:
+    if mode == "sync":
+        return simulate_sync(history, fleet, seed=seed)
+    if mode == "deadline":
+        return simulate_deadline(history, fleet, deadline_s=deadline_s,
+                                 over_select=over_select,
+                                 quorum_frac=quorum_frac, seed=seed)
+    if mode == "async":
+        return simulate_async(history, fleet, buffer_size=buffer_size,
+                              seed=seed)
+    raise ValueError(f"unknown mode {mode!r} (sync | deadline | async)")
+
+
+def ledger_lines(report: SimReport) -> List[str]:
+    """Human-readable per-aggregation ledger (the train driver prints it)."""
+    out = [f"simulated wall-clock [{report.mode}] fleet={report.fleet} "
+           f"total={report.total_s:.1f}s mean_round={report.mean_round_s:.1f}s"
+           f" dropped={report.dropped_total}"]
+    for r in report.rounds:
+        extra = ""
+        if r.dropped:
+            extra += f" dropped={list(r.dropped)}"
+        if r.staleness:
+            extra += f" staleness={list(r.staleness)}"
+        out.append(f"  agg {r.round:3d}  t={r.t_end:9.1f}s  "
+                   f"round={r.round_s:8.2f}s  clients={list(r.clients)}{extra}")
+    return out

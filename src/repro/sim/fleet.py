@@ -1,0 +1,139 @@
+"""Heterogeneous device fleets for the wall-clock federation simulator.
+
+A ``DeviceProfile`` is the hardware a federated client trains on: sustained
+dense FLOP/s at training precision, HBM bandwidth, and the asymmetric WAN
+link to the server (uplink is the scarce direction for residential clients).
+``dropout`` is the per-round probability the client fails mid-round — the
+availability process the event simulator samples.
+
+Presets span the deployment spectrum the FL-foundation-model surveys flag
+as the open systems problem: datacenter accelerators (the regime where the
+paper's FLOP ledger translates ~directly to time) down to edge boxes and
+phones (where uplink and stragglers dominate and FFDAPT's compute saving is
+diluted).  Numbers are public-spec order-of-magnitude figures — the
+simulator's claims are *relative* (FDAPT vs FFDAPT, sync vs async on the
+same fleet), which is insensitive to absolute calibration.
+
+A ``Fleet`` maps client k -> its device.  Sampling is deterministic in
+``seed`` (``np.random.default_rng``): the same (mix, n, seed) always
+produces the same fleet, so simulated ledgers are reproducible artifacts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import numpy as np
+
+
+def mbps(x: float) -> float:
+    """Megabits/s -> bytes/s."""
+    return x * 1e6 / 8.0
+
+
+def gbps(x: float) -> float:
+    """Gigabits/s -> bytes/s."""
+    return x * 1e9 / 8.0
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceProfile:
+    """One client's hardware + link, the inputs of the roofline time model."""
+
+    name: str
+    peak_flops: float             # sustained dense FLOP/s (training precision)
+    hbm_bw: float                 # bytes/s accelerator memory bandwidth
+    up_bw: float                  # client->server bytes/s
+    down_bw: float                # server->client bytes/s
+    dropout: float = 0.0          # P(mid-round failure) per round
+    latency_s: float = 0.05       # fixed per-transfer overhead (RTT + setup)
+
+
+PRESETS: Dict[str, DeviceProfile] = {
+    # datacenter accelerators: fat pipes, never drop
+    "h100": DeviceProfile("h100", 9.9e14, 3.35e12, gbps(25), gbps(25),
+                          latency_s=0.005),
+    "a100": DeviceProfile("a100", 3.12e14, 2.0e12, gbps(10), gbps(10),
+                          latency_s=0.005),
+    "tpu-v4": DeviceProfile("tpu-v4", 2.75e14, 1.2e12, gbps(10), gbps(10),
+                            latency_s=0.005),
+    # the paper's own hardware (2x RTX 2080 Ti, 1 Gbps campus link)
+    "rtx2080ti": DeviceProfile("rtx2080ti", 2.69e13, 6.16e11, gbps(1),
+                               gbps(1), dropout=0.01),
+    # prosumer / edge
+    "rtx4090": DeviceProfile("rtx4090", 1.65e14, 1.01e12, mbps(500),
+                             mbps(500), dropout=0.02),
+    "jetson-orin": DeviceProfile("jetson-orin", 1.0e13, 2.05e11, mbps(100),
+                                 mbps(200), dropout=0.05),
+    "laptop": DeviceProfile("laptop", 7.0e12, 1.0e11, mbps(30), mbps(300),
+                            dropout=0.08, latency_s=0.1),
+    "phone": DeviceProfile("phone", 2.0e12, 5.1e10, mbps(10), mbps(50),
+                           dropout=0.15, latency_s=0.2),
+}
+
+
+# named mixtures: fleet name -> {preset: sampling weight}
+FLEET_MIXES: Dict[str, Dict[str, float]] = {
+    # homogeneous references
+    "uniform-a100": {"a100": 1.0},
+    "uniform-tpu": {"tpu-v4": 1.0},
+    "paper-2080ti": {"rtx2080ti": 1.0},
+    # heterogeneous: the cross-silo GPU spread of a real consortium
+    "silo-mixed": {"h100": 0.2, "a100": 0.4, "rtx4090": 0.25,
+                   "rtx2080ti": 0.15},
+    # heterogeneous: cross-device, uplink- and straggler-dominated
+    "edge-mixed": {"a100": 0.1, "rtx4090": 0.2, "rtx2080ti": 0.2,
+                   "jetson-orin": 0.2, "laptop": 0.2, "phone": 0.1},
+    "crossdevice": {"laptop": 0.4, "jetson-orin": 0.2, "phone": 0.4},
+}
+
+FLEETS: Tuple[str, ...] = tuple(sorted(FLEET_MIXES))
+
+
+@dataclasses.dataclass(frozen=True)
+class Fleet:
+    """devices[k] is client k's hardware for the whole session."""
+
+    name: str
+    devices: Tuple[DeviceProfile, ...]
+    seed: int = 0
+
+    def __len__(self) -> int:
+        return len(self.devices)
+
+    def __getitem__(self, k: int) -> DeviceProfile:
+        # strict: a history replayed on a too-small fleet is a caller bug
+        # (silent modulo aliasing would double-book devices)
+        if not 0 <= k < len(self.devices):
+            raise IndexError(
+                f"client {k} outside fleet of {len(self.devices)} devices — "
+                f"build the fleet with n >= the session's client count")
+        return self.devices[k]
+
+    def counts(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for d in self.devices:
+            out[d.name] = out.get(d.name, 0) + 1
+        return out
+
+
+def sample_fleet(mix: Dict[str, float], n: int, *, seed: int = 0,
+                 name: str = "custom") -> Fleet:
+    """Draw n devices i.i.d. from ``mix`` (preset -> weight), deterministically
+    in ``seed``.  Preset order is sorted, so dict ordering cannot change the
+    draw."""
+    names = sorted(mix)
+    w = np.asarray([mix[p] for p in names], dtype=np.float64)
+    if np.any(w < 0) or w.sum() <= 0:
+        raise ValueError(f"bad mixture weights {mix!r}")
+    rng = np.random.default_rng(seed)
+    idx = rng.choice(len(names), size=n, p=w / w.sum())
+    return Fleet(name, tuple(PRESETS[names[i]] for i in idx), seed)
+
+
+def make_fleet(name: str, n: int, *, seed: int = 0) -> Fleet:
+    """Build a named fleet (see ``FLEETS``) of n clients."""
+    if name not in FLEET_MIXES:
+        raise ValueError(f"unknown fleet {name!r} (want one of {FLEETS})")
+    return sample_fleet(FLEET_MIXES[name], n, seed=seed, name=name)

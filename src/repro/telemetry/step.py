@@ -23,7 +23,7 @@ amortized across every round, session, and benchmark in the process;
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -101,3 +101,24 @@ def client_step_cost(cfg, optimizer, strategy, batch_sds: Dict[str, Any], *,
                     collective_bytes=float(stats.collective_total))
     _COST_CACHE[key] = cost
     return cost
+
+
+def client_step_costs(cfg, optimizer, strategy,
+                      batch_sds_list: Sequence[Dict[str, Any]], *,
+                      frozen_list: Optional[Sequence[Optional[Tuple[bool, ...]]]] = None,
+                      masked: bool = False, impl: str = "xla"
+                      ) -> List[StepCost]:
+    """Per-client costs for ONE federated round: element i is the cost of
+    client i's step under its freeze window.  Pure cache fan-out — an FFDAPT
+    rotation reuses at most N distinct windows, so a whole session's
+    (round x client) matrix resolves to at most N analyses (the round
+    engines and ``benchmarks/wallclock.py`` both feed the simulator through
+    this)."""
+    frozen_list = (list(frozen_list) if frozen_list is not None
+                   else [None] * len(batch_sds_list))
+    if len(frozen_list) != len(batch_sds_list):
+        raise ValueError(f"{len(frozen_list)} windows for "
+                         f"{len(batch_sds_list)} clients")
+    return [client_step_cost(cfg, optimizer, strategy, sds, frozen=fr,
+                             masked=masked, impl=impl)
+            for sds, fr in zip(batch_sds_list, frozen_list)]

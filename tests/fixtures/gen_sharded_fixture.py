@@ -1,0 +1,80 @@
+"""Regenerate the 512-device partitioned-program fixtures.
+
+The dry-run (``repro.launch.dryrun``) proves the production sharding on 512
+forced host devices; tier-1 must exercise the SAME property — collective-
+byte counting on a >1-device partitioned program — without paying a big
+compile in every test run.  This script lowers a minimal data-parallel
+gradient program on a 512-device host mesh (the gradient of a replicated
+weight under a batch-sharded input is exactly one all-reduce — FedAvg's wire
+pattern), then freezes:
+
+  * ``sharded_grad_512dev.hlo.txt``  — the partitioned HLO text the analyzer
+    parses in ``tests/test_hlo_analysis.py``;
+  * ``sharded_grad_512dev.json``     — a dry-run-style record (analyzer
+    collective bytes per kind, dot FLOPs, XLA cost_analysis FLOPs, shapes)
+    pinning the expected numbers.
+
+Run from the repo root when jax or the program changes:
+
+    PYTHONPATH=src python tests/fixtures/gen_sharded_fixture.py
+"""
+
+import json
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import jax                                                     # noqa: E402
+import jax.numpy as jnp                                        # noqa: E402
+import numpy as np                                             # noqa: E402
+from jax.sharding import Mesh, NamedSharding, PartitionSpec    # noqa: E402
+
+from repro import telemetry as T                               # noqa: E402
+
+HERE = os.path.dirname(__file__)
+N_DEV = 512
+D = 256            # weight is (D, D) fp32
+B = 1024           # global batch, sharded over all devices
+
+
+def main():
+    assert len(jax.devices()) == N_DEV, len(jax.devices())
+    mesh = Mesh(np.array(jax.devices()).reshape(N_DEV), ("data",))
+
+    def loss(W, x):
+        return jnp.sum(jnp.tanh(x @ W))
+
+    grad = jax.grad(loss)
+    w_sh = NamedSharding(mesh, PartitionSpec())             # replicated
+    x_sh = NamedSharding(mesh, PartitionSpec("data", None))  # batch-sharded
+    W = jax.ShapeDtypeStruct((D, D), jnp.float32)
+    X = jax.ShapeDtypeStruct((B, D), jnp.float32)
+    compiled = (jax.jit(grad, in_shardings=(w_sh, x_sh), out_shardings=w_sh)
+                .lower(W, X).compile())
+    hlo = compiled.as_text()
+    stats = T.analyze(hlo)
+
+    with open(os.path.join(HERE, "sharded_grad_512dev.hlo.txt"), "w") as f:
+        f.write(hlo)
+    record = {
+        "program": "grad(sum(tanh(x @ W))) wrt W",
+        "n_devices": N_DEV,
+        "mesh": [N_DEV], "axes": ["data"],
+        "weight_shape": [D, D], "batch_shape": [B, D], "dtype": "f32",
+        # the dW all-reduce: the full replicated gradient, result bytes
+        "expected_allreduce_bytes_min": D * D * 4,
+        "collective_bytes_per_device": {k: int(v) for k, v
+                                        in stats.collective_bytes.items()
+                                        if v},
+        "dot_flops_per_device": float(stats.dot_flops),
+        "hbm_bytes_per_device": float(stats.hbm_bytes),
+        "cost_analysis_flops_per_device": T.xla_flops(compiled),
+        "jax_version": jax.__version__,
+    }
+    with open(os.path.join(HERE, "sharded_grad_512dev.json"), "w") as f:
+        json.dump(record, f, indent=1)
+    print(json.dumps(record, indent=1))
+
+
+if __name__ == "__main__":
+    main()

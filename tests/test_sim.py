@@ -1,0 +1,246 @@
+"""repro.sim coverage: seeded determinism, the sync degenerate case,
+deadline quorum, async staleness bookkeeping, and AsyncFedAvg parity.
+
+The parity contract is the load-bearing one: AsyncFedAvg with no staleness
+must be BITWISE equal to FedAvg on both engines, so turning the async axis
+on cannot silently perturb the paper's baseline math.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.configs import get_config
+from repro.core.noniid import make_client_datasets
+from repro.core.rounds import FedSession, RoundPlan, RoundResult
+from repro.core.strategies import AsyncFedAvg
+from repro.core.strategy import FedAvg, make_strategy
+from repro.data.corpus import generate_corpus
+from repro.models.model import init_model
+from repro.nn import param as P
+from repro.sim import (FLEETS, PRESETS, DeviceProfile, Fleet, make_fleet,
+                       sample_fleet, simulate, simulate_async,
+                       simulate_deadline, simulate_sync, step_time_s,
+                       sync_round_s)
+
+CFG = get_config("distilbert-mlm").reduced()
+KEY = jax.random.PRNGKey(0)
+DOCS = generate_corpus(100, seed=0)
+
+
+@pytest.fixture(scope="module")
+def params0():
+    return P.unbox(init_model(KEY, CFG))
+
+
+@pytest.fixture(scope="module")
+def clients():
+    ds = make_client_datasets(DOCS, CFG, k=2, skew="iid", batch=2, seq=32)
+    return [b[:2] for b in ds["batches"]], ds["sizes"]
+
+
+def _maxdiff(a, b):
+    return max(float(jnp.max(jnp.abs(x.astype(jnp.float32)
+                                     - y.astype(jnp.float32))))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def _round(t=0, k=4, steps=3, flops=1e12, hbm=1e9, up=10_000_000,
+           down=10_000_000):
+    """A synthetic replayable RoundResult (no training needed)."""
+    return RoundResult(
+        t, 0.0, 0.0, clients=list(range(k)), client_steps=[steps] * k,
+        client_step_flops=[flops] * k, client_step_hbm=[hbm] * k,
+        client_upload_bytes=[up] * k, upload_bytes=up * k,
+        download_bytes=down * k)
+
+
+# ---------------------------------------------------------------------------
+# fleets: seeded determinism
+# ---------------------------------------------------------------------------
+
+def test_fleet_sampling_deterministic_in_seed():
+    a = make_fleet("edge-mixed", 32, seed=3)
+    b = make_fleet("edge-mixed", 32, seed=3)
+    c = make_fleet("edge-mixed", 32, seed=4)
+    assert [d.name for d in a.devices] == [d.name for d in b.devices]
+    assert [d.name for d in a.devices] != [d.name for d in c.devices]
+    # dict insertion order must not matter either
+    mix = {"phone": 0.5, "laptop": 0.5}
+    rmix = {"laptop": 0.5, "phone": 0.5}
+    assert (sample_fleet(mix, 16, seed=0).devices
+            == sample_fleet(rmix, 16, seed=0).devices)
+
+
+def test_every_named_fleet_builds():
+    for name in FLEETS:
+        f = make_fleet(name, 8, seed=0)
+        assert len(f) == 8 and sum(f.counts().values()) == 8
+    with pytest.raises(ValueError):
+        make_fleet("gpu-cloud", 4)
+
+
+def test_event_ordering_deterministic_in_seed():
+    hist = [_round(t, k=6) for t in range(4)]
+    fleet = make_fleet("crossdevice", 6, seed=1)   # dropout-heavy
+    a = simulate_async(hist, fleet, buffer_size=2, seed=11)
+    b = simulate_async(hist, fleet, buffer_size=2, seed=11)
+    assert a == b                                   # frozen dataclasses
+    s = simulate_sync(hist, fleet, seed=11)
+    assert s == simulate_sync(hist, fleet, seed=11)
+
+
+# ---------------------------------------------------------------------------
+# sync: identical devices degenerate to n_steps x step_time + comm
+# ---------------------------------------------------------------------------
+
+def test_sync_homogeneous_closed_form():
+    dev = PRESETS["a100"]                           # dropout 0 — exact
+    k, steps, flops, hbm, up, down = 3, 5, 2e12, 3e9, 8_000_000, 8_000_000
+    fleet = Fleet("homog", (dev,) * k)
+    rr = _round(k=k, steps=steps, flops=flops, hbm=hbm, up=up, down=down)
+    want = (dev.latency_s + down / dev.down_bw
+            + steps * step_time_s(flops, hbm, dev)
+            + dev.latency_s + up / dev.up_bw)
+    rep = simulate_sync([rr], fleet)
+    assert rep.rounds[0].round_s == pytest.approx(want, rel=1e-12)
+    assert sync_round_s(rr, fleet) == pytest.approx(want, rel=1e-12)
+    # the roofline max picks the right side
+    assert step_time_s(flops, hbm, dev) == pytest.approx(
+        max(flops / dev.peak_flops, hbm / dev.hbm_bw), rel=1e-12)
+
+
+def test_sync_slowest_client_gates_round():
+    fast, slow = PRESETS["a100"], PRESETS["phone"]
+    fleet = Fleet("mixed", (fast, dataclasses.replace(slow, dropout=0.0)))
+    rr = _round(k=2)
+    rep = simulate_sync([rr], fleet)
+    per = {x.client: x.total_s for x in rep.rounds[0].timings}
+    assert rep.rounds[0].round_s == pytest.approx(per[1], rel=1e-12)
+    assert per[1] > per[0]
+
+
+# ---------------------------------------------------------------------------
+# deadline: over-selection never drops below quorum
+# ---------------------------------------------------------------------------
+
+def test_deadline_never_drops_below_quorum():
+    # 2 fast + 6 phones; a deadline only the fast pair can beat
+    devs = (PRESETS["a100"],) * 2 + \
+           tuple(dataclasses.replace(PRESETS["phone"], dropout=0.0)
+                 for _ in range(6))
+    fleet = Fleet("skewed", devs)
+    hist = [_round(t, k=8) for t in range(3)]
+    fast_s = sync_round_s(_round(k=1), Fleet("f", (PRESETS["a100"],)))
+    rep = simulate_deadline(hist, fleet, deadline_s=fast_s * 1.01,
+                            quorum_frac=0.75, seed=0)
+    for r in rep.rounds:
+        assert len(r.clients) >= int(np.ceil(0.75 * 8))
+        # the round ran long past the deadline to reach quorum
+        assert r.round_s > fast_s * 1.01
+        assert set(r.clients) | set(r.dropped) >= set(range(8))
+
+
+def test_deadline_generous_keeps_everyone_and_closes_early():
+    fleet = Fleet("homog", (PRESETS["a100"],) * 4)
+    hist = [_round(t, k=4) for t in range(2)]
+    sync = simulate_sync(hist, fleet)
+    rep = simulate_deadline(hist, fleet, deadline_s=1e6, seed=0)
+    assert rep.dropped_total == 0
+    assert rep.total_s == pytest.approx(sync.total_s, rel=1e-9)
+
+
+def test_deadline_over_selection_adds_clients():
+    fleet = Fleet("homog", (PRESETS["a100"],) * 8)
+    rr = _round(k=4)
+    rep = simulate_deadline([rr], fleet, deadline_s=1e6, over_select=2.0,
+                            seed=0)
+    assert len(rep.rounds[0].clients) == 8       # 4 sampled + 4 extras
+
+
+# ---------------------------------------------------------------------------
+# async: buffer flushes, staleness recorded
+# ---------------------------------------------------------------------------
+
+def test_async_buffer_and_staleness():
+    fast = PRESETS["a100"]
+    slow = dataclasses.replace(PRESETS["phone"], dropout=0.0)
+    fleet = Fleet("bimodal", (fast, fast, slow))
+    hist = [_round(t, k=3) for t in range(6)]
+    rep = simulate_async(hist, fleet, buffer_size=2, seed=0)
+    assert len(rep.rounds) == 6                   # one agg per history round
+    assert all(len(r.clients) == 2 for r in rep.rounds)
+    taus = rep.staleness_histogram()
+    assert taus.get(0, 0) > 0                     # fast clients stay fresh
+    # the slow client's updates arrive stale once versions advance
+    assert any(t > 0 for t in taus)
+    with pytest.raises(ValueError):
+        simulate_async(hist, fleet, buffer_size=0)
+    with pytest.raises(ValueError):
+        simulate(hist, fleet, mode="warp")
+
+
+# ---------------------------------------------------------------------------
+# AsyncFedAvg: staleness-0 bitwise == FedAvg on BOTH engines
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ["sequential", "parallel"])
+def test_asyncfedavg_stale0_bitwise_equals_fedavg(params0, clients, engine):
+    batches, sizes = clients
+    plan = RoundPlan(n_rounds=2, engine=engine, client_sizes=sizes,
+                     telemetry=False)
+    p_avg, _ = FedSession(CFG, optim.adam(1e-4), plan,
+                          strategy=FedAvg()).run(params0, batches)
+    p_asy, _ = FedSession(CFG, optim.adam(1e-4), plan,
+                          strategy=AsyncFedAvg()).run(params0, batches)
+    assert _maxdiff(p_avg, p_asy) == 0.0
+
+
+def test_asyncfedavg_staleness_discount_math():
+    g = {"w": jnp.zeros((4,), jnp.float32)}
+    ups = [{"w": jnp.full((4,), 1.0)}, {"w": jnp.full((4,), 3.0)}]
+    s = AsyncFedAvg(alpha=1.0, staleness=(0, 1))   # s(0)=1, s(1)=0.5
+    new, _, _ = s.aggregate(g, ups, [1.0, 1.0], s.init_state(g))
+    # discounted weighted mean: (1*1 + 0.5*3) / 1.5 = 5/3
+    np.testing.assert_allclose(np.asarray(new["w"]), 5.0 / 3.0, rtol=1e-6)
+    # stacked layout agrees
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *ups)
+    new2, _ = s.aggregate_stacked(g, stacked, jnp.ones((2,), jnp.float32),
+                                  s.init_state(g))
+    np.testing.assert_allclose(np.asarray(new2["w"]), np.asarray(new["w"]),
+                               rtol=1e-6)
+    # server_lr scales the move toward the discounted mean
+    half = AsyncFedAvg(alpha=1.0, staleness=(0, 1), server_lr=0.5)
+    new3, _, _ = half.aggregate(g, ups, [1.0, 1.0], half.init_state(g))
+    np.testing.assert_allclose(np.asarray(new3["w"]), 0.5 * 5.0 / 3.0,
+                               rtol=1e-6)
+    assert s.discount(0) == 1.0 and half.discount(1) == 0.5
+    assert make_strategy("asyncfedavg", alpha=0.2, staleness=[2]) == \
+        AsyncFedAvg(alpha=0.2, staleness=(2,))
+
+
+# ---------------------------------------------------------------------------
+# live hook + replay of a real session
+# ---------------------------------------------------------------------------
+
+def test_roundplan_simulate_hook_and_replay(params0, clients):
+    batches, sizes = clients
+    _, hist = FedSession(CFG, optim.adam(1e-4), n_rounds=2,
+                         client_sizes=sizes,
+                         simulate="uniform-a100").run(params0, batches)
+    fleet = make_fleet("uniform-a100", len(batches), seed=0)
+    for h in hist:
+        assert h.client_steps == [len(b) for b in batches]
+        assert h.client_step_flops and all(f > 0 for f in h.client_step_flops)
+        assert h.sim_round_s > 0
+        assert h.sim_round_s == pytest.approx(sync_round_s(h, fleet),
+                                              rel=1e-9)
+    # replaying the recorded history round-trips through every mode
+    for mode, kw in (("sync", {}), ("deadline", {"deadline_s": 1.0}),
+                     ("async", {"buffer_size": 2})):
+        rep = simulate(hist, fleet, mode=mode, **kw)
+        assert rep.total_s > 0 and rep.mode == mode

@@ -12,9 +12,17 @@ benchmark converts the telemetry ledger into *time*:
     2. synthetic FDAPT and FFDAPT round histories (same steps, same wire
        bytes — only the compute term differs);
     3. ``repro.sim.simulate_sync`` on a homogeneous datacenter fleet and a
-       heterogeneous edge fleet;
-  reporting simulated sync round seconds per fleet and the FFDAPT
+       heterogeneous edge fleet, under BOTH clock modes (sequential and
+       overlap — the pipelined clock must never be slower, checked on
+       every config);
+  reporting simulated sync round seconds per fleet/clock and the FFDAPT
   wall-clock saving next to the analytic FLOP saving.
+
+``--calibrated`` adds a paper-2080ti column timed on the measurement-
+calibrated device registry (``repro.sim.calibrate``, anchored to the
+committed 2x RTX 2080 Ti datapoint) and prints an ``anchor_check`` row:
+the calibrated fleet must reproduce the anchor's measured round seconds
+to within 5% (asserted).
 
 Expected shape of the result: on the homogeneous compute-bound fleet the
 wall-clock saving tracks the FLOP saving; on the heterogeneous fleet the
@@ -22,7 +30,7 @@ slowest (often uplink-bound) client gates the round, so the saving
 compresses toward 0 — the quantified version of the survey's system-
 heterogeneity warning.
 
-    PYTHONPATH=src python benchmarks/wallclock.py [--tiny]
+    PYTHONPATH=src python benchmarks/wallclock.py [--tiny] [--calibrated]
         [--archs distilbert-mlm,qwen2-7b] [--clients 2] [--rounds 15]
 """
 
@@ -37,10 +45,12 @@ from repro.configs import all_configs, get_config
 from repro.core import ffdapt
 from repro.core.rounds import RoundResult
 from repro.models.model import n_freeze_units
-from repro.sim import make_fleet, simulate_sync
+from repro.sim import (PAPER_2080TI_ROUND, make_fleet, simulate_sync,
+                       sync_round_s)
 
 HOMOGENEOUS = "uniform-a100"
 HETEROGENEOUS = "edge-mixed"
+CALIBRATED = "paper-2080ti"
 
 
 def _dense_bytes(cfg, opt) -> int:
@@ -70,8 +80,31 @@ def synthetic_history(step_costs_per_round, steps: int, up_bytes: int,
     return hist
 
 
+def anchor_check(clients: int, seed: int) -> dict:
+    """Replay the committed anchor workload on the calibrated paper-2080ti
+    fleet: the ideal sync round must land within 5% of the measured
+    seconds, or the calibrated column cannot be quoted next to the paper."""
+    p = PAPER_2080TI_ROUND
+    fleet = make_fleet(CALIBRATED, clients, seed=seed, calibrated=True)
+    rr = RoundResult(
+        0, 0.0, 0.0, clients=list(range(clients)),
+        client_steps=[p.steps] * clients,
+        client_step_flops=[p.step_flops] * clients,
+        client_step_hbm=[p.step_hbm_bytes] * clients,
+        client_upload_bytes=[int(p.upload_bytes)] * clients,
+        upload_bytes=int(p.upload_bytes) * clients,
+        download_bytes=int(p.download_bytes) * clients)
+    pred = sync_round_s(rr, fleet)
+    rel = abs(pred - p.measured_round_s) / p.measured_round_s
+    assert rel <= 0.05, (f"calibrated paper-2080ti round {pred:.1f}s is "
+                         f"{rel:.1%} off the measured anchor "
+                         f"{p.measured_round_s:.1f}s")
+    return {"pred_round_s": pred, "measured_round_s": p.measured_round_s,
+            "rel_err": rel}
+
+
 def arch_row(arch: str, *, clients: int, rounds: int, steps: int,
-             batch: int, seq: int, seed: int):
+             batch: int, seq: int, seed: int, calibrated: bool = False):
     cfg = get_config(arch).reduced()
     opt = optim.adam(5e-5)
     from repro.core.strategy import FedAvg
@@ -100,13 +133,23 @@ def arch_row(arch: str, *, clients: int, rounds: int, steps: int,
 
     row = {"arch": arch, "flop_saving_pct": flop_saving,
            "params_mb": dense / 2**20}
-    for preset in (HOMOGENEOUS, HETEROGENEOUS):
-        fleet = make_fleet(preset, clients, seed=seed)
+    presets = [HOMOGENEOUS, HETEROGENEOUS] + ([CALIBRATED] if calibrated
+                                              else [])
+    for preset in presets:
+        fleet = make_fleet(preset, clients, seed=seed,
+                           calibrated=(calibrated and preset == CALIBRATED))
         t_fd = simulate_sync(h_fd, fleet, seed=seed).total_s
         t_ffd = simulate_sync(h_ffd, fleet, seed=seed).total_s
+        t_fd_ov = simulate_sync(h_fd, fleet, seed=seed, overlap=True).total_s
+        # the pipelined clock can only hide time, never add it — asserted
+        # on every config x fleet (the acceptance bound of the overlap mode)
+        assert t_fd_ov <= t_fd * (1 + 1e-9), (
+            f"{arch}/{preset}: overlap {t_fd_ov:.3f}s > sequential "
+            f"{t_fd:.3f}s")
         row[preset] = {
             "fdapt_round_s": t_fd / rounds,
             "ffdapt_round_s": t_ffd / rounds,
+            "fdapt_overlap_round_s": t_fd_ov / rounds,
             "wallclock_saving_pct": (t_fd - t_ffd) / t_fd * 100.0,
         }
     return row
@@ -125,6 +168,9 @@ def main():
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--batch", type=int, default=2)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--calibrated", action="store_true",
+                    help="add a paper-2080ti column on the measurement-"
+                         "calibrated registry and assert the anchor check")
     args = ap.parse_args()
 
     archs = [a for a in args.archs.split(",") if a]
@@ -132,22 +178,32 @@ def main():
         archs = ["distilbert-mlm"] if args.tiny else sorted(all_configs())
     rounds = 2 if args.tiny else args.rounds
     seq = 32 if args.tiny else args.seq
+    presets = [HOMOGENEOUS, HETEROGENEOUS] + ([CALIBRATED] if args.calibrated
+                                              else [])
 
-    print("arch,fleet,fdapt_round_s,ffdapt_round_s,"
+    if args.calibrated:
+        chk = anchor_check(args.clients, args.seed)
+        print(f"anchor_check,{CALIBRATED},pred={chk['pred_round_s']:.1f}s,"
+              f"measured={chk['measured_round_s']:.1f}s,"
+              f"rel_err={chk['rel_err']:.3f}")
+
+    print("arch,fleet,fdapt_round_s,ffdapt_round_s,fdapt_overlap_round_s,"
           "wallclock_saving_pct,flop_saving_pct")
     rows = []
     for arch in archs:
         row = arch_row(arch, clients=args.clients, rounds=rounds,
                        steps=args.steps, batch=args.batch, seq=seq,
-                       seed=args.seed)
+                       seed=args.seed, calibrated=args.calibrated)
         rows.append(row)
-        for preset in (HOMOGENEOUS, HETEROGENEOUS):
+        for preset in presets:
             r = row[preset]
             print(f"{arch},{preset},{r['fdapt_round_s']:.4f},"
                   f"{r['ffdapt_round_s']:.4f},"
+                  f"{r['fdapt_overlap_round_s']:.4f},"
                   f"{r['wallclock_saving_pct']:.1f},"
                   f"{row['flop_saving_pct']:.1f}")
-    for preset in (HOMOGENEOUS, HETEROGENEOUS):
+    print(f"overlap_le_sequential,all,{len(rows)}_configs_ok")
+    for preset in presets:
         mean_w = float(np.mean([r[preset]["wallclock_saving_pct"]
                                 for r in rows]))
         print(f"mean_wallclock_saving_pct[{preset}],{mean_w:.1f}")

@@ -39,6 +39,12 @@ def main():
                          "sync round)")
     ap.add_argument("--buffer", type=int, default=2)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--overlap", action="store_true",
+                    help="pipelined clock: download/compute and "
+                         "compute/upload overlap")
+    ap.add_argument("--calibrated", action="store_true",
+                    help="measurement-calibrated device registry "
+                         "(repro.sim.calibrate) instead of datasheet presets")
     args = ap.parse_args()
 
     cfg = get_config("distilbert-mlm").reduced()
@@ -59,19 +65,30 @@ def main():
 
     # baseline deadline: a bit above the homogeneous sync round time
     base = simulate(hist, make_fleet("uniform-a100", args.clients,
-                                     seed=args.seed), mode="sync")
+                                     seed=args.seed,
+                                     calibrated=args.calibrated),
+                    mode="sync", overlap=args.overlap)
     deadline = args.deadline or 1.2 * base.mean_round_s
 
+    # per-client step schedule (quantity skew): threading it into the async
+    # replay makes staleness correlate with data volume.  ds["steps"] is the
+    # FULL per-epoch schedule — the simulated deployment runs whole epochs
+    # even though the trained session above truncated to --steps for speed.
+    steps = ds["steps"]
     print(f"\n{'fleet':14s} {'sync_s':>9s} {'deadline_s':>10s} "
           f"{'dropped':>7s} {'async_s':>9s} {'stale(tau:n)':>14s}")
     for name in ("uniform-a100", "paper-2080ti", "silo-mixed", "edge-mixed",
                  "crossdevice"):
-        fleet = make_fleet(name, args.clients, seed=args.seed)
-        sync = simulate(hist, fleet, mode="sync", seed=args.seed)
+        fleet = make_fleet(name, args.clients, seed=args.seed,
+                           calibrated=args.calibrated)
+        sync = simulate(hist, fleet, mode="sync", seed=args.seed,
+                        overlap=args.overlap)
         dl = simulate(hist, fleet, mode="deadline",
-                      deadline_s=deadline, seed=args.seed)
+                      deadline_s=deadline, seed=args.seed,
+                      overlap=args.overlap)
         asy = simulate(hist, fleet, mode="async", buffer_size=args.buffer,
-                       seed=args.seed)
+                       seed=args.seed, overlap=args.overlap,
+                       client_steps=steps)
         taus = ",".join(f"{t}:{n}" for t, n in
                         sorted(asy.staleness_histogram().items()))
         print(f"{name:14s} {sync.total_s:9.1f} {dl.total_s:10.1f} "
@@ -79,9 +96,21 @@ def main():
 
     # close the loop: run the async schedule's staleness through the
     # AsyncFedAvg learning math on the slowest fleet
-    fleet = make_fleet("edge-mixed", args.clients, seed=args.seed)
+    fleet = make_fleet("edge-mixed", args.clients, seed=args.seed,
+                       calibrated=args.calibrated)
     asy = simulate(hist, fleet, mode="async", buffer_size=args.buffer,
-                   seed=args.seed)
+                   seed=args.seed, overlap=args.overlap, client_steps=steps)
+    # the skew-aware replay's signature: mean staleness per client rises
+    # with its local step count (big-data clients upload less often)
+    per_client_tau = {}
+    for r in asy.rounds:
+        for c, tau in zip(r.clients, r.staleness):
+            per_client_tau.setdefault(c, []).append(tau)
+    corr = {c: (steps[c], float(np.mean(ts)))
+            for c, ts in sorted(per_client_tau.items())}
+    print("\nclient -> (local steps/epoch, mean staleness) on edge-mixed:")
+    print("  " + "  ".join(f"{c}:({s},{t:.2f})" for c, (s, t) in
+                           corr.items()))
     taus = tuple(tau for r in asy.rounds for tau in r.staleness)
     strat = AsyncFedAvg(alpha=0.5, staleness=taus or (0,))
     params2 = P.unbox(init_model(jax.random.PRNGKey(args.seed), cfg))

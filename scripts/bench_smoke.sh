@@ -12,5 +12,5 @@ python benchmarks/comm_efficiency.py --tiny
 echo "== ffdapt_efficiency (tiny) =="
 python benchmarks/ffdapt_efficiency.py --tiny
 
-echo "== wallclock (tiny) =="
-python benchmarks/wallclock.py --tiny
+echo "== wallclock (tiny, calibrated + overlap checks) =="
+python benchmarks/wallclock.py --tiny --calibrated

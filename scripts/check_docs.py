@@ -1,0 +1,74 @@
+#!/usr/bin/env python
+"""Intra-repo link checker for the markdown docs (CI: the docs job).
+
+Scans README.md and docs/*.md for markdown links `[text](target)` and
+verifies every RELATIVE target resolves to a file or directory in the repo
+(anchors are stripped; `http(s)://` and `mailto:` targets are skipped —
+this checker owns only what a commit can break).  Exit code 1 lists every
+broken link.
+
+    python scripts/check_docs.py [files...]      # default: README + docs/
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+# [text](target) — target must not contain spaces/parens (our style)
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP = ("http://", "https://", "mailto:", "#")
+
+
+def doc_files(args):
+    if args:
+        return [Path(a).resolve() for a in args]
+    return [REPO / "README.md"] + sorted((REPO / "docs").glob("*.md"))
+
+
+def check(path: Path):
+    broken = []
+    text = path.read_text(encoding="utf-8")
+    in_code = False
+    for lineno, line in enumerate(text.splitlines(), 1):
+        if line.lstrip().startswith("```"):
+            in_code = not in_code
+            continue
+        if in_code:
+            continue
+        for m in LINK.finditer(line):
+            target = m.group(1)
+            if target.startswith(SKIP):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            if not (path.parent / rel).exists():
+                broken.append((path, lineno, target))
+    return broken
+
+
+def main() -> int:
+    files = doc_files(sys.argv[1:])
+    broken = []
+    for f in files:
+        if not f.exists():
+            broken.append((f, 0, "<file missing>"))
+            continue
+        broken.extend(check(f))
+    if broken:
+        for path, lineno, target in broken:
+            try:
+                shown = path.relative_to(REPO)
+            except ValueError:
+                shown = path
+            print(f"BROKEN {shown}:{lineno}: {target}")
+        return 1
+    print(f"docs links ok: {len(files)} files checked")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

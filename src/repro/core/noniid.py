@@ -22,7 +22,15 @@ from repro.data.partition import SKEWS, client_stats_table, partition
 def make_client_datasets(docs: Sequence[Document], cfg, *, k: int,
                          skew: str = "iid", batch: int = 8, seq: int = 128,
                          seed: int = 0) -> Dict:
-    """-> {"batches": [client_batches...], "sizes": n_k, "stats": Table-3}."""
+    """-> {"batches": [client_batches...], "sizes": n_k, "steps": local
+    steps per epoch, "stats": Table-3}.
+
+    ``sizes`` are the aggregation weights n_k (raw-document counts, Eq. 8);
+    ``steps`` are the per-client LOCAL STEP counts one epoch takes
+    (``len(batches[k])``) — the per-epoch schedule the wall-clock
+    simulator's async replay consumes (``repro.sim.events.simulate_async(
+    client_steps=...)``), so quantity skew reaches the staleness process
+    even when an engine's recorded ledger is rectangular."""
     if skew not in SKEWS:
         raise ValueError(f"skew must be one of {SKEWS}")
     shards = partition(docs, k, skew, seed=seed)
@@ -30,4 +38,5 @@ def make_client_datasets(docs: Sequence[Document], cfg, *, k: int,
                for i, s in enumerate(shards)]
     sizes = [len(s) for s in shards]            # n_k = raw-text count (Eq. 8)
     return {"batches": batches, "sizes": sizes,
+            "steps": [len(b) for b in batches],
             "stats": client_stats_table(shards)}

@@ -99,8 +99,13 @@ class RoundPlan:
     # RoundResult carries sim_round_s — the ideal synchronous round time on
     # that fleet (slowest sampled client; requires telemetry=True for the
     # compute terms).  Deadline/async schedules are post-hoc replays:
-    # repro.sim.events.simulate(history, fleet, mode=...).
+    # repro.sim.events.simulate(history, fleet, mode=...) — the async one
+    # consumes the ledger's PER-CLIENT step schedule, so quantity skew
+    # shows up as staleness.
     simulate: Optional[Any] = None
+    # clock mode for sim_round_s: False = sequential down/compute/up sum,
+    # True = pipelined overlap clock (repro.sim.clock).
+    overlap: bool = False
 
 
 def _epoch(step, params, opt_state, batches: Sequence[Dict[str, Any]],
@@ -251,7 +256,8 @@ class FedSession:
                 client_upload_bytes=[nbytes // len(part)] * len(part))
             if fleet is not None:
                 from repro.sim.clock import sync_round_s
-                rr.sim_round_s = sync_round_s(rr, fleet)
+                rr.sim_round_s = sync_round_s(rr, fleet,
+                                              overlap=plan.overlap)
             history.append(rr)
             if plan.eval_fn is not None:
                 history[-1].loss = plan.eval_fn(params)
@@ -367,7 +373,8 @@ class FedSession:
                 client_upload_bytes=[nbytes // len(part)] * len(part))
             if fleet is not None:
                 from repro.sim.clock import sync_round_s
-                rr.sim_round_s = sync_round_s(rr, fleet)
+                rr.sim_round_s = sync_round_s(rr, fleet,
+                                              overlap=plan.overlap)
             history.append(rr)
             if plan.eval_fn is not None:
                 history[-1].loss = plan.eval_fn(params)

@@ -40,7 +40,9 @@ class ServerState:
 def fedavgm_update(global_params: Any, client_params: Sequence[Any],
                    sizes: Sequence[float], state: ServerState,
                    *, beta: float = 0.9, lr: float = 1.0):
-    """Server momentum over the weighted client delta."""
+    """Server momentum over the weighted client delta.  ``sizes`` are the
+    aggregation weights n_k (any positive unit — only ratios matter);
+    ``beta``/``lr`` are dimensionless.  Returns (new_params, new_state)."""
     avg = fedavg(client_params, sizes)
     delta = jax.tree.map(lambda a, g: a.astype(jnp.float32)
                          - g.astype(jnp.float32), avg, global_params)
@@ -111,6 +113,9 @@ class AsyncFedAvg(FederatedStrategy):
                           ).astype(g.dtype), global_params, mean)
 
     def aggregate(self, global_params, client_params, sizes, state):
+        """List-layout aggregation.  ``sizes`` are the n_k weights; returns
+        (new_params, state, upload_bytes) — upload_bytes counts k dense
+        models in BYTES (dtype-aware)."""
         k = len(client_params)
         nbytes = k * tree_bytes(global_params)
         if self._fresh(k):                 # bitwise-FedAvg fast path
@@ -120,6 +125,8 @@ class AsyncFedAvg(FederatedStrategy):
                 state, nbytes)
 
     def aggregate_stacked(self, global_params, stacked, weights, state):
+        """Stacked-layout aggregation traced inside the jitted mesh program
+        (leaves carry a leading client dim; ``weights`` are the n_k)."""
         k = int(weights.shape[0])
         if self._fresh(k):
             return fedavg_stacked(stacked, weights), state

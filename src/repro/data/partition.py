@@ -27,7 +27,16 @@ SKEWS = ("iid", "quantity", "length", "vocab")
 
 
 def quantity_split_sizes(n_docs: int, k: int) -> List[int]:
-    """Eq. 8: Q_i = i / sum_j(j) * Q (largest-remainder rounding; conserves)."""
+    """Eq. 8: Q_i = i / sum_j(j) * Q — client i+1's DOCUMENT count out of
+    ``n_docs`` (largest-remainder rounding; conserves the total).  The
+    resulting per-client step counts are what the async simulator replays
+    as the quantity-skew schedule.
+
+    >>> quantity_split_sizes(100, 4)
+    [10, 20, 30, 40]
+    >>> sum(quantity_split_sizes(101, 4))
+    101
+    """
     denom = k * (k + 1) // 2
     raw = [(i + 1) / denom * n_docs for i in range(k)]
     sizes = [int(x) for x in raw]

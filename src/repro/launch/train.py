@@ -26,7 +26,7 @@ from repro.core.ffdapt import FFDAPTConfig
 from repro.core.noniid import make_client_datasets
 from repro.core.rounds import FedSession, RoundPlan
 from repro.core.strategy import COMPRESSORS, STRATEGIES, make_strategy
-from repro.sim import FLEETS
+from repro.sim import FLEETS, make_fleet
 from repro.data.corpus import generate_corpus
 from repro.models.model import init_model
 from repro.models.steps import make_eval_step
@@ -70,6 +70,15 @@ def main() -> None:
                          "asyncfedavg / the async simulation report")
     ap.add_argument("--sim-seed", type=int, default=0,
                     help="seed for the fleet's availability process")
+    ap.add_argument("--overlap", action="store_true",
+                    help="with --fleet: pipelined clock (download/compute "
+                         "and compute/upload overlap; only latencies stay "
+                         "serial) instead of the sequential phase sum")
+    ap.add_argument("--calibrated", action="store_true",
+                    help="with --fleet: use the measurement-calibrated "
+                         "device registry (repro.sim.calibrate, anchored "
+                         "to the paper's 2x RTX 2080 Ti datapoint) instead "
+                         "of datasheet presets")
     ap.add_argument("--docs", type=int, default=240)
     ap.add_argument("--batch-size", type=int, default=8)
     ap.add_argument("--seq-len", type=int, default=128)
@@ -112,7 +121,11 @@ def main() -> None:
                      else None,
                      participation=args.participation, seed=args.seed,
                      client_sizes=ds["sizes"],
-                     simulate=args.fleet or None)
+                     simulate=(make_fleet(args.fleet, args.clients,
+                                          seed=args.seed,
+                                          calibrated=args.calibrated)
+                               if args.fleet else None),
+                     overlap=args.overlap)
     print(f"strategy={strategy.name} engine={args.engine} "
           f"participation={args.participation}")
     t0 = time.perf_counter()
@@ -137,18 +150,28 @@ def main() -> None:
           f"{sum(h.flops_estimate for h in hist) / 1e12:.3f} TFLOP (ledger)")
 
     if args.fleet:
-        from repro.sim import ledger_lines, make_fleet, simulate
-        fleet = make_fleet(args.fleet, args.clients, seed=args.seed)
-        print(f"fleet {args.fleet}: {fleet.counts()}")
-        reports = [simulate(hist, fleet, mode="sync", seed=args.sim_seed)]
+        from repro.sim import ledger_lines, simulate
+        fleet = plan.simulate
+        cal = " (calibrated)" if args.calibrated else ""
+        print(f"fleet {args.fleet}{cal}: {fleet.counts()}")
+        reports = [simulate(hist, fleet, mode="sync", seed=args.sim_seed,
+                            overlap=args.overlap)]
         if args.deadline > 0:
             reports.append(simulate(hist, fleet, mode="deadline",
                                     deadline_s=args.deadline,
-                                    seed=args.sim_seed))
+                                    seed=args.sim_seed,
+                                    overlap=args.overlap))
         if args.async_buffer > 0:
+            # thread the partition's FULL per-epoch step schedule into the
+            # async replay (not the possibly --max-steps-per-round-truncated
+            # training schedule): staleness then correlates with client data
+            # volume (quantity skew) even on the parallel engine's padded
+            # ledger
             reports.append(simulate(hist, fleet, mode="async",
                                     buffer_size=args.async_buffer,
-                                    seed=args.sim_seed))
+                                    seed=args.sim_seed,
+                                    overlap=args.overlap,
+                                    client_steps=ds["steps"]))
         for rep in reports:
             print("\n".join(ledger_lines(rep)))
 

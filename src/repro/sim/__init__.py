@@ -5,14 +5,25 @@ Converts the static per-round ledger a ``FedSession`` records
 seconds on heterogeneous device fleets, under sync, deadline-dropping, and
 FedBuff-style buffered-async server schedules.
 
-  * :mod:`repro.sim.fleet`  — device profiles, presets, seeded fleet sampling
-  * :mod:`repro.sim.clock`  — roofline time model (ledger -> seconds)
-  * :mod:`repro.sim.events` — the event-queue simulator over a round history
+  * :mod:`repro.sim.fleet`     — device profiles, presets, seeded sampling
+  * :mod:`repro.sim.clock`     — roofline time model (ledger -> seconds),
+    sequential and overlap (pipelined) clock modes
+  * :mod:`repro.sim.events`    — the event-queue simulator over a round
+    history (per-epoch skew-aware async replay)
+  * :mod:`repro.sim.calibrate` — fit per-device MFU / effective-bandwidth
+    factors to measured datapoints; calibrated preset registry anchored to
+    the paper's 2x RTX 2080 Ti measurement
 """
 
+from repro.sim.calibrate import (CALIBRATED_PRESETS, PAPER_2080TI_ANCHOR,
+                                 PAPER_2080TI_EPOCH, PAPER_2080TI_ROUND,
+                                 CalibrationPoint, EfficiencyFit, apply_fit,
+                                 calibrate_presets, fit_device,
+                                 predict_round_s, scale_device)
 from repro.sim.clock import (ClientTiming, client_timing, comm_time_s,
-                             device_roofline_s, ledger_lists, resolve_fleet,
-                             round_timings, step_time_s, sync_round_s)
+                             device_roofline_s, ledger_lists, phase_total_s,
+                             resolve_fleet, round_timings, step_time_s,
+                             sync_round_s)
 from repro.sim.events import (RoundSim, SimReport, ledger_lines, simulate,
                               simulate_async, simulate_deadline,
                               simulate_sync)
@@ -20,11 +31,14 @@ from repro.sim.fleet import (FLEET_MIXES, FLEETS, PRESETS, DeviceProfile,
                              Fleet, gbps, make_fleet, mbps, sample_fleet)
 
 __all__ = [
-    "FLEETS", "FLEET_MIXES", "PRESETS", "ClientTiming", "DeviceProfile",
-    "Fleet", "RoundSim", "SimReport", "client_timing", "comm_time_s",
-    "device_roofline_s", "gbps", "ledger_lines", "ledger_lists",
-    "make_fleet", "mbps",
-    "resolve_fleet", "round_timings", "sample_fleet", "simulate",
-    "simulate_async", "simulate_deadline", "simulate_sync", "step_time_s",
-    "sync_round_s",
+    "CALIBRATED_PRESETS", "FLEETS", "FLEET_MIXES", "PAPER_2080TI_ANCHOR",
+    "PAPER_2080TI_EPOCH", "PAPER_2080TI_ROUND", "PRESETS",
+    "CalibrationPoint", "ClientTiming", "DeviceProfile", "EfficiencyFit",
+    "Fleet", "RoundSim", "SimReport", "apply_fit", "calibrate_presets",
+    "client_timing", "comm_time_s", "device_roofline_s", "fit_device",
+    "gbps", "ledger_lines", "ledger_lists", "make_fleet", "mbps",
+    "phase_total_s", "predict_round_s", "resolve_fleet", "round_timings",
+    "sample_fleet",
+    "scale_device", "simulate", "simulate_async", "simulate_deadline",
+    "simulate_sync", "step_time_s", "sync_round_s",
 ]

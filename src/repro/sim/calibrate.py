@@ -1,0 +1,263 @@
+"""Calibrate the roofline clock against measured wall-clock datapoints.
+
+The fleet presets (``repro.sim.fleet``) carry DATASHEET numbers — peak
+FLOP/s and link bits/s — but no hardware sustains its datasheet peak: real
+training runs at some model-FLOPs-utilization (MFU) fraction of the compute
+ceiling, and a WAN link delivers some fraction of its nominal bandwidth.
+This module fits those two per-device efficiency factors from one or more
+measured datapoints and re-exports the presets with the factors applied, so
+the simulator's absolute seconds can be quoted next to measured time (the
+paper's 2x RTX 2080 Ti / 1 Gbps setup is the committed anchor).
+
+The fitted model, for a device with datasheet profile ``dev``:
+
+    step_s  = max(flops / (mfu x peak_flops), hbm / (mfu x hbm_bw))   [s]
+    round_s = latency + down_bytes / (bw_eff x down_bw)
+            + steps x step_s
+            + latency + up_bytes / (bw_eff x up_bw)                   [s]
+
+``mfu`` in (0, 1] scales BOTH roofline ceilings (the sustained fraction of
+the datasheet compute and memory peaks — kernel efficiency, input pipeline,
+and multi-GPU scaling all fold into it; the fit hard-caps it at 1.0, since
+no device sustains more than its datasheet peak); ``bw_eff`` in (0, 1.5]
+scales the WAN link (protocol overhead, shared campus links — it may
+legitimately exceed 1 on an under-specced rating).  The fit is least
+squares on RELATIVE residuals over all points, solved by a deterministic
+zooming grid search in log-space (no scipy dependency) with a vanishing
+ridge toward (1, 1) that only matters when a single datapoint leaves the
+system underdetermined.
+
+Workflow (the 2080 Ti anchor, end to end)::
+
+    from repro.sim.calibrate import (PAPER_2080TI_ANCHOR, apply_fit,
+                                     fit_device, predict_round_s)
+    from repro.sim.fleet import PRESETS
+
+    fit = fit_device(PAPER_2080TI_ANCHOR)           # mfu ~0.30, bw_eff ~0.70
+    dev = apply_fit(PRESETS["rtx2080ti"], fit)      # calibrated profile
+    predict_round_s(PAPER_2080TI_ROUND, dev)        # ~135.1 s (within 1%)
+
+or just build calibrated fleets directly:
+``make_fleet("paper-2080ti", n, calibrated=True)``.
+
+>>> fit = fit_device(PAPER_2080TI_ANCHOR)
+>>> 0.25 < fit.mfu < 0.35 and 0.6 < fit.bw_eff < 0.8
+True
+>>> fit.max_rel_err < 0.01
+True
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.sim.clock import client_timing
+from repro.sim.fleet import PRESETS, DeviceProfile
+
+
+@dataclasses.dataclass(frozen=True)
+class CalibrationPoint:
+    """ONE measured wall-clock datapoint: a round of ``steps`` local steps
+    on the ``fleet`` device preset took ``measured_round_s`` seconds.
+
+    ``config`` is provenance (arch + batch shape the measurement ran);
+    ``step_flops`` (FLOPs) and ``step_hbm_bytes`` (bytes) are the per-step
+    ledger of that workload (``repro.telemetry.client_step_cost``);
+    ``upload_bytes``/``download_bytes`` are the wire bytes moved each way
+    (0 for a compute-only measurement — the per-transfer latency handshake
+    is still modeled)."""
+
+    config: str
+    fleet: str                    # device preset name the measurement ran on
+    steps: int                    # local optimizer steps in the round
+    measured_round_s: float       # measured seconds for the whole round
+    step_flops: float = 0.0       # per-step dot/conv FLOPs
+    step_hbm_bytes: float = 0.0   # per-step HBM traffic, bytes
+    upload_bytes: float = 0.0     # client->server bytes in the round
+    download_bytes: float = 0.0   # server->client bytes in the round
+
+
+@dataclasses.dataclass(frozen=True)
+class EfficiencyFit:
+    """Fitted per-device efficiency factors (both dimensionless).
+
+    ``max_rel_err`` is the largest |predicted - measured| / measured over
+    the fitted points — the fit's own residual, NOT a generalization
+    claim."""
+
+    mfu: float                    # sustained fraction of datasheet ceilings
+    bw_eff: float                 # effective fraction of datasheet link bw
+    max_rel_err: float
+    n_points: int
+    source: str = ""              # which measurements produced the fit
+
+
+# ---------------------------------------------------------------------------
+# The committed anchor: the paper's hardware (DistilBERT, 2x RTX 2080 Ti,
+# 1 Gbps).  Ledger terms are this repo's own telemetry of the full
+# distilbert-mlm config at batch 32 x seq 128 (repro.telemetry
+# .client_step_cost — dot FLOPs 2.0208e12 / step, HBM 4.6418e10 B / step,
+# dense fp32 upload 278_811_648 B); the measured seconds encode the
+# paper-setup round at ~30% MFU and ~70% of the nominal 1 Gbps —
+# order-of-magnitude-faithful stand-ins for the paper's unpublished raw
+# timings, committed so calibration is reproducible.  The 2-GPU node is
+# modeled as ONE client device; data-parallel scaling folds into the MFU.
+# ---------------------------------------------------------------------------
+
+PAPER_2080TI_EPOCH = CalibrationPoint(
+    config="distilbert-mlm b32 s128 (local epoch, no sync)",
+    fleet="rtx2080ti", steps=512, measured_round_s=128.7,
+    step_flops=2020803084288.0, step_hbm_bytes=46417557152.0)
+
+PAPER_2080TI_ROUND = CalibrationPoint(
+    config="distilbert-mlm b32 s128 (full round incl. 1 Gbps sync)",
+    fleet="rtx2080ti", steps=512, measured_round_s=135.1,
+    step_flops=2020803084288.0, step_hbm_bytes=46417557152.0,
+    upload_bytes=278811648.0, download_bytes=278811648.0)
+
+PAPER_2080TI_ANCHOR: Tuple[CalibrationPoint, ...] = (PAPER_2080TI_EPOCH,
+                                                     PAPER_2080TI_ROUND)
+
+
+def scale_device(dev: DeviceProfile, mfu: float,
+                 bw_eff: float) -> DeviceProfile:
+    """Apply efficiency factors to a datasheet profile: compute and HBM
+    ceilings x ``mfu``, both link directions x ``bw_eff`` (latency and
+    dropout are not efficiency-scaled)."""
+    return dataclasses.replace(
+        dev, peak_flops=dev.peak_flops * mfu, hbm_bw=dev.hbm_bw * mfu,
+        up_bw=dev.up_bw * bw_eff, down_bw=dev.down_bw * bw_eff)
+
+
+def predict_round_s(point: CalibrationPoint, dev: DeviceProfile, *,
+                    overlap: bool = False) -> float:
+    """Seconds the roofline clock predicts for the point's workload on
+    ``dev`` (pass a calibrated profile to check a fit; ``overlap`` selects
+    the pipelined clock)."""
+    t = client_timing(0, dev, n_steps=point.steps,
+                      step_flops=point.step_flops,
+                      step_hbm_bytes=point.step_hbm_bytes,
+                      upload_bytes=point.upload_bytes,
+                      download_bytes=point.download_bytes)
+    return t.total(overlap)
+
+
+def _objective(points: Sequence[CalibrationPoint], dev: DeviceProfile,
+               log_mfu: np.ndarray, log_bw: np.ndarray) -> np.ndarray:
+    """Mean squared RELATIVE residual over points, on a (log_mfu x log_bw)
+    grid, plus a vanishing ridge toward (1, 1) that breaks ties when one
+    datapoint cannot identify both factors."""
+    mfu = np.exp(log_mfu)[:, None]          # (M, 1)
+    bw = np.exp(log_bw)[None, :]            # (1, B)
+    err = np.zeros((mfu.shape[0], bw.shape[1]))
+    for p in points:
+        step_s = np.maximum(p.step_flops / (dev.peak_flops * mfu),
+                            p.step_hbm_bytes / (dev.hbm_bw * mfu))
+        pred = (2.0 * dev.latency_s + p.steps * step_s
+                + p.download_bytes / (dev.down_bw * bw)
+                + p.upload_bytes / (dev.up_bw * bw))
+        err += ((pred - p.measured_round_s) / p.measured_round_s) ** 2
+    err /= len(points)
+    return err + 1e-8 * (log_mfu[:, None] ** 2 + log_bw[None, :] ** 2)
+
+
+def fit_device(points: Sequence[CalibrationPoint],
+               dev: Optional[DeviceProfile] = None, *,
+               bounds: Tuple[float, float] = (0.02, 1.5),
+               grid: int = 41, zooms: int = 4) -> EfficiencyFit:
+    """Least-squares fit of (mfu, bw_eff) for one device preset.
+
+    ``points`` must all name the same preset (``dev`` defaults to
+    ``PRESETS[points[0].fleet]``).  Deterministic zooming grid search:
+    ``zooms`` passes of a ``grid x grid`` log-space lattice over
+    ``bounds``, each pass shrinking the window around the incumbent — no
+    random restarts, no scipy, resolution ~1e-4 relative.  The mfu axis is
+    additionally capped at 1.0 regardless of ``bounds`` (no device
+    sustains more than its datasheet peak — a fit pressing against the cap
+    means the measured seconds or the ledger terms are wrong); ``bw_eff``
+    may exceed 1 up to ``bounds[1]`` (a link can beat its nominal
+    rating)."""
+    if not points:
+        raise ValueError("need at least one CalibrationPoint")
+    names = {p.fleet for p in points}
+    if len(names) > 1:
+        raise ValueError(f"points span several presets {sorted(names)}; "
+                         f"fit each preset separately")
+    if dev is None:
+        name = next(iter(names))
+        if name not in PRESETS:
+            raise ValueError(f"unknown preset {name!r}; pass dev= explicitly")
+        dev = PRESETS[name]
+
+    lo, hi = np.log(bounds[0]), np.log(bounds[1])
+    hi_mfu = min(hi, 0.0)                   # log(1.0): physical MFU ceiling
+    c_mfu = 0.5 * (lo + hi_mfu)
+    c_bw = 0.5 * (lo + hi)
+    half = 0.5 * (hi - lo)
+    for _ in range(zooms):
+        gm = np.linspace(c_mfu - half, c_mfu + half, grid)
+        gb = np.linspace(c_bw - half, c_bw + half, grid)
+        gm, gb = np.clip(gm, lo, hi_mfu), np.clip(gb, lo, hi)
+        err = _objective(points, dev, gm, gb)
+        i, j = np.unravel_index(int(np.argmin(err)), err.shape)
+        c_mfu, c_bw = float(gm[i]), float(gb[j])
+        half *= 2.5 / (grid - 1)            # next window: a few old cells
+    mfu, bw_eff = float(np.exp(c_mfu)), float(np.exp(c_bw))
+
+    fitted = scale_device(dev, mfu, bw_eff)
+    rel = [abs(predict_round_s(p, fitted) - p.measured_round_s)
+           / p.measured_round_s for p in points]
+    return EfficiencyFit(mfu=mfu, bw_eff=bw_eff,
+                         max_rel_err=float(max(rel)), n_points=len(points),
+                         source="+".join(sorted({p.config for p in points})))
+
+
+def apply_fit(dev: DeviceProfile, fit: EfficiencyFit, *,
+              source: str = "") -> DeviceProfile:
+    """Calibrated profile: ``dev`` with the fit's factors applied and
+    ``calibrated_from`` recording the measurement provenance."""
+    return dataclasses.replace(
+        scale_device(dev, fit.mfu, fit.bw_eff),
+        calibrated_from=source or fit.source)
+
+
+def calibrate_presets(points: Optional[Sequence[CalibrationPoint]] = None, *,
+                      presets: Optional[Dict[str, DeviceProfile]] = None
+                      ) -> Dict[str, DeviceProfile]:
+    """The calibrated preset registry: every preset with measured points
+    gets its own fit; every other preset inherits the MEAN fitted factors
+    as a transfer prior (marked ``calibrated_from="transfer:..."`` — the
+    best available estimate until that device is measured).
+
+    ``repro.sim.fleet.make_fleet(..., calibrated=True)`` samples from this
+    registry's default instance (``CALIBRATED_PRESETS``)."""
+    if points is None:
+        points = PAPER_2080TI_ANCHOR
+    presets = dict(PRESETS if presets is None else presets)
+    by_preset: Dict[str, list] = {}
+    for p in points:
+        by_preset.setdefault(p.fleet, []).append(p)
+    fits = {name: fit_device(ps, presets.get(name))
+            for name, ps in by_preset.items()}
+    if not fits:
+        raise ValueError("no calibration points")
+    mean_fit = EfficiencyFit(
+        mfu=float(np.exp(np.mean([np.log(f.mfu) for f in fits.values()]))),
+        bw_eff=float(np.exp(np.mean([np.log(f.bw_eff)
+                                     for f in fits.values()]))),
+        max_rel_err=max(f.max_rel_err for f in fits.values()),
+        n_points=sum(f.n_points for f in fits.values()),
+        source="transfer:" + "+".join(sorted(fits)))
+    out = {}
+    for name, dev in presets.items():
+        fit = fits.get(name, mean_fit)
+        out[name] = apply_fit(dev, fit)
+    return out
+
+
+# Default registry: the paper anchor's factors, fitted once at import (the
+# fit is a few thousand numpy grid evaluations — microseconds).
+CALIBRATED_PRESETS: Dict[str, DeviceProfile] = calibrate_presets()

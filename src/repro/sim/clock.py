@@ -2,18 +2,30 @@
 
 Maps the static compute/comm ledger a ``FedSession`` round records (per-step
 dot FLOPs and HBM bytes from ``repro.telemetry``, wire bytes from the
-strategy) onto a ``DeviceProfile``:
+strategy) onto a ``DeviceProfile``.  Inputs are FLOPs / bytes / bytes-per-
+second; every output is SECONDS:
 
     step_s    = max(flops / peak_flops, hbm_bytes / hbm_bw)   (roofline)
     compute_s = n_steps x step_s
     down_s    = latency + download_bytes / down_bw
     up_s      = latency + upload_bytes / up_bw
 
-The model is intentionally first-order: no overlap of compute with
-communication, no batching of the two transfer directions.  That is the
-conservative sync-FL schedule (download, train, upload) every deployment
-starts from; the event simulator (``repro.sim.events``) layers dropouts,
-deadlines, and async aggregation on top of these per-client terms.
+Two clock modes turn the phase terms into a round:
+
+  * sequential (default) — download, train, upload, one after the other:
+    ``total_s = down_s + compute_s + up_s``.  The conservative sync-FL
+    schedule every deployment starts from.
+  * overlap — download/compute and compute/upload pipeline (the client
+    streams the next parameters while stepping and streams its update out
+    as layers finish): only the per-transfer latencies stay serial and the
+    longest phase gates the round,
+    ``total_overlap_s = 2 x latency + max(down_xfer, compute_s, up_xfer)``.
+    Always <= the sequential total (pinned as a property test in
+    tests/test_sim.py).
+
+The event simulator (``repro.sim.events``) layers dropouts, deadlines, and
+async aggregation on top of these per-client terms; both modes are
+selectable there and from ``repro.launch.train --overlap``.
 """
 
 from __future__ import annotations
@@ -26,43 +38,98 @@ from repro.sim.fleet import DeviceProfile, Fleet
 
 @dataclasses.dataclass(frozen=True)
 class ClientTiming:
-    """One client's simulated round, split into the sync-FL phases."""
+    """One client's simulated round, split into the sync-FL phases.
+
+    All fields are seconds except ``client`` (id), ``device`` (preset name)
+    and ``n_steps`` (local optimizer steps behind ``compute_s``).
+    ``latency_s`` is the per-transfer handshake already INCLUDED in
+    ``down_s``/``up_s`` — kept so the overlap clock can separate the serial
+    handshake from the pipelinable transfer."""
 
     client: int
     device: str
-    down_s: float
-    compute_s: float
-    up_s: float
+    down_s: float                 # latency + download_bytes / down_bw
+    compute_s: float              # n_steps x roofline step seconds
+    up_s: float                   # latency + upload_bytes / up_bw
+    n_steps: int = 0
+    latency_s: float = 0.0
 
     @property
     def total_s(self) -> float:
-        return self.down_s + self.compute_s + self.up_s
+        """Sequential round seconds: down, then compute, then up."""
+        return phase_total_s(self.down_s, self.compute_s, self.up_s,
+                             self.latency_s, False)
+
+    @property
+    def total_overlap_s(self) -> float:
+        """Pipelined round seconds: latencies stay serial, the longest of
+        {download transfer, compute, upload transfer} gates the round."""
+        return phase_total_s(self.down_s, self.compute_s, self.up_s,
+                             self.latency_s, True)
+
+    def total(self, overlap: bool = False) -> float:
+        """Round seconds under the chosen clock mode."""
+        return self.total_overlap_s if overlap else self.total_s
+
+
+def phase_total_s(down_s: float, compute_s: float, up_s: float,
+                  latency_s: float, overlap: bool) -> float:
+    """THE round-assembly rule, in one place: phase seconds -> round
+    seconds.  Sequential is the plain sum; overlap keeps only the two
+    per-transfer handshakes serial and lets the longest of {download
+    transfer, compute, upload transfer} gate the round.  Both
+    ``ClientTiming.total*`` and the event simulator's noisy totals
+    (``repro.sim.events``) delegate here, so the clock model cannot
+    desync between the live hook and the replays.
+
+    >>> phase_total_s(2.0, 5.0, 3.0, 0.5, False)
+    10.0
+    >>> phase_total_s(2.0, 5.0, 3.0, 0.5, True)    # 2*0.5 + max(1.5, 5, 2.5)
+    6.0
+    """
+    if overlap:
+        return 2.0 * latency_s + max(down_s - latency_s, compute_s,
+                                     up_s - latency_s)
+    return down_s + compute_s + up_s
 
 
 def step_time_s(step_flops: float, step_hbm_bytes: float,
                 dev: DeviceProfile) -> float:
-    """Roofline time of ONE local step: bounded by compute or HBM traffic,
-    whichever is slower on this device."""
+    """Roofline seconds of ONE local step: bounded by compute (FLOPs at
+    ``dev.peak_flops`` FLOP/s) or HBM traffic (bytes at ``dev.hbm_bw``
+    bytes/s), whichever is slower on this device."""
     return max(step_flops / dev.peak_flops, step_hbm_bytes / dev.hbm_bw)
 
 
 def comm_time_s(nbytes: float, bw: float, latency_s: float) -> float:
+    """Seconds to move ``nbytes`` bytes over a ``bw`` bytes/s link after a
+    fixed ``latency_s`` seconds handshake.
+
+    >>> comm_time_s(1_000_000, 1e6, 0.05)
+    1.05
+    """
     return latency_s + nbytes / max(bw, 1.0)
 
 
 def client_timing(k: int, dev: DeviceProfile, *, n_steps: int,
                   step_flops: float, step_hbm_bytes: float,
                   upload_bytes: float, download_bytes: float) -> ClientTiming:
+    """One client's phase seconds for a round of ``n_steps`` local steps of
+    (``step_flops`` FLOPs, ``step_hbm_bytes`` bytes) each, moving
+    ``download_bytes``/``upload_bytes`` bytes over the device's link."""
     return ClientTiming(
         client=k, device=dev.name,
         down_s=comm_time_s(download_bytes, dev.down_bw, dev.latency_s),
         compute_s=n_steps * step_time_s(step_flops, step_hbm_bytes, dev),
-        up_s=comm_time_s(upload_bytes, dev.up_bw, dev.latency_s))
+        up_s=comm_time_s(upload_bytes, dev.up_bw, dev.latency_s),
+        n_steps=n_steps, latency_s=dev.latency_s)
 
 
 def ledger_lists(rr: Any):
     """Resolve a round's per-client replay ledger with its defaults:
-    ``(clients, steps, step_flops, step_hbm, upload_bytes, down_each)``.
+    ``(clients, steps, step_flops, step_hbm, upload_bytes, down_each)`` —
+    client ids, local step counts, per-STEP FLOPs, per-STEP HBM bytes,
+    per-client upload bytes, and the per-client download bytes share.
 
     ``rr`` is duck-typed on the ``RoundResult`` replay fields
     (``clients``, ``client_steps``, ``client_step_flops``,
@@ -85,8 +152,8 @@ def ledger_lists(rr: Any):
 
 
 def round_timings(rr: Any, fleet: Fleet) -> List[ClientTiming]:
-    """Per-client timings for one recorded round (see ``ledger_lists`` for
-    the accepted record shape).  Sessions run with ``telemetry=False``
+    """Per-client phase seconds for one recorded round (see ``ledger_lists``
+    for the accepted record shape).  Sessions run with ``telemetry=False``
     record zero compute terms — the simulation then degenerates to
     comm-only time; run with telemetry on for wall-clock numbers."""
     clients, steps, flops, hbm, up, down_each = ledger_lists(rr)
@@ -96,12 +163,14 @@ def round_timings(rr: Any, fleet: Fleet) -> List[ClientTiming]:
             for i, k in enumerate(clients)]
 
 
-def sync_round_s(rr: Any, fleet: Fleet) -> float:
-    """Ideal (dropout-free) synchronous round time: the server waits for the
-    slowest sampled client.  This is what ``RoundPlan.simulate`` records
-    live; ``repro.sim.events`` adds availability noise and other modes."""
+def sync_round_s(rr: Any, fleet: Fleet, *, overlap: bool = False) -> float:
+    """Ideal (dropout-free) synchronous round SECONDS: the server waits for
+    the slowest sampled client.  This is what ``RoundPlan.simulate`` records
+    live; ``repro.sim.events`` adds availability noise and other modes.
+    ``overlap=True`` uses the pipelined clock (``ClientTiming.
+    total_overlap_s``) instead of the sequential phase sum."""
     ts = round_timings(rr, fleet)
-    return max((t.total_s for t in ts), default=0.0)
+    return max((t.total(overlap) for t in ts), default=0.0)
 
 
 def resolve_fleet(spec: Any, n_clients: int, seed: int = 0) -> Fleet:
@@ -118,8 +187,9 @@ def resolve_fleet(spec: Any, n_clients: int, seed: int = 0) -> Fleet:
 
 def device_roofline_s(flops: float, hbm_bytes: float, comm_bytes: float,
                       dev: DeviceProfile) -> dict:
-    """Ledger totals -> the three roofline terms in seconds on one device
-    (``benchmarks/roofline.py`` merges session rounds through this)."""
+    """Ledger totals (FLOPs, HBM bytes, wire bytes) -> the three roofline
+    terms in SECONDS on one device (``benchmarks/roofline.py`` merges
+    session rounds through this)."""
     return {"compute": flops / dev.peak_flops,
             "memory": hbm_bytes / dev.hbm_bw,
             "collective": comm_bytes / max(dev.up_bw, 1.0)}

@@ -18,11 +18,24 @@ schedules:
     is recorded per update — feed the observed taus to
     ``AsyncFedAvg(staleness=...)`` to run the learning math the schedule
     implies (the simulator and the strategy share one discount rule).
+    Each client replays its OWN recorded per-epoch workload (cycled round by
+    round), not a fleet mean — under quantity skew (Dirichlet / Eq. 8
+    partitions) big-data clients take proportionally longer per epoch, so
+    staleness tau correlates with client data volume exactly as it would on
+    a real fleet.  ``client_steps`` overrides the per-epoch step counts
+    directly (thread ``repro.core.noniid.make_client_datasets()["steps"]``
+    through it when the recorded ledger is rectangular, e.g. the parallel
+    engine's).
+
+Every schedule accepts ``overlap=True`` to time clients with the pipelined
+clock (``repro.sim.clock.ClientTiming.total_overlap_s`` — download/compute
+and compute/upload overlap; only latencies stay serial) instead of the
+sequential phase sum.  All times are seconds.
 
 Everything is deterministic in ``seed``: failures, over-selection draws, and
 the event heap's tie-break (time, then client id) are all
 ``np.random.default_rng``-driven, so a simulated ledger is a reproducible
-artifact of (history, fleet, mode, seed).
+artifact of (history, fleet, mode, clock, seed).
 """
 
 from __future__ import annotations
@@ -34,14 +47,16 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.sim.clock import ClientTiming, round_timings
+from repro.sim.clock import ClientTiming, phase_total_s, round_timings
 from repro.sim.fleet import Fleet
 
 
 @dataclasses.dataclass(frozen=True)
 class RoundSim:
     """One simulated server aggregation (a round in sync/deadline modes,
-    one buffer flush in async mode)."""
+    one buffer flush in async mode).  ``t_start``/``t_end`` are seconds of
+    simulated wall-clock since the session started; ``staleness`` entries
+    are server-version deltas (dimensionless counts)."""
 
     round: int
     t_start: float
@@ -53,30 +68,41 @@ class RoundSim:
 
     @property
     def round_s(self) -> float:
+        """Seconds this aggregation took (t_end - t_start)."""
         return self.t_end - self.t_start
 
 
 @dataclasses.dataclass(frozen=True)
 class SimReport:
+    """A full simulated session: ``mode`` is the server schedule
+    (sync | deadline | async), ``overlap`` the clock mode, and every time
+    property is seconds of simulated wall-clock."""
+
     mode: str
     fleet: str
     rounds: Tuple[RoundSim, ...]
     seed: int = 0
+    overlap: bool = False
 
     @property
     def total_s(self) -> float:
+        """Seconds from session start to the last aggregation."""
         return self.rounds[-1].t_end if self.rounds else 0.0
 
     @property
     def mean_round_s(self) -> float:
+        """Mean seconds per aggregation."""
         return (float(np.mean([r.round_s for r in self.rounds]))
                 if self.rounds else 0.0)
 
     @property
     def dropped_total(self) -> int:
+        """Selected-but-not-aggregated client count over the session."""
         return sum(len(r.dropped) for r in self.rounds)
 
     def staleness_histogram(self) -> Dict[int, int]:
+        """tau -> number of aggregated updates that arrived tau server
+        versions stale (async mode; empty for sync/deadline)."""
         out: Dict[int, int] = {}
         for r in self.rounds:
             for tau in r.staleness:
@@ -84,41 +110,56 @@ class SimReport:
         return out
 
 
-def _failed_compute_s(timing: ClientTiming, dev_dropout: float,
+def _failed_compute_s(compute_s: float, dev_dropout: float,
                       rng: np.random.Generator) -> float:
     """Compute seconds including availability noise: with probability
     ``dropout`` the client dies at a uniform point of its local epoch and
     restarts from scratch (no local checkpointing), once per round."""
     extra = 0.0
     if dev_dropout > 0.0 and rng.random() < dev_dropout:
-        extra = rng.random() * timing.compute_s
-    return timing.compute_s + extra
+        extra = rng.random() * compute_s
+    return compute_s + extra
+
+
+def _phase_total(timing: ClientTiming, compute_s: float,
+                 overlap: bool) -> float:
+    """Assemble round seconds from phase terms under the chosen clock mode
+    (``compute_s`` may carry availability noise on top of the timing's).
+    Delegates to ``repro.sim.clock.phase_total_s`` — one clock rule for the
+    live hook and the replays."""
+    return phase_total_s(timing.down_s, compute_s, timing.up_s,
+                         timing.latency_s, overlap)
 
 
 def _noisy_total(timing: ClientTiming, dropout: float,
-                 rng: np.random.Generator) -> float:
-    return (timing.down_s + _failed_compute_s(timing, dropout, rng)
-            + timing.up_s)
+                 rng: np.random.Generator, overlap: bool = False) -> float:
+    return _phase_total(timing,
+                        _failed_compute_s(timing.compute_s, dropout, rng),
+                        overlap)
 
 
 # ---------------------------------------------------------------------------
 # Sync FedAvg: wait for the slowest client
 # ---------------------------------------------------------------------------
 
-def simulate_sync(history: Sequence[Any], fleet: Fleet, *,
-                  seed: int = 0) -> SimReport:
+def simulate_sync(history: Sequence[Any], fleet: Fleet, *, seed: int = 0,
+                  overlap: bool = False) -> SimReport:
+    """Replay ``history`` as paper-style sync FedAvg: every round closes at
+    the slowest sampled client's upload (seconds; seeded dropout-restart
+    noise on the compute phase; ``overlap`` picks the clock mode)."""
     rng = np.random.default_rng(seed)
     t = 0.0
     rounds: List[RoundSim] = []
     for rr in history:
         ts = round_timings(rr, fleet)
-        totals = [_noisy_total(x, fleet[x.client].dropout, rng) for x in ts]
+        totals = [_noisy_total(x, fleet[x.client].dropout, rng, overlap)
+                  for x in ts]
         end = t + (max(totals) if totals else 0.0)
         rounds.append(RoundSim(rr.round, t, end,
                                tuple(x.client for x in ts),
                                timings=tuple(ts)))
         t = end
-    return SimReport("sync", fleet.name, tuple(rounds), seed)
+    return SimReport("sync", fleet.name, tuple(rounds), seed, overlap)
 
 
 # ---------------------------------------------------------------------------
@@ -126,10 +167,12 @@ def simulate_sync(history: Sequence[Any], fleet: Fleet, *,
 # ---------------------------------------------------------------------------
 
 def _mean_work(rr: Any) -> Tuple[int, float, float, float, float]:
-    """The round's average local workload, assigned to over-selected extras
-    (their data size is unknown to the replay — the server would hand them
-    an average shard).  Defaults resolve through ``clock.ledger_lists`` so
-    extras and sampled clients share one rule set."""
+    """The round's average local workload — (steps, FLOPs/step, HBM
+    bytes/step, upload bytes, download bytes) — assigned to over-selected
+    extras (their data size is unknown to the replay — the server would
+    hand them an average shard).  Defaults resolve through
+    ``clock.ledger_lists`` so extras and sampled clients share one rule
+    set."""
     from repro.sim.clock import ledger_lists
     _, steps, flops, hbm, up, down = ledger_lists(rr)
     return (int(round(np.mean(steps))), float(np.mean(flops)),
@@ -138,13 +181,15 @@ def _mean_work(rr: Any) -> Tuple[int, float, float, float, float]:
 
 def simulate_deadline(history: Sequence[Any], fleet: Fleet, *,
                       deadline_s: float, over_select: float = 1.5,
-                      quorum_frac: float = 0.8, seed: int = 0) -> SimReport:
-    """Sync FedAvg with a round deadline: the server selects
-    ``ceil(over_select x n)`` clients, aggregates whoever uploaded by
-    ``deadline_s``, and drops the rest — but never below
+                      quorum_frac: float = 0.8, seed: int = 0,
+                      overlap: bool = False) -> SimReport:
+    """Sync FedAvg with a round deadline (``deadline_s`` seconds): the
+    server selects ``ceil(over_select x n)`` clients, aggregates whoever
+    uploaded by ``deadline_s``, and drops the rest — but never below
     ``quorum = ceil(quorum_frac x n)``; when fewer beat the deadline the
     round runs long until the quorum-th upload (availability must not
-    silently shrink the effective cohort)."""
+    silently shrink the effective cohort).  ``overlap`` picks the clock
+    mode for every client's phase seconds."""
     from repro.sim.clock import client_timing
     if not 0.0 < quorum_frac <= 1.0:
         raise ValueError(f"quorum_frac {quorum_frac} not in (0, 1]")
@@ -168,8 +213,8 @@ def simulate_deadline(history: Sequence[Any], fleet: Fleet, *,
             ts.append(client_timing(k, fleet[k], n_steps=steps,
                                     step_flops=flops, step_hbm_bytes=hbm,
                                     upload_bytes=up, download_bytes=down))
-        finish = sorted((_noisy_total(x, fleet[x.client].dropout, rng),
-                         x.client) for x in ts)
+        finish = sorted((_noisy_total(x, fleet[x.client].dropout, rng,
+                                      overlap), x.client) for x in ts)
         quorum = max(1, math.ceil(quorum_frac * n))
         made_it = [(f, k) for f, k in finish if f <= deadline_s]
         if len(made_it) == len(finish):
@@ -188,7 +233,7 @@ def simulate_deadline(history: Sequence[Any], fleet: Fleet, *,
                                  if x.client not in kept_ids)),
             timings=tuple(ts)))
         t += round_s
-    return SimReport("deadline", fleet.name, tuple(rounds), seed)
+    return SimReport("deadline", fleet.name, tuple(rounds), seed, overlap)
 
 
 # ---------------------------------------------------------------------------
@@ -196,39 +241,62 @@ def simulate_deadline(history: Sequence[Any], fleet: Fleet, *,
 # ---------------------------------------------------------------------------
 
 def simulate_async(history: Sequence[Any], fleet: Fleet, *,
-                   buffer_size: int = 2, seed: int = 0) -> SimReport:
+                   buffer_size: int = 2, seed: int = 0,
+                   overlap: bool = False,
+                   client_steps: Optional[Any] = None) -> SimReport:
     """FedBuff schedule: every client loops download -> local epoch ->
     upload, immediately restarting on the server's CURRENT version; the
     server flushes its buffer every ``buffer_size`` uploads.  Runs until as
     many aggregations happened as the history had rounds, so sync and async
     ledgers describe the same number of model updates.
 
-    Per-client epoch time is the mean of that client's recorded rounds
-    (async has no rounds, so the replay assigns each client its average
-    local workload).  Staleness per update is recorded; its histogram is
-    the fleet's heterogeneity made visible — feed the taus to
+    Each client's i-th epoch replays its i-th RECORDED round (cycled), so
+    per-client quantity skew survives into the schedule: a client holding
+    2x the documents runs ~2x the local steps per epoch, uploads half as
+    often, and its updates land with larger staleness tau — the correlation
+    the non-IID study needs (a fleet-mean replay would flatten it).
+    ``client_steps`` (sequence indexed by client id, or {client: steps}
+    dict) overrides the recorded per-epoch step counts — each epoch's
+    compute seconds are rescaled to ``steps_k x`` that epoch's per-step
+    seconds.  Use it to thread partition sizes
+    (``repro.core.noniid.make_client_datasets()["steps"]``) through a
+    rectangular ledger (the parallel engine pads every client to
+    ``max_steps``).
+
+    Staleness per update is recorded; its histogram is the fleet's (and the
+    partition's) heterogeneity made visible — feed the taus to
     ``AsyncFedAvg(staleness=...)`` for the matching aggregation math."""
     if buffer_size < 1:
         raise ValueError(f"buffer_size {buffer_size} < 1")
     rng = np.random.default_rng(seed)
-    # mean per-client epoch seconds over the recorded history
+    # per-client recorded epochs, in round order (cycled during replay)
     per_client: Dict[int, List[ClientTiming]] = {}
     for rr in history:
         for x in round_timings(rr, fleet):
             per_client.setdefault(x.client, []).append(x)
     if not per_client:
-        return SimReport("async", fleet.name, (), seed)
-    epoch_s = {k: float(np.mean([x.total_s for x in xs]))
-               for k, xs in per_client.items()}
-    compute_s = {k: float(np.mean([x.compute_s for x in xs]))
-                 for k, xs in per_client.items()}
+        return SimReport("async", fleet.name, (), seed, overlap)
+
+    def steps_for(k: int) -> Optional[int]:
+        if client_steps is None:
+            return None
+        if isinstance(client_steps, dict):
+            return client_steps.get(k)
+        return client_steps[k] if 0 <= k < len(client_steps) else None
+
+    epoch_i: Dict[int, int] = {k: 0 for k in per_client}
 
     def next_finish(k: int, now: float) -> float:
+        xs = per_client[k]
+        x = xs[epoch_i[k] % len(xs)]
+        epoch_i[k] += 1
+        compute = x.compute_s
+        override = steps_for(k)
+        if override is not None and x.n_steps > 0:
+            compute = override * (x.compute_s / x.n_steps)
         # availability noise: seeded failure mid-epoch + restart
-        extra = 0.0
-        if fleet[k].dropout > 0.0 and rng.random() < fleet[k].dropout:
-            extra = rng.random() * compute_s[k]
-        return now + epoch_s[k] + extra
+        compute = _failed_compute_s(compute, fleet[k].dropout, rng)
+        return now + _phase_total(x, compute, overlap)
 
     n_agg_target = len(history)
     heap: List[Tuple[float, int]] = []      # (finish time, client)
@@ -254,7 +322,7 @@ def simulate_async(history: Sequence[Any], fleet: Fleet, *,
             buffer = []
         version_at_start[k] = server_version
         heapq.heappush(heap, (next_finish(k, t), k))
-    return SimReport("async", fleet.name, tuple(rounds), seed)
+    return SimReport("async", fleet.name, tuple(rounds), seed, overlap)
 
 
 # ---------------------------------------------------------------------------
@@ -264,22 +332,30 @@ def simulate_async(history: Sequence[Any], fleet: Fleet, *,
 def simulate(history: Sequence[Any], fleet: Fleet, *, mode: str = "sync",
              seed: int = 0, deadline_s: float = 0.0,
              over_select: float = 1.5, quorum_frac: float = 0.8,
-             buffer_size: int = 2) -> SimReport:
+             buffer_size: int = 2, overlap: bool = False,
+             client_steps: Optional[Any] = None) -> SimReport:
+    """One entry point over the three schedules (see the module docstring).
+    ``overlap`` selects the pipelined clock for any mode; ``client_steps``
+    is the async schedule's per-client step override (ignored elsewhere —
+    sync/deadline replay the ledger's own per-client counts)."""
     if mode == "sync":
-        return simulate_sync(history, fleet, seed=seed)
+        return simulate_sync(history, fleet, seed=seed, overlap=overlap)
     if mode == "deadline":
         return simulate_deadline(history, fleet, deadline_s=deadline_s,
                                  over_select=over_select,
-                                 quorum_frac=quorum_frac, seed=seed)
+                                 quorum_frac=quorum_frac, seed=seed,
+                                 overlap=overlap)
     if mode == "async":
         return simulate_async(history, fleet, buffer_size=buffer_size,
-                              seed=seed)
+                              seed=seed, overlap=overlap,
+                              client_steps=client_steps)
     raise ValueError(f"unknown mode {mode!r} (sync | deadline | async)")
 
 
 def ledger_lines(report: SimReport) -> List[str]:
     """Human-readable per-aggregation ledger (the train driver prints it)."""
-    out = [f"simulated wall-clock [{report.mode}] fleet={report.fleet} "
+    clock = " clock=overlap" if report.overlap else ""
+    out = [f"simulated wall-clock [{report.mode}] fleet={report.fleet}{clock} "
            f"total={report.total_s:.1f}s mean_round={report.mean_round_s:.1f}s"
            f" dropped={report.dropped_total}"]
     for r in report.rounds:

@@ -28,18 +28,33 @@ import numpy as np
 
 
 def mbps(x: float) -> float:
-    """Megabits/s -> bytes/s."""
+    """Megabits/s -> bytes/s.
+
+    >>> mbps(8.0)
+    1000000.0
+    """
     return x * 1e6 / 8.0
 
 
 def gbps(x: float) -> float:
-    """Gigabits/s -> bytes/s."""
+    """Gigabits/s -> bytes/s.
+
+    >>> gbps(1.0)
+    125000000.0
+    """
     return x * 1e9 / 8.0
 
 
 @dataclasses.dataclass(frozen=True)
 class DeviceProfile:
-    """One client's hardware + link, the inputs of the roofline time model."""
+    """One client's hardware + link, the inputs of the roofline time model.
+
+    Units: ``peak_flops`` is FLOP/s, the two ``*_bw`` fields and ``hbm_bw``
+    are bytes/s, ``latency_s`` is seconds, ``dropout`` is a probability.
+    ``calibrated_from`` is empty for datasheet presets; a calibrated profile
+    (``repro.sim.calibrate``) names the measurement it was fitted to, so a
+    ledger simulated on it carries its own provenance.
+    """
 
     name: str
     peak_flops: float             # sustained dense FLOP/s (training precision)
@@ -47,7 +62,8 @@ class DeviceProfile:
     up_bw: float                  # client->server bytes/s
     down_bw: float                # server->client bytes/s
     dropout: float = 0.0          # P(mid-round failure) per round
-    latency_s: float = 0.05       # fixed per-transfer overhead (RTT + setup)
+    latency_s: float = 0.05       # fixed per-transfer overhead (RTT + setup), s
+    calibrated_from: str = ""     # provenance: "" = datasheet numbers
 
 
 PRESETS: Dict[str, DeviceProfile] = {
@@ -119,21 +135,32 @@ class Fleet:
 
 
 def sample_fleet(mix: Dict[str, float], n: int, *, seed: int = 0,
-                 name: str = "custom") -> Fleet:
+                 name: str = "custom", calibrated: bool = False) -> Fleet:
     """Draw n devices i.i.d. from ``mix`` (preset -> weight), deterministically
     in ``seed``.  Preset order is sorted, so dict ordering cannot change the
-    draw."""
+    draw.  ``calibrated=True`` draws from the measurement-anchored registry
+    (``repro.sim.calibrate.CALIBRATED_PRESETS``) instead of the datasheet
+    presets — same names, same sampling, fitted efficiency factors."""
     names = sorted(mix)
     w = np.asarray([mix[p] for p in names], dtype=np.float64)
     if np.any(w < 0) or w.sum() <= 0:
         raise ValueError(f"bad mixture weights {mix!r}")
+    presets = PRESETS
+    if calibrated:
+        from repro.sim.calibrate import CALIBRATED_PRESETS
+        presets = CALIBRATED_PRESETS
     rng = np.random.default_rng(seed)
     idx = rng.choice(len(names), size=n, p=w / w.sum())
-    return Fleet(name, tuple(PRESETS[names[i]] for i in idx), seed)
+    return Fleet(name, tuple(presets[names[i]] for i in idx), seed)
 
 
-def make_fleet(name: str, n: int, *, seed: int = 0) -> Fleet:
-    """Build a named fleet (see ``FLEETS``) of n clients."""
+def make_fleet(name: str, n: int, *, seed: int = 0,
+               calibrated: bool = False) -> Fleet:
+    """Build a named fleet (see ``FLEETS``) of n clients.  With
+    ``calibrated=True`` every device comes from the calibrated registry
+    (datasheet peaks scaled by the fitted MFU / effective-bandwidth factors
+    of ``repro.sim.calibrate.PAPER_2080TI_ANCHOR``)."""
     if name not in FLEET_MIXES:
         raise ValueError(f"unknown fleet {name!r} (want one of {FLEETS})")
-    return sample_fleet(FLEET_MIXES[name], n, seed=seed, name=name)
+    return sample_fleet(FLEET_MIXES[name], n, seed=seed, name=name,
+                        calibrated=calibrated)

@@ -1,9 +1,12 @@
 """repro.sim coverage: seeded determinism, the sync degenerate case,
-deadline quorum, async staleness bookkeeping, and AsyncFedAvg parity.
+deadline quorum, async staleness bookkeeping, the overlap clock, the
+skew-aware async replay, and AsyncFedAvg parity.
 
 The parity contract is the load-bearing one: AsyncFedAvg with no staleness
 must be BITWISE equal to FedAvg on both engines, so turning the async axis
-on cannot silently perturb the paper's baseline math.
+on cannot silently perturb the paper's baseline math.  The overlap clock's
+contract is an inequality: pipelining can only hide time, never add it
+(property-tested over every preset).
 """
 
 import dataclasses
@@ -12,6 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from _hyp import given, settings, st
 
 from repro import optim
 from repro.configs import get_config
@@ -22,8 +26,8 @@ from repro.core.strategy import FedAvg, make_strategy
 from repro.data.corpus import generate_corpus
 from repro.models.model import init_model
 from repro.nn import param as P
-from repro.sim import (FLEETS, PRESETS, DeviceProfile, Fleet, make_fleet,
-                       sample_fleet, simulate, simulate_async,
+from repro.sim import (FLEETS, PRESETS, DeviceProfile, Fleet, client_timing,
+                       make_fleet, sample_fleet, simulate, simulate_async,
                        simulate_deadline, simulate_sync, step_time_s,
                        sync_round_s)
 
@@ -163,6 +167,68 @@ def test_deadline_over_selection_adds_clients():
 
 
 # ---------------------------------------------------------------------------
+# overlap clock: pipelining can only hide time, never add it
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40)
+@given(flops=st.floats(min_value=1e9, max_value=1e15),
+       hbm=st.floats(min_value=1e6, max_value=1e12),
+       steps=st.integers(min_value=1, max_value=64),
+       nbytes=st.floats(min_value=0.0, max_value=1e10))
+def test_overlap_never_slower_on_any_preset(flops, hbm, steps, nbytes):
+    """Property: for EVERY device preset and any workload, the pipelined
+    round time is <= the sequential phase sum (and >= the longest single
+    phase — it cannot hide the bottleneck itself)."""
+    for dev in PRESETS.values():
+        t = client_timing(0, dev, n_steps=steps, step_flops=flops,
+                          step_hbm_bytes=hbm, upload_bytes=nbytes,
+                          download_bytes=nbytes)
+        assert t.total_overlap_s <= t.total_s * (1 + 1e-12)
+        assert t.total_overlap_s >= max(t.down_s, t.compute_s, t.up_s) \
+            - 1e-12
+        assert t.total(True) == t.total_overlap_s
+        assert t.total(False) == t.total_s
+
+
+def test_overlap_threads_through_every_schedule():
+    """Same seed, same fleet: the overlap clock's totals are <= the
+    sequential ones on all three server schedules (the dropout noise draws
+    are identical, so the inequality holds path-by-path)."""
+    hist = [_round(t, k=6) for t in range(4)]
+    fleet = make_fleet("edge-mixed", 6, seed=2)
+    for mode, kw in (("sync", {}), ("deadline", {"deadline_s": 30.0}),
+                     ("async", {"buffer_size": 2})):
+        seq = simulate(hist, fleet, mode=mode, seed=5, **kw)
+        ov = simulate(hist, fleet, mode=mode, seed=5, overlap=True, **kw)
+        assert ov.overlap and not seq.overlap
+        assert ov.total_s <= seq.total_s * (1 + 1e-9)
+
+
+def test_overlap_bounded_by_bottleneck_phase():
+    # uplink-starved device: the upload transfer IS the round under overlap
+    dev = dataclasses.replace(PRESETS["phone"], dropout=0.0)
+    t = client_timing(0, dev, n_steps=1, step_flops=1e9,
+                      step_hbm_bytes=1e6, upload_bytes=50_000_000,
+                      download_bytes=1_000)
+    assert t.total_overlap_s == pytest.approx(
+        2 * dev.latency_s + (t.up_s - dev.latency_s), rel=1e-12)
+
+
+def test_roundplan_overlap_hook(params0, clients):
+    batches, sizes = clients
+    _, h_seq = FedSession(CFG, optim.adam(1e-4), n_rounds=1,
+                          client_sizes=sizes,
+                          simulate="uniform-a100").run(params0, batches)
+    _, h_ov = FedSession(CFG, optim.adam(1e-4), n_rounds=1,
+                         client_sizes=sizes, simulate="uniform-a100",
+                         overlap=True).run(params0, batches)
+    assert 0 < h_ov[0].sim_round_s <= h_seq[0].sim_round_s
+    fleet = make_fleet("uniform-a100", len(batches), seed=0)
+    assert h_ov[0].sim_round_s == pytest.approx(
+        sync_round_s(h_ov[0], fleet, overlap=True), rel=1e-9)
+
+
+# ---------------------------------------------------------------------------
 # async: buffer flushes, staleness recorded
 # ---------------------------------------------------------------------------
 
@@ -182,6 +248,72 @@ def test_async_buffer_and_staleness():
         simulate_async(hist, fleet, buffer_size=0)
     with pytest.raises(ValueError):
         simulate(hist, fleet, mode="warp")
+
+
+# ---------------------------------------------------------------------------
+# async under quantity skew: staleness correlates with data volume
+# ---------------------------------------------------------------------------
+
+def _skew_round(t, steps_per_client):
+    k = len(steps_per_client)
+    return RoundResult(
+        t, 0.0, 0.0, clients=list(range(k)),
+        client_steps=list(steps_per_client),
+        client_step_flops=[1e12] * k, client_step_hbm=[1e9] * k,
+        client_upload_bytes=[10_000_000] * k,
+        upload_bytes=10_000_000 * k, download_bytes=10_000_000 * k)
+
+
+def test_async_staleness_shifts_under_quantity_skew():
+    """Pinned seeded behavior of the skew-aware replay: on a homogeneous
+    dropout-free fleet, threading a quantity-skewed per-epoch step schedule
+    through the async simulator (1) changes the staleness histogram vs the
+    uniform schedule, (2) extends its tail, and (3) makes each client's
+    mean tau increase with its local step count — big-data clients upload
+    less often and land staler, which is the behavior the non-IID study
+    needs the schedule to expose."""
+    fleet = Fleet("homog", (PRESETS["a100"],) * 4)      # dropout 0 — exact
+    uni = simulate_async([_skew_round(t, [8] * 4) for t in range(40)],
+                         fleet, buffer_size=2, seed=0)
+    ske = simulate_async([_skew_round(t, [2, 4, 12, 30]) for t in range(40)],
+                         fleet, buffer_size=2, seed=0)
+    assert uni.staleness_histogram() == {0: 2, 1: 40, 2: 38}
+    assert ske.staleness_histogram() == {0: 11, 1: 43, 2: 15, 3: 4,
+                                         4: 5, 5: 2}
+    per = {}
+    ups = {}
+    for r in ske.rounds:
+        for c, tau in zip(r.clients, r.staleness):
+            per.setdefault(c, []).append(tau)
+            ups[c] = ups.get(c, 0) + 1
+    mean_tau = [float(np.mean(per[c])) for c in range(4)]
+    assert mean_tau == sorted(mean_tau)            # tau grows with steps
+    assert ups[0] > ups[3]                         # small client uploads more
+    # determinism of the schedule replay
+    again = simulate_async([_skew_round(t, [2, 4, 12, 30])
+                            for t in range(40)], fleet, buffer_size=2, seed=0)
+    assert again == ske
+
+
+def test_async_client_steps_override_matches_skewed_ledger():
+    """client_steps= (the noniid ``steps`` schedule) over a rectangular
+    ledger must reproduce the natively-skewed ledger's schedule — that is
+    the parallel-engine path (it pads every client to max_steps)."""
+    fleet = Fleet("homog", (PRESETS["a100"],) * 4)
+    skewed = simulate_async([_skew_round(t, [2, 4, 12, 30])
+                             for t in range(12)], fleet, buffer_size=2,
+                            seed=3)
+    rect = simulate_async([_skew_round(t, [30] * 4) for t in range(12)],
+                          fleet, buffer_size=2, seed=3,
+                          client_steps=[2, 4, 12, 30])
+    assert rect.staleness_histogram() == skewed.staleness_histogram()
+    assert [r.clients for r in rect.rounds] == \
+        [r.clients for r in skewed.rounds]
+    # dict form addresses clients by id
+    rect_d = simulate_async([_skew_round(t, [30] * 4) for t in range(12)],
+                            fleet, buffer_size=2, seed=3,
+                            client_steps={0: 2, 1: 4, 2: 12, 3: 30})
+    assert rect_d == rect
 
 
 # ---------------------------------------------------------------------------

@@ -14,3 +14,6 @@ python benchmarks/ffdapt_efficiency.py --tiny
 
 echo "== wallclock (tiny, calibrated + overlap checks) =="
 python benchmarks/wallclock.py --tiny --calibrated
+
+echo "== resume smoke (checkpoint -> resume bitwise parity) =="
+bash scripts/resume_smoke.sh

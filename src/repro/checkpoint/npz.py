@@ -2,18 +2,31 @@
 
 Trees are flattened to ``path/to/leaf`` keys; restore rebuilds against a
 template tree (structure is authoritative from the template, values from the
-archive).  ``FederatedState`` wraps the full FDAPT run state — global params,
-round counter, and the FFDAPT pointer — so a federated run resumes
-mid-schedule.
+archive).  Arrays round-trip BITWISE: float leaves are stored as their exact
+bytes (bf16 via a uint16 view) and ``restore_checkpoint`` casts back to the
+template dtype, which is the identity when dtypes match.
+
+``FederatedState`` wraps the full FDAPT run state the round engines need to
+resume mid-schedule: the next round to run, the FFDAPT rotation pointer at
+that round, the client-sampling ``numpy.random.Generator`` bit-state, the
+serialized ``RoundResult`` history (losses, ledgers, client selections — so
+post-hoc ``repro.sim`` replays survive restarts), and a plan fingerprint the
+resume path verifies.  The array side of the run state — global params plus
+the strategy's server-state pytree (``FederatedStrategy.state_to_tree``) —
+rides in the same ``save_checkpoint`` archive; ``FederatedState`` is its
+``extra`` JSON sidecar.  ``FedSession.run(..., resume=True)``
+(``repro.core.rounds``) writes and consumes both: a run killed after round r
+and resumed is bitwise identical to the uninterrupted run.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import json
 import os
 import re
-from typing import Any, Dict, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import numpy as np
@@ -36,19 +49,38 @@ def _flatten(tree: Any) -> Dict[str, np.ndarray]:
 def save_checkpoint(directory: str, step: int, tree: Any,
                     extra: Optional[Dict[str, Any]] = None,
                     *, keep: int = 3) -> str:
+    """Write one checkpoint ATOMICALLY: both files land under temp names
+    and are renamed into place, sidecar first, archive last.  The archive
+    is what ``latest_step`` keys on, so a preemption at any instant leaves
+    either the complete new checkpoint or no trace of it — a visible
+    ``ckpt_N.npz`` always has its full contents and its sidecar, and
+    ``resume`` can never pick up a torn write."""
     os.makedirs(directory, exist_ok=True)
     path = os.path.join(directory, f"ckpt_{step:08d}.npz")
-    np.savez(path, **_flatten(tree))
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        np.savez(f, **_flatten(tree))
     if extra is not None:
-        with open(path.replace(".npz", ".json"), "w") as f:
+        meta, mtmp = path.replace(".npz", ".json"), path + ".json.tmp"
+        with open(mtmp, "w") as f:
             json.dump(extra, f)
+        os.replace(mtmp, meta)
+    os.replace(tmp, path)
     _rotate(directory, keep)
     return path
 
 
 def _rotate(directory: str, keep: int) -> None:
-    ckpts = sorted(f for f in os.listdir(directory)
-                   if re.fullmatch(r"ckpt_\d+\.npz", f))
+    names = set(os.listdir(directory))
+    # debris from preempted saves: temp files were never renamed into
+    # place, and an orphan sidecar means the archive rename never happened
+    ckpts = sorted(f for f in names if re.fullmatch(r"ckpt_\d+\.npz", f))
+    for f in names:
+        stray = (f.startswith("ckpt_") and f.endswith(".tmp")) or (
+            re.fullmatch(r"ckpt_\d+\.json", f)
+            and f.replace(".json", ".npz") not in ckpts)
+        if stray:
+            os.remove(os.path.join(directory, f))
     for old in ckpts[:-keep]:
         os.remove(os.path.join(directory, old))
         meta = os.path.join(directory, old.replace(".npz", ".json"))
@@ -93,15 +125,49 @@ def restore_extra(directory: str, step: int) -> Optional[Dict[str, Any]]:
         return json.load(f)
 
 
+def tree_digest(tree: Any) -> str:
+    """sha256 over the flattened tree (keys + raw leaf bytes): a cheap
+    BITWISE fingerprint.  Two trees digest equal iff every leaf is
+    byte-identical — the resume smoke diffs final params through this."""
+    h = hashlib.sha256()
+    flat = _flatten(tree)
+    for key in sorted(flat):
+        h.update(key.encode())
+        h.update(np.ascontiguousarray(flat[key]).tobytes())
+    return h.hexdigest()
+
+
 @dataclasses.dataclass
 class FederatedState:
-    """Resumable FDAPT state: round counter + FFDAPT rotation pointer."""
+    """Resumable FDAPT run state (the ``extra`` sidecar of a round
+    checkpoint; see the module docstring).
+
+    ``round`` is the NEXT round to run (r+1 after round r completed);
+    ``ffdapt_start`` the rotation pointer at that round (0 without FFDAPT —
+    the resume path re-derives the schedule and verifies the pointer
+    matches); ``rng_state`` the client-sampling Generator's
+    ``bit_generator.state`` dict captured AFTER round r's participation
+    draw, so a resumed ``participation < 1`` run samples the exact clients
+    the uninterrupted run would; ``history`` the serialized
+    ``RoundResult.to_json()`` rounds so far; ``plan`` a fingerprint
+    guarding against resuming under a different plan — the resume path
+    raises on a mismatch of strategy (including its hyperparameters),
+    engine, seed, participation, ffdapt config, or client sizes, while
+    ``n_rounds`` is recorded for information only (resuming with a larger
+    ``n_rounds`` legitimately extends the run).  JSON round-trips exactly
+    (``from_json`` ignores unknown keys, so old two-field sidecars still
+    load)."""
+
     round: int = 0
     ffdapt_start: int = 0
+    rng_state: Optional[Dict[str, Any]] = None
+    history: List[Dict[str, Any]] = dataclasses.field(default_factory=list)
+    plan: Optional[Dict[str, Any]] = None
 
     def to_json(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)
 
     @classmethod
     def from_json(cls, d: Dict[str, Any]) -> "FederatedState":
-        return cls(**d)
+        names = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in names})

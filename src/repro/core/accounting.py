@@ -1,0 +1,25 @@
+"""Byte-accounting helpers shared across layers.
+
+Dependency-free on purpose: both the round engines (``repro.core.rounds``)
+and the lightweight sim replay path (``repro.sim.clock``) use these without
+pulling the training stack in.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+
+def split_bytes(total: int, k: int) -> List[int]:
+    """Per-client share of ``total`` upload bytes: even split with the
+    remainder spread one byte over the first ``total % k`` clients, so the
+    ledger sums EXACTLY to the round total (a plain ``total // k`` split
+    drops the remainder and the sim replay under-counts wire traffic).
+
+    >>> split_bytes(7, 2)
+    [4, 3]
+    >>> sum(split_bytes(10_000_001, 3))
+    10000001
+    """
+    base, rem = divmod(int(total), k)
+    return [base + (1 if i < rem else 0) for i in range(k)]

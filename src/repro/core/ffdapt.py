@@ -33,9 +33,14 @@ class FFDAPTConfig:
 
 def client_window_size(n_k: int, n_total: int, n_layers: int,
                        epsilon: int, gamma: float) -> int:
-    """Algorithm 1 line: N_k = min(eps, ceil(n_k/n * N) * gamma)."""
+    """Algorithm 1 line: N_k = min(eps, ceil(n_k/n * N) * gamma).
+
+    The gamma-scaled size is rounded HALF-UP, not truncated: ``int()``
+    floored the smallest clients' windows to 0 whenever ``gamma < 1``
+    (n_k=5, n=100, N=12, gamma=0.5 gave int(0.5) = 0 — no freezing at
+    all), silently disabling FFDAPT exactly where its saving matters."""
     raw = math.ceil(n_k / max(n_total, 1) * n_layers) * gamma
-    return max(0, min(int(epsilon), int(raw)))
+    return max(0, min(int(epsilon), math.floor(raw + 0.5)))
 
 
 def schedule(n_layers: int, client_sizes: Sequence[int], n_rounds: int,

@@ -26,6 +26,18 @@ cached process-wide, so the per-round cost is a dictionary lookup.
 then also record each round's per-client replay ledger and its ideal
 synchronous wall-clock time on that fleet.
 
+``RoundPlan.checkpoint_dir`` makes the run crash-safe: every
+``checkpoint_every`` completed rounds both engines write the full run state
+through ``repro.checkpoint`` — global params, the strategy's server-state
+pytree (``state_to_tree``), the client-sampling RNG bit-state, the FFDAPT
+pointer, and the serialized round history.  ``run(..., resume=True)``
+restores all of it and skips the completed rounds; a run killed after any
+round and resumed is BITWISE identical to the uninterrupted run (params and
+history), on both engines, for every strategy (pinned in
+tests/test_resume.py).  Checkpointing happens at round boundaries, where
+the paper's schedule holds no optimizer state (optimizers re-init each
+round), so params + server state + RNG + pointer IS the whole run state.
+
 Per the paper (Appendix E.1): optimizers are re-initialized at the start of
 each round's local training; 1 local epoch per round; 15 rounds.
 """
@@ -33,6 +45,7 @@ each round's local training; 1 local epoch per round; 15 rounds.
 from __future__ import annotations
 
 import dataclasses
+import json
 import time
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
@@ -41,6 +54,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import ffdapt as ffd
+from repro.core.accounting import split_bytes
 from repro.core.fedavg import broadcast_clients, fedavg_stacked
 from repro.core.strategy import FedAvg, FederatedStrategy
 from repro.models.steps import make_masked_train_step
@@ -78,6 +92,23 @@ class RoundResult:
     # filled when RoundPlan.simulate is set: ideal (dropout-free) sync
     # round seconds on the plan's fleet (repro.sim.clock.sync_round_s)
     sim_round_s: float = 0.0
+    # plan.eval_fn(params) after this round's aggregation; ``loss`` always
+    # keeps the round's TRAIN loss (eval used to overwrite it)
+    eval_loss: Optional[float] = None
+
+    def to_json(self) -> Dict[str, Any]:
+        """JSON-able dict (tuples become lists); ``from_json`` round-trips
+        exactly — floats survive via repr, so a serialized history replays
+        and compares bitwise."""
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, d: Dict[str, Any]) -> "RoundResult":
+        names = {f.name for f in dataclasses.fields(cls)}
+        d = {k: v for k, v in d.items() if k in names}
+        if d.get("windows") is not None:
+            d["windows"] = [(int(s), int(n)) for s, n in d["windows"]]
+        return cls(**d)
 
 
 @dataclasses.dataclass
@@ -106,6 +137,23 @@ class RoundPlan:
     # clock mode for sim_round_s: False = sequential down/compute/up sum,
     # True = pipelined overlap clock (repro.sim.clock).
     overlap: bool = False
+    # crash-safe checkpointing (repro.checkpoint): when set, both engines
+    # write the full run state (params + server state + RNG + FFDAPT
+    # pointer + history) every ``checkpoint_every`` completed rounds, plus
+    # at the final round and before a ``stop_after_round`` halt; ``_rotate``
+    # keeps the newest ``checkpoint_keep``.
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every: int = 1
+    checkpoint_keep: int = 3
+    # preemption hook (tests / the resume smoke): return after completing
+    # this many rounds, as if the process were killed right after the
+    # checkpoint — resume picks up the remaining rounds.
+    stop_after_round: Optional[int] = None
+    # extra JSON-able identity merged into the checkpoint plan fingerprint
+    # and verified on resume.  The session can fingerprint its own plan but
+    # not the optimizer (closures) or the data pipeline — the caller pins
+    # those here (train.py records lr/arch/batch/seq/docs/skew).
+    fingerprint_extra: Optional[Dict[str, Any]] = None
 
 
 def _epoch(step, params, opt_state, batches: Sequence[Dict[str, Any]],
@@ -146,30 +194,186 @@ class FedSession:
         self.optimizer = optimizer
         self.plan = plan
 
-    def run(self, params, client_batches: List[List[Dict[str, Any]]]):
+    def run(self, params, client_batches: List[List[Dict[str, Any]]],
+            *, resume: bool = False):
         """Returns (final_params, [RoundResult...]).
 
         client_batches[k] = that client's local batches for one epoch
         (re-used each round — the paper re-iterates the local dataset every
         round).  ``plan.client_sizes`` defaults to per-client batch counts
         (n_k of Algorithm 1).
+
+        ``resume=True`` restores the latest checkpoint in
+        ``plan.checkpoint_dir`` (params, server state, RNG position, FFDAPT
+        pointer, history) and runs only the remaining rounds; without a
+        checkpoint on disk it starts fresh.  The resumed run is bitwise
+        identical to the uninterrupted one.
         """
         plan = self.plan
         sizes = (list(plan.client_sizes) if plan.client_sizes is not None
                  else [len(bs) for bs in client_batches])
+        # the client population is part of the checkpoint fingerprint:
+        # resuming over different clients/weights must raise, not diverge
+        self._run_sizes = sizes
         from repro.models.model import n_freeze_units
         n_units = n_freeze_units(self.cfg)
         windows = (ffd.schedule(n_units, sizes, plan.n_rounds,
                                 epsilon=plan.ffdapt.epsilon,
                                 gamma=plan.ffdapt.gamma)
                    if plan.ffdapt else None)
+        start, state, rng, history = 0, None, None, None
+        if resume:
+            got = self._restore(params, windows, n_units)
+            if got is not None:
+                start, params, state, rng, history = got
+        elif plan.checkpoint_dir:
+            # a fresh run must not write into a directory that already
+            # holds checkpoints: the new rounds would sort OLDEST and be
+            # rotated away, and a later resume would silently pick up the
+            # stale run's state instead of this one's
+            from repro.checkpoint import latest_step
+            have = latest_step(plan.checkpoint_dir)
+            if have is not None:
+                raise ValueError(
+                    f"checkpoint_dir {plan.checkpoint_dir!r} already holds "
+                    f"round checkpoints (latest {have}) — pass resume=True "
+                    f"to continue that run, or use a fresh directory")
+        if start >= plan.n_rounds:
+            return params, history or []
         if plan.engine == "sequential":
             return self._run_sequential(params, client_batches, sizes,
-                                        windows, n_units)
+                                        windows, n_units, start=start,
+                                        state=state, rng=rng, history=history)
         if plan.engine == "parallel":
             return self._run_parallel(params, client_batches, sizes,
-                                      windows, n_units)
+                                      windows, n_units, start=start,
+                                      state=state, rng=rng, history=history)
         raise ValueError(plan.engine)
+
+    # -----------------------------------------------------------------
+    # Checkpoint / resume (shared by both engines)
+    # -----------------------------------------------------------------
+
+    def _ckpt_plan_fingerprint(self) -> Dict[str, Any]:
+        # n_rounds is recorded for information only (resuming with a larger
+        # n_rounds legitimately extends the run); everything else must
+        # match or the resumed math would silently diverge.  The strategy
+        # fingerprint carries its full hyperparameters (strategies are
+        # frozen dataclasses; Compressed recurses into its inner) — name
+        # alone would let e.g. FedAvgM(beta=0.5) resume a beta=0.9 run.
+        # JSON-normalized so the fresh fingerprint compares equal to one
+        # read back from the sidecar (tuples -> lists, float repr).
+        plan = self.plan
+        strat = {"name": plan.strategy.name,
+                 **dataclasses.asdict(plan.strategy)}
+        fp = {"strategy": strat, "engine": plan.engine, "impl": plan.impl,
+              "seed": plan.seed, "participation": plan.participation,
+              "ffdapt": (dataclasses.asdict(plan.ffdapt)
+                         if plan.ffdapt else None),
+              "client_sizes": [int(s) for s in
+                               getattr(self, "_run_sizes", [])],
+              # telemetry/simulate/overlap don't move the params, but they
+              # decide the history's ledger columns — a resumed run must
+              # fill them the same way or the prefix and suffix disagree
+              "telemetry": plan.telemetry, "overlap": plan.overlap,
+              "simulate": self._simulate_fingerprint(),
+              "extra": plan.fingerprint_extra,
+              "n_rounds": plan.n_rounds}
+        return json.loads(json.dumps(fp))
+
+    def _simulate_fingerprint(self):
+        """plan.simulate's identity for the fingerprint.  A Fleet is
+        fingerprinted by its full device composition, not just its name —
+        two same-named fleets (e.g. "edge-mixed" datasheet vs calibrated,
+        or any two sample_fleet mixtures, both named "custom") would
+        otherwise resume into each other and desync sim_round_s between
+        the restored prefix and the resumed suffix."""
+        sim = self.plan.simulate
+        if sim is not None and hasattr(sim, "devices"):
+            return {"name": getattr(sim, "name", None),
+                    "devices": [dataclasses.asdict(d) for d in sim.devices]}
+        return sim
+
+    def _restore(self, params, windows, n_units):
+        """Load the newest checkpoint in ``plan.checkpoint_dir``; None when
+        the directory holds none (fresh start).  Raises on a checkpoint
+        written under an incompatible plan — resuming with a different
+        strategy/seed/participation would silently change the math."""
+        plan, strategy = self.plan, self.plan.strategy
+        if not plan.checkpoint_dir:
+            raise ValueError("resume=True needs plan.checkpoint_dir")
+        from repro.checkpoint import (latest_step, restore_checkpoint,
+                                      restore_extra)
+        from repro.checkpoint.npz import FederatedState
+        step = latest_step(plan.checkpoint_dir)
+        if step is None:
+            return None
+        meta = restore_extra(plan.checkpoint_dir, step)
+        if meta is None or "round" not in meta or "history" not in meta:
+            raise ValueError(
+                f"checkpoint {step} in {plan.checkpoint_dir!r} is not a "
+                f"resumable round checkpoint (no FederatedState sidecar — "
+                f"written by an older final-snapshot save?)")
+        fed = FederatedState.from_json(meta)
+        if fed.plan:
+            mine = self._ckpt_plan_fingerprint()
+            for key in ("strategy", "engine", "impl", "seed",
+                        "participation", "ffdapt", "client_sizes",
+                        "telemetry", "overlap", "simulate", "extra"):
+                if key in fed.plan and fed.plan[key] != mine[key]:
+                    raise ValueError(
+                        f"checkpoint was written under a different plan: "
+                        f"{key}={fed.plan[key]!r} != {mine[key]!r}")
+        if windows is not None and fed.round < len(windows):
+            want = windows[fed.round][0][0]
+            if fed.ffdapt_start != want:
+                raise ValueError(
+                    f"checkpoint FFDAPT pointer {fed.ffdapt_start} does not "
+                    f"match the plan's schedule ({want} at round "
+                    f"{fed.round}) — client sizes or gamma/epsilon changed")
+        template = {
+            "params": jax.tree.map(
+                lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), params),
+            "server": strategy.state_to_tree(strategy.init_state(params))}
+        tree = restore_checkpoint(plan.checkpoint_dir, step, template)
+        state = strategy.state_from_tree(tree["server"])
+        rng = np.random.default_rng(plan.seed)
+        if fed.rng_state is not None:
+            rng.bit_generator.state = fed.rng_state
+        history = [RoundResult.from_json(h) for h in fed.history]
+        return fed.round, tree["params"], state, rng, history
+
+    def _checkpoint(self, t, params, state, rng, history, windows, n_units):
+        """Write the full run state after round ``t`` when due: every
+        ``checkpoint_every`` rounds, at the final round, and right before a
+        ``stop_after_round`` halt (so the simulated preemption always
+        leaves a resumable checkpoint behind)."""
+        plan, strategy = self.plan, self.plan.strategy
+        if not plan.checkpoint_dir:
+            return
+        done = t + 1
+        due = (done % max(plan.checkpoint_every, 1) == 0
+               or done == plan.n_rounds or done == plan.stop_after_round)
+        if not due:
+            return
+        from repro.checkpoint import save_checkpoint
+        from repro.checkpoint.npz import FederatedState
+        if windows is None:
+            ptr = 0
+        elif done < len(windows):
+            ptr = windows[done][0][0]
+        else:
+            s, nf = windows[-1][-1]
+            ptr = (s + nf) % max(n_units, 1)
+        fed = FederatedState(
+            round=done, ffdapt_start=ptr,
+            rng_state=rng.bit_generator.state,
+            history=[h.to_json() for h in history],
+            plan=self._ckpt_plan_fingerprint())
+        save_checkpoint(
+            plan.checkpoint_dir, done,
+            {"params": params, "server": strategy.state_to_tree(state)},
+            extra=fed.to_json(), keep=plan.checkpoint_keep)
 
     # -----------------------------------------------------------------
     # Sequential (paper-faithful; static FFDAPT windows)
@@ -203,13 +407,20 @@ class FedSession:
         return resolve_fleet(self.plan.simulate, n_clients, self.plan.seed)
 
     def _run_sequential(self, params, client_batches, sizes, windows,
-                        n_units):
+                        n_units, *, start=0, state=None, rng=None,
+                        history=None):
         plan, optimizer, strategy = self.plan, self.optimizer, self.plan.strategy
-        rng = np.random.default_rng(plan.seed)
-        state = strategy.init_state(params)
+        rng = np.random.default_rng(plan.seed) if rng is None else rng
+        state = strategy.init_state(params) if state is None else state
         fleet = self._fleet(len(client_batches))
-        history = []
-        for t in range(plan.n_rounds):
+        history = [] if history is None else history
+        for t in range(start, plan.n_rounds):
+            # loop-ENTRY guard: a resumed run whose restored rounds already
+            # reach the threshold halts immediately (stop_after_round=r
+            # means "at most r completed rounds", fresh or resumed)
+            if (plan.stop_after_round is not None
+                    and t >= plan.stop_after_round):
+                break
             t0 = time.perf_counter()
             part = _participants(rng, len(client_batches), plan.participation)
             down = strategy.download_bytes(params, len(part))
@@ -251,23 +462,27 @@ class FedSession:
                 client_step_flops=c_flops or None,
                 client_step_hbm=c_hbm or None,
                 # aggregate() reports the exact round total; per-client
-                # shares are the static even split (Compressed tie-keeps
-                # can skew individual clients by a few entries)
-                client_upload_bytes=[nbytes // len(part)] * len(part))
+                # shares are the static even split + remainder (Compressed
+                # tie-keeps can skew individual clients by a few entries,
+                # but the shares always sum to the exact round total)
+                client_upload_bytes=split_bytes(nbytes, len(part)))
             if fleet is not None:
                 from repro.sim.clock import sync_round_s
                 rr.sim_round_s = sync_round_s(rr, fleet,
                                               overlap=plan.overlap)
-            history.append(rr)
             if plan.eval_fn is not None:
-                history[-1].loss = plan.eval_fn(params)
+                rr.eval_loss = float(plan.eval_fn(params))
+            history.append(rr)
+            self._checkpoint(t, params, state, rng, history, windows,
+                             n_units)
         return params, history
 
     # -----------------------------------------------------------------
     # Parallel (mesh / vmap engine; masked FFDAPT)
     # -----------------------------------------------------------------
 
-    def _run_parallel(self, params, client_batches, sizes, windows, n_units):
+    def _run_parallel(self, params, client_batches, sizes, windows, n_units,
+                      *, start=0, state=None, rng=None, history=None):
         plan, optimizer, strategy = self.plan, self.optimizer, self.plan.strategy
         K = len(client_batches)
         max_steps = max(len(b) for b in client_batches)
@@ -318,16 +533,22 @@ class FedSession:
             wn = w / jnp.sum(w)
             return new_global, new_state, jnp.sum(losses * wn), jnp.sum(toks)
 
-        rng = np.random.default_rng(plan.seed)
+        rng = np.random.default_rng(plan.seed) if rng is None else rng
         w_all = jnp.asarray(sizes, jnp.float32)
-        state = strategy.init_state(params)
+        state = strategy.init_state(params) if state is None else state
         # one program family for the whole session: a single cached analysis
         # covers every round (masked FFDAPT has no per-window programs)
         step_cost = (self._step_cost(client_batches[0][0], masked=use_mask)
                      if plan.telemetry else None)
         fleet = self._fleet(K)
-        history = []
-        for t in range(plan.n_rounds):
+        history = [] if history is None else history
+        for t in range(start, plan.n_rounds):
+            # loop-ENTRY guard: a resumed run whose restored rounds already
+            # reach the threshold halts immediately (stop_after_round=r
+            # means "at most r completed rounds", fresh or resumed)
+            if (plan.stop_after_round is not None
+                    and t >= plan.stop_after_round):
+                break
             t0 = time.perf_counter()
             part = _participants(rng, K, plan.participation)
             if windows is not None:
@@ -370,14 +591,16 @@ class FedSession:
                                    if step_cost else None),
                 client_step_hbm=([step_cost.hbm_bytes] * len(part)
                                  if step_cost else None),
-                client_upload_bytes=[nbytes // len(part)] * len(part))
+                client_upload_bytes=split_bytes(nbytes, len(part)))
             if fleet is not None:
                 from repro.sim.clock import sync_round_s
                 rr.sim_round_s = sync_round_s(rr, fleet,
                                               overlap=plan.overlap)
-            history.append(rr)
             if plan.eval_fn is not None:
-                history[-1].loss = plan.eval_fn(params)
+                rr.eval_loss = float(plan.eval_fn(params))
+            history.append(rr)
+            self._checkpoint(t, params, state, rng, history, windows,
+                             n_units)
         return params, history
 
 

@@ -85,6 +85,11 @@ class AsyncFedAvg(FederatedStrategy):
     The buffer size itself is a *schedule* parameter, not a learning-math
     one — pass it to ``repro.sim.events.simulate_async(buffer_size=...)``;
     the numeric engines aggregate every round as usual.
+
+    Server state is empty (the staleness assignment is config, not state),
+    so the base ``state_to_tree``/``state_from_tree`` checkpoint hooks
+    round-trip it trivially and a resumed AsyncFedAvg run stays bitwise
+    identical (pinned in tests/test_resume.py).
     """
 
     alpha: float = 0.5

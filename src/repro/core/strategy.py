@@ -126,6 +126,22 @@ class FederatedStrategy:
         arrays, so the jitted mesh program can carry it)."""
         return ()
 
+    def state_to_tree(self, state: Any) -> Any:
+        """Server state as a pytree of ARRAYS for the checkpoint layer
+        (``repro.checkpoint`` flattens it next to the global params).  The
+        default is the identity — it covers every strategy whose state
+        already is such a pytree (FedAvg family / FedProx / AsyncFedAvg:
+        ``()``; FedAvgM: the fp32 momentum tree).  A strategy carrying
+        non-array state must encode it here and decode in
+        ``state_from_tree`` so resumed runs stay bitwise identical."""
+        return state
+
+    def state_from_tree(self, tree: Any) -> Any:
+        """Inverse of ``state_to_tree``.  ``tree`` holds the exact saved
+        leaf values, restored against ``state_to_tree(init_state(params))``
+        as the shape/dtype template."""
+        return tree
+
     # -- client objective ---------------------------------------------
     def make_client_step(self, cfg, optimizer, *, frozen=None,
                          masked: bool = False, impl: str = "xla"):
@@ -260,6 +276,12 @@ class Compressed(FederatedStrategy):
 
     def init_state(self, global_params):
         return self.inner.init_state(global_params)
+
+    def state_to_tree(self, state):
+        return self.inner.state_to_tree(state)
+
+    def state_from_tree(self, tree):
+        return self.inner.state_from_tree(tree)
 
     def make_client_step(self, cfg, optimizer, **kw):
         return self.inner.make_client_step(cfg, optimizer, **kw)

@@ -20,7 +20,7 @@ import jax
 import numpy as np
 
 from repro import optim
-from repro.checkpoint import save_checkpoint
+from repro.checkpoint import latest_step, tree_digest
 from repro.configs import get_config
 from repro.core.ffdapt import FFDAPTConfig
 from repro.core.noniid import make_client_datasets
@@ -87,8 +87,29 @@ def main() -> None:
     ap.add_argument("--full-config", action="store_true",
                     help="use the full (not reduced) arch config")
     ap.add_argument("--max-steps-per-round", type=int, default=0)
-    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-dir", default="",
+                    help="crash-safe round checkpoints: the session writes "
+                         "the full run state (params + server state + RNG "
+                         "+ FFDAPT pointer + history) here")
+    ap.add_argument("--ckpt-every", type=int, default=1,
+                    help="with --ckpt-dir: checkpoint every N completed "
+                         "rounds (the final round always checkpoints)")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from the latest checkpoint in --ckpt-dir "
+                         "(bitwise identical to the uninterrupted run); "
+                         "starts fresh when the directory is empty")
+    ap.add_argument("--stop-after", type=int, default=0,
+                    help="simulated preemption: halt after this many "
+                         "completed rounds (a checkpoint is written first "
+                         "when --ckpt-dir is set); the resume smoke uses it")
+    ap.add_argument("--ledger-out", default="",
+                    help="write the deterministic run ledger (per-round "
+                         "history minus wall-clock fields + a params "
+                         "sha256) to this JSON file — two bitwise-equal "
+                         "runs produce byte-equal files")
     args = ap.parse_args()
+    if args.resume and not args.ckpt_dir:
+        ap.error("--resume requires --ckpt-dir")
 
     cfg = get_config(args.arch)
     if not args.full_config:
@@ -125,12 +146,30 @@ def main() -> None:
                                           seed=args.seed,
                                           calibrated=args.calibrated)
                                if args.fleet else None),
-                     overlap=args.overlap)
+                     overlap=args.overlap,
+                     checkpoint_dir=args.ckpt_dir or None,
+                     checkpoint_every=args.ckpt_every,
+                     stop_after_round=args.stop_after or None,
+                     # identity the session cannot introspect (optimizer
+                     # closures, data pipeline) — a resume under different
+                     # values raises instead of silently diverging
+                     fingerprint_extra={
+                         "arch": cfg.name, "lr": args.lr,
+                         "batch": args.batch_size, "seq": args.seq_len,
+                         "docs": args.docs, "skew": args.skew,
+                         "max_steps": args.max_steps_per_round,
+                         "fleet": args.fleet, "calibrated": args.calibrated,
+                         "sim_seed": args.sim_seed})
     print(f"strategy={strategy.name} engine={args.engine} "
           f"participation={args.participation}")
+    if args.resume and args.ckpt_dir:
+        at = latest_step(args.ckpt_dir)
+        print("resume: "
+              + (f"round checkpoint {at} found" if at is not None
+                 else "no checkpoint on disk, starting fresh"))
     t0 = time.perf_counter()
-    params, hist = FedSession(cfg, optim.adam(args.lr), plan).run(params,
-                                                                  batches)
+    params, hist = FedSession(cfg, optim.adam(args.lr), plan).run(
+        params, batches, resume=args.resume)
     wall = time.perf_counter() - t0
 
     for h in hist:
@@ -175,17 +214,30 @@ def main() -> None:
         for rep in reports:
             print("\n".join(ledger_lines(rep)))
 
-    eval_step = jax.jit(make_eval_step(cfg))
-    heldout = make_client_datasets(held_docs,
-                                   cfg, k=1, batch=args.batch_size,
-                                   seq=args.seq_len)["batches"][0][:4]
-    losses = [float(eval_step(params, b)["loss"]) for b in heldout]
-    print(f"held-out eval loss: {np.mean(losses):.4f}")
+    if args.ledger_out:
+        # the deterministic ledger: everything a resumed run must reproduce
+        # bitwise (wall-clock fields excluded — they measure the host, not
+        # the math).  scripts/resume_smoke.sh diffs two of these.
+        wall_fields = {"round_time_s", "tokens_per_s"}
+        rows = [{k: v for k, v in h.to_json().items()
+                 if k not in wall_fields} for h in hist]
+        with open(args.ledger_out, "w") as f:
+            json.dump({"params_sha256": tree_digest(params), "rounds": rows},
+                      f, indent=1, sort_keys=True)
+        print("ledger:", args.ledger_out)
+
+    stopped_early = args.stop_after and args.stop_after < args.rounds
+    if not stopped_early:
+        eval_step = jax.jit(make_eval_step(cfg))
+        heldout = make_client_datasets(held_docs,
+                                       cfg, k=1, batch=args.batch_size,
+                                       seq=args.seq_len)["batches"][0][:4]
+        losses = [float(eval_step(params, b)["loss"]) for b in heldout]
+        print(f"held-out eval loss: {np.mean(losses):.4f}")
 
     if args.ckpt_dir:
-        path = save_checkpoint(args.ckpt_dir, args.rounds, params,
-                               extra={"arch": cfg.name, "rounds": args.rounds})
-        print("checkpoint:", path)
+        at = latest_step(args.ckpt_dir)
+        print(f"checkpoints: {args.ckpt_dir} (latest round {at})")
 
 
 if __name__ == "__main__":

@@ -22,8 +22,8 @@ from repro.sim.calibrate import (CALIBRATED_PRESETS, PAPER_2080TI_ANCHOR,
                                  predict_round_s, scale_device)
 from repro.sim.clock import (ClientTiming, client_timing, comm_time_s,
                              device_roofline_s, ledger_lists, phase_total_s,
-                             resolve_fleet, round_timings, step_time_s,
-                             sync_round_s)
+                             record_field, resolve_fleet, round_timings,
+                             step_time_s, sync_round_s)
 from repro.sim.events import (RoundSim, SimReport, ledger_lines, simulate,
                               simulate_async, simulate_deadline,
                               simulate_sync)
@@ -37,8 +37,8 @@ __all__ = [
     "Fleet", "RoundSim", "SimReport", "apply_fit", "calibrate_presets",
     "client_timing", "comm_time_s", "device_roofline_s", "fit_device",
     "gbps", "ledger_lines", "ledger_lists", "make_fleet", "mbps",
-    "phase_total_s", "predict_round_s", "resolve_fleet", "round_timings",
-    "sample_fleet",
+    "phase_total_s", "predict_round_s", "record_field", "resolve_fleet",
+    "round_timings", "sample_fleet",
     "scale_device", "simulate", "simulate_async", "simulate_deadline",
     "simulate_sync", "step_time_s", "sync_round_s",
 ]

@@ -33,6 +33,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, List, Optional, Sequence
 
+from repro.core.accounting import split_bytes
 from repro.sim.fleet import DeviceProfile, Fleet
 
 
@@ -125,6 +126,16 @@ def client_timing(k: int, dev: DeviceProfile, *, n_steps: int,
         n_steps=n_steps, latency_s=dev.latency_s)
 
 
+def record_field(rr: Any, name: str, default: Any = None) -> Any:
+    """Duck-typed round-record access: ``rr`` may be a ``RoundResult``
+    (attributes) or its serialized dict (keys) — a checkpoint's JSON
+    ``history`` (``repro.checkpoint.FederatedState``) feeds straight into
+    the replays without reconstructing ``RoundResult`` objects."""
+    if isinstance(rr, dict):
+        return rr.get(name, default)
+    return getattr(rr, name, default)
+
+
 def ledger_lists(rr: Any):
     """Resolve a round's per-client replay ledger with its defaults:
     ``(clients, steps, step_flops, step_hbm, upload_bytes, down_each)`` —
@@ -133,21 +144,31 @@ def ledger_lists(rr: Any):
 
     ``rr`` is duck-typed on the ``RoundResult`` replay fields
     (``clients``, ``client_steps``, ``client_step_flops``,
-    ``client_step_hbm``, ``client_upload_bytes``, ``download_bytes``);
-    missing per-client lists fall back to even splits of the round totals.
-    The single source of the default rules — the event simulator's
-    mean-workload extras average THIS function's output."""
-    clients = list(rr.clients) if rr.clients is not None else []
+    ``client_step_hbm``, ``client_upload_bytes``, ``download_bytes``) —
+    either attributes or dict keys (``record_field``); missing per-client
+    lists fall back to even splits of the round totals.  The single source
+    of the default rules — the event simulator's mean-workload extras
+    average THIS function's output."""
+    raw_clients = record_field(rr, "clients")
+    clients = list(raw_clients) if raw_clients is not None else []
     n = len(clients)
     if n == 0:
         return [], [], [], [], [], 0
-    steps = list(rr.client_steps) if rr.client_steps else [1] * n
-    flops = (list(rr.client_step_flops) if rr.client_step_flops
-             else [0.0] * n)
-    hbm = list(rr.client_step_hbm) if rr.client_step_hbm else [0.0] * n
-    up = (list(rr.client_upload_bytes) if rr.client_upload_bytes
-          else [rr.upload_bytes // n] * n)
-    down_each = rr.download_bytes // n if rr.download_bytes else 0
+    c_steps = record_field(rr, "client_steps")
+    steps = list(c_steps) if c_steps else [1] * n
+    c_flops = record_field(rr, "client_step_flops")
+    flops = list(c_flops) if c_flops else [0.0] * n
+    c_hbm = record_field(rr, "client_step_hbm")
+    hbm = list(c_hbm) if c_hbm else [0.0] * n
+    c_up = record_field(rr, "client_upload_bytes")
+    if c_up:
+        up = list(c_up)
+    else:
+        # one remainder rule with the engines' ledger: shares must sum to
+        # the exact round total (an even // split drops total % n bytes)
+        up = split_bytes(record_field(rr, "upload_bytes", 0), n)
+    down = record_field(rr, "download_bytes", 0)
+    down_each = down // n if down else 0
     return clients, steps, flops, hbm, up, down_each
 
 

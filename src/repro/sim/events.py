@@ -36,6 +36,12 @@ Everything is deterministic in ``seed``: failures, over-selection draws, and
 the event heap's tie-break (time, then client id) are all
 ``np.random.default_rng``-driven, so a simulated ledger is a reproducible
 artifact of (history, fleet, mode, clock, seed).
+
+``history`` records are duck-typed (``repro.sim.clock.record_field``): live
+``RoundResult`` objects and their serialized dicts both replay, so the
+``history`` a round checkpoint's ``FederatedState`` sidecar carries
+(``repro.checkpoint``) feeds straight in — post-hoc replays, including the
+skew-aware async staleness study, survive process restarts.
 """
 
 from __future__ import annotations
@@ -47,7 +53,8 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.sim.clock import ClientTiming, phase_total_s, round_timings
+from repro.sim.clock import (ClientTiming, phase_total_s, record_field,
+                             round_timings)
 from repro.sim.fleet import Fleet
 
 
@@ -155,7 +162,7 @@ def simulate_sync(history: Sequence[Any], fleet: Fleet, *, seed: int = 0,
         totals = [_noisy_total(x, fleet[x.client].dropout, rng, overlap)
                   for x in ts]
         end = t + (max(totals) if totals else 0.0)
-        rounds.append(RoundSim(rr.round, t, end,
+        rounds.append(RoundSim(record_field(rr, "round", 0), t, end,
                                tuple(x.client for x in ts),
                                timings=tuple(ts)))
         t = end
@@ -200,7 +207,7 @@ def simulate_deadline(history: Sequence[Any], fleet: Fleet, *,
         ts = list(round_timings(rr, fleet))
         n = len(ts)
         if n == 0:
-            rounds.append(RoundSim(rr.round, t, t, ()))
+            rounds.append(RoundSim(record_field(rr, "round", 0), t, t, ()))
             continue
         # over-select extra clients from the rest of the fleet, seeded
         m = min(len(fleet), max(n, math.ceil(over_select * n)))
@@ -228,7 +235,8 @@ def simulate_deadline(history: Sequence[Any], fleet: Fleet, *,
             round_s = kept[-1][0]
         kept_ids = {k for _, k in kept}
         rounds.append(RoundSim(
-            rr.round, t, t + round_s, tuple(sorted(kept_ids)),
+            record_field(rr, "round", 0), t, t + round_s,
+            tuple(sorted(kept_ids)),
             dropped=tuple(sorted(x.client for x in ts
                                  if x.client not in kept_ids)),
             timings=tuple(ts)))

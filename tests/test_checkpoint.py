@@ -1,11 +1,13 @@
 """Checkpoint roundtrip, rotation, federated-state resume."""
 
+import json
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import (FederatedState, latest_step, restore_checkpoint,
-                              save_checkpoint)
+                              save_checkpoint, tree_digest)
 from repro.checkpoint.npz import restore_extra
 
 
@@ -38,6 +40,28 @@ def test_rotation_keeps_last(tmp_path):
     assert latest_step(str(tmp_path)) == 5
 
 
+def test_preempted_save_leaves_no_torn_checkpoint(tmp_path):
+    """Writes are atomic: a save killed mid-way leaves temp files and/or an
+    orphan sidecar, never a visible-but-incomplete ckpt_N.npz — resume
+    keys on the archive, so it falls back to the last complete pair.  The
+    next successful save sweeps the debris."""
+    t = _tree()
+    save_checkpoint(str(tmp_path), 1, t, extra={"round": 1})
+    # simulate a preemption between the two renames: sidecar landed, the
+    # archive is still a temp file
+    (tmp_path / "ckpt_00000002.json").write_text("{}")
+    (tmp_path / "ckpt_00000002.npz.tmp").write_bytes(b"torn")
+    assert latest_step(str(tmp_path)) == 1          # torn step invisible
+    got = restore_checkpoint(str(tmp_path), 1, jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), t))
+    assert tree_digest(got) == tree_digest(t)
+    save_checkpoint(str(tmp_path), 3, t, extra={"round": 3})
+    import os
+    left = sorted(os.listdir(tmp_path))
+    assert "ckpt_00000002.json" not in left          # orphan swept
+    assert not any(f.endswith(".tmp") for f in left)
+
+
 def test_shape_mismatch_raises(tmp_path):
     save_checkpoint(str(tmp_path), 0, _tree())
     bad = {"layers": {"w": jax.ShapeDtypeStruct((9, 9), jnp.float32),
@@ -53,3 +77,45 @@ def test_shape_mismatch_raises(tmp_path):
 def test_federated_state_json():
     st = FederatedState(round=4, ffdapt_start=3)
     assert FederatedState.from_json(st.to_json()) == st
+
+
+def test_federated_state_full_roundtrip():
+    """The extended resume contract: RNG bit-state, serialized history, and
+    the plan fingerprint all survive a json.dumps/loads cycle exactly."""
+    rng = np.random.default_rng(123)
+    rng.choice(10, size=3, replace=False)          # advance the stream
+    hist = [{"round": 0, "loss": 1.5, "clients": [0, 2],
+             "client_upload_bytes": [7, 6], "windows": [[0, 2], [2, 1]]}]
+    st = FederatedState(round=1, ffdapt_start=3,
+                        rng_state=rng.bit_generator.state, history=hist,
+                        plan={"strategy": "fedavgm", "seed": 0,
+                              "participation": 0.5})
+    thawed = FederatedState.from_json(json.loads(json.dumps(st.to_json())))
+    assert thawed == st
+    # the restored bit-state continues the exact stream
+    r2 = np.random.default_rng(0)
+    r2.bit_generator.state = thawed.rng_state
+    np.testing.assert_array_equal(rng.choice(100, 5), r2.choice(100, 5))
+
+
+def test_federated_state_ignores_unknown_keys():
+    # old sidecars (or future fields) must not break from_json
+    st = FederatedState.from_json({"round": 2, "ffdapt_start": 1,
+                                   "someday": "maybe"})
+    assert st.round == 2 and st.ffdapt_start == 1
+
+
+def test_tree_digest_bitwise():
+    t = _tree()
+    assert tree_digest(t) == tree_digest(_tree())
+    other = jax.tree.map(lambda l: l, t)
+    other["layers"]["w"] = other["layers"]["w"].at[0, 0].add(1e-7)
+    assert tree_digest(t) != tree_digest(other)
+
+
+def test_digest_survives_save_restore(tmp_path):
+    t = _tree()
+    save_checkpoint(str(tmp_path), 1, t)
+    got = restore_checkpoint(str(tmp_path), 1, jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), t))
+    assert tree_digest(got) == tree_digest(t)

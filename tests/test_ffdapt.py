@@ -71,6 +71,23 @@ def test_client_window_size_formula():
     assert ffdapt.client_window_size(1, 1000, 6, epsilon=5, gamma=1.0) == 1
 
 
+def test_client_window_size_gamma_rounds_half_up():
+    """Regression: int() truncation froze NOTHING for small clients under
+    gamma < 1 — the issue's example (n_k=5, n=100, N=12, gamma=0.5) gave
+    int(ceil(0.6) * 0.5) = int(0.5) = 0.  Round-half-up keeps the window."""
+    assert ffdapt.client_window_size(5, 100, 12, epsilon=11, gamma=0.5) == 1
+    # half-up at the boundary: 1 * 1.5 -> 2, 1 * 1.4 -> 1
+    assert ffdapt.client_window_size(5, 100, 12, epsilon=11, gamma=1.5) == 2
+    assert ffdapt.client_window_size(5, 100, 12, epsilon=11, gamma=1.4) == 1
+    # a gamma=0.5 schedule now actually freezes layers for uniform tiny
+    # clients instead of silently disabling FFDAPT
+    sched = ffdapt.schedule(12, [5] * 20, 2, gamma=0.5)
+    assert any(nf > 0 for rnd in sched for _, nf in rnd)
+    # epsilon still caps, and integer gammas are unchanged
+    assert ffdapt.client_window_size(5, 100, 12, epsilon=1, gamma=4.0) == 1
+    assert ffdapt.client_window_size(50, 100, 6, epsilon=5, gamma=1.0) == 3
+
+
 def test_backward_flop_saving_range():
     s = ffdapt.backward_flop_saving(6, [(0, 3), (3, 3)])
     assert 0.0 < s < 0.5

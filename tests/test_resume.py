@@ -1,0 +1,381 @@
+"""Kill-and-resume: a FedSession interrupted after round r and resumed from
+its checkpoint is BITWISE identical to the uninterrupted run — params and
+history (losses, ledgers, client selections) — on both engines, including
+FedAvgM server momentum, AsyncFedAvg staleness discounting, FFDAPT windows,
+and the participation<1 client-sampling RNG position."""
+
+import dataclasses
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.checkpoint import latest_step, restore_extra, tree_digest
+from repro.checkpoint.npz import FederatedState
+from repro.configs import get_config
+from repro.core.ffdapt import FFDAPTConfig
+from repro.core.noniid import make_client_datasets
+from repro.core.accounting import split_bytes
+from repro.core.rounds import FedSession, RoundPlan, RoundResult
+from repro.core.strategies import AsyncFedAvg
+from repro.core.strategy import Compressed, FedAvg, FedAvgM, FedProx
+from repro.data.corpus import generate_corpus
+from repro.models.model import init_model
+from repro.nn import param as P
+from repro.sim import make_fleet, simulate
+
+CFG = get_config("distilbert-mlm").reduced()
+KEY = jax.random.PRNGKey(0)
+DOCS = generate_corpus(120, seed=0)
+OPT = optim.adam(1e-3)          # ONE instance: sessions share the step cache
+
+WALL_FIELDS = ("round_time_s", "tokens_per_s")
+
+
+@pytest.fixture(scope="module")
+def params0():
+    return P.unbox(init_model(KEY, CFG))
+
+
+@pytest.fixture(scope="module")
+def clients():
+    ds = make_client_datasets(DOCS, CFG, k=3, skew="quantity", batch=2,
+                              seq=32)
+    return [b[:2] for b in ds["batches"]], ds["sizes"]
+
+
+def _assert_bitwise(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def _assert_same_history(a, b):
+    assert len(a) == len(b)
+    for x, y in zip(a, b):
+        dx, dy = dataclasses.asdict(x), dataclasses.asdict(y)
+        for f in WALL_FIELDS:
+            dx.pop(f), dy.pop(f)
+        assert dx == dy
+
+
+def _run(params0, batches, sizes, *, tmp=None, stop=None, resume=False,
+         **plan_kw):
+    plan = RoundPlan(client_sizes=sizes,
+                     checkpoint_dir=str(tmp) if tmp else None,
+                     stop_after_round=stop, **plan_kw)
+    return FedSession(CFG, OPT, plan).run(params0, batches, resume=resume)
+
+
+STRATEGIES = [
+    FedAvg(),
+    FedAvgM(beta=0.9, lr=1.0),                     # stateful server momentum
+    FedProx(mu=0.01),                              # anchored client objective
+    AsyncFedAvg(alpha=0.5, staleness=(1, 0)),      # staleness discounting
+    Compressed(inner=FedAvg(), kind="topk", frac=0.3),  # uneven upload bytes
+]
+
+
+@pytest.mark.parametrize("strategy", STRATEGIES, ids=lambda s: s.name)
+def test_resume_bitwise_sequential(params0, clients, tmp_path, strategy):
+    """Interrupt after round 1 of 3 with participation<1 (the RNG draws
+    every round); the resumed run must match the uninterrupted run bitwise
+    for every registered strategy."""
+    batches, sizes = clients
+    kw = dict(n_rounds=3, engine="sequential", strategy=strategy,
+              participation=2 / 3, seed=7, telemetry=False)
+    p_full, h_full = _run(params0, batches, sizes, **kw)
+    p_a, h_a = _run(params0, batches, sizes, tmp=tmp_path, stop=1, **kw)
+    assert latest_step(str(tmp_path)) == 1
+    assert len(h_a) == 1
+    p_b, h_b = _run(params0, batches, sizes, tmp=tmp_path, resume=True, **kw)
+    _assert_bitwise(p_full, p_b)
+    _assert_same_history(h_full, h_b)
+    # the RNG position survived: resumed rounds sampled the same clients
+    assert [h.clients for h in h_b] == [h.clients for h in h_full]
+    assert tree_digest(p_full) == tree_digest(p_b)
+
+
+@pytest.mark.parametrize("strategy", [FedAvgM(), AsyncFedAvg(alpha=0.5,
+                                                             staleness=(1,))],
+                         ids=lambda s: s.name)
+def test_resume_bitwise_parallel(params0, clients, tmp_path, strategy):
+    batches, sizes = clients
+    kw = dict(n_rounds=2, engine="parallel", strategy=strategy, seed=3,
+              telemetry=False)
+    p_full, h_full = _run(params0, batches, sizes, **kw)
+    _run(params0, batches, sizes, tmp=tmp_path, stop=1, **kw)
+    p_b, h_b = _run(params0, batches, sizes, tmp=tmp_path, resume=True, **kw)
+    _assert_bitwise(p_full, p_b)
+    _assert_same_history(h_full, h_b)
+
+
+@pytest.mark.parametrize("engine", ["sequential", "parallel"])
+def test_resume_ffdapt_windows(params0, clients, tmp_path, engine):
+    """FFDAPT runs resume mid-rotation: the restored pointer is verified
+    against the re-derived schedule and the window history matches."""
+    batches, sizes = clients
+    kw = dict(n_rounds=3, engine=engine, ffdapt=FFDAPTConfig(gamma=0.5),
+              telemetry=False)
+    p_full, h_full = _run(params0, batches, sizes, **kw)
+    _run(params0, batches, sizes, tmp=tmp_path, stop=2, **kw)
+    p_b, h_b = _run(params0, batches, sizes, tmp=tmp_path, resume=True, **kw)
+    _assert_bitwise(p_full, p_b)
+    _assert_same_history(h_full, h_b)
+    assert all(h.windows for h in h_b)
+
+
+def test_resume_plan_mismatch_raises(params0, clients, tmp_path):
+    batches, sizes = clients
+    kw = dict(n_rounds=2, engine="sequential", telemetry=False)
+    _run(params0, batches, sizes, tmp=tmp_path, stop=1, seed=0, **kw)
+    with pytest.raises(ValueError, match="different plan"):
+        _run(params0, batches, sizes, tmp=tmp_path, resume=True, seed=1, **kw)
+
+
+def test_resume_strategy_hyperparam_mismatch_raises(params0, clients,
+                                                    tmp_path):
+    """The fingerprint carries the strategy's full hyperparameters, not
+    just its name — resuming a FedAvgM(beta=0.9) run with beta=0.5 would
+    apply the restored momentum under the wrong decay."""
+    batches, sizes = clients
+    kw = dict(n_rounds=2, engine="sequential", telemetry=False)
+    _run(params0, batches, sizes, tmp=tmp_path, stop=1,
+         strategy=FedAvgM(beta=0.9), **kw)
+    with pytest.raises(ValueError, match="different plan"):
+        _run(params0, batches, sizes, tmp=tmp_path, resume=True,
+             strategy=FedAvgM(beta=0.5), **kw)
+
+
+def test_resume_client_population_mismatch_raises(params0, clients,
+                                                  tmp_path):
+    """Resuming over a different client population (count or n_k weights)
+    must raise — the restored RNG position and aggregation weights would
+    otherwise silently drive a run matching nothing."""
+    batches, sizes = clients
+    kw = dict(n_rounds=2, engine="sequential", telemetry=False)
+    _run(params0, batches, sizes, tmp=tmp_path, stop=1, **kw)
+    with pytest.raises(ValueError, match="different plan"):
+        _run(params0, batches[:2], sizes[:2], tmp=tmp_path, resume=True,
+             **kw)
+
+
+def test_resume_with_fleet_bitwise_and_mismatch(params0, clients, tmp_path):
+    """A simulated run resumes bitwise (sim_round_s included via the
+    compared history), and a differently-composed fleet — even under the
+    same name — refuses to resume."""
+    from repro.sim import sample_fleet
+    batches, sizes = clients
+    fleet_a = sample_fleet({"laptop": 1.0}, len(batches), seed=0)
+    fleet_b = sample_fleet({"phone": 1.0}, len(batches), seed=0)
+    assert fleet_a.name == fleet_b.name            # both "custom"
+    kw = dict(n_rounds=2, engine="sequential", telemetry=False)
+    p_full, h_full = _run(params0, batches, sizes, simulate=fleet_a, **kw)
+    _run(params0, batches, sizes, tmp=tmp_path, stop=1, simulate=fleet_a,
+         **kw)
+    with pytest.raises(ValueError, match="different plan"):
+        _run(params0, batches, sizes, tmp=tmp_path, resume=True,
+             simulate=fleet_b, **kw)
+    p_b, h_b = _run(params0, batches, sizes, tmp=tmp_path, resume=True,
+                    simulate=fleet_a, **kw)
+    _assert_bitwise(p_full, p_b)
+    _assert_same_history(h_full, h_b)
+    assert all(h.sim_round_s > 0 for h in h_b)
+
+
+def test_fresh_run_refuses_dirty_checkpoint_dir(params0, clients, tmp_path):
+    """Without resume=True, a checkpoint_dir that already holds round
+    checkpoints is refused — the fresh run's checkpoints would sort oldest
+    and rotate away, leaving a later resume to silently pick up the stale
+    run's state."""
+    batches, sizes = clients
+    kw = dict(n_rounds=2, engine="sequential", telemetry=False)
+    _run(params0, batches, sizes, tmp=tmp_path, stop=1, **kw)
+    with pytest.raises(ValueError, match="already holds"):
+        _run(params0, batches, sizes, tmp=tmp_path, **kw)
+
+
+def test_resume_impl_mismatch_raises(params0, clients, tmp_path):
+    """A different kernel implementation is only allclose to xla, not
+    bitwise — resuming across impls must raise."""
+    batches, sizes = clients
+    kw = dict(n_rounds=2, engine="sequential", telemetry=False)
+    _run(params0, batches, sizes, tmp=tmp_path, stop=1, impl="xla", **kw)
+    with pytest.raises(ValueError, match="different plan"):
+        _run(params0, batches, sizes, tmp=tmp_path, resume=True,
+             impl="chunked", **kw)
+
+
+def test_resume_legacy_snapshot_clear_error(params0, clients, tmp_path):
+    """A pre-resume final-snapshot checkpoint (bare params + {arch,rounds}
+    sidecar) must produce a clear 'not resumable' error, not a KeyError
+    from the archive layout."""
+    from repro.checkpoint import save_checkpoint
+    batches, sizes = clients
+    save_checkpoint(str(tmp_path), 15, params0,
+                    extra={"arch": "distilbert-mlm", "rounds": 15})
+    with pytest.raises(ValueError, match="not a resumable"):
+        _run(params0, batches, sizes, tmp=tmp_path, resume=True,
+             n_rounds=15, engine="sequential", telemetry=False)
+
+
+def test_resume_fingerprint_extra_mismatch_raises(params0, clients,
+                                                  tmp_path):
+    """The caller-supplied identity (train.py records lr/arch/batch/...)
+    is verified on resume like every other fingerprint key."""
+    batches, sizes = clients
+    kw = dict(n_rounds=2, engine="sequential", telemetry=False)
+    _run(params0, batches, sizes, tmp=tmp_path, stop=1,
+         fingerprint_extra={"lr": 1e-3}, **kw)
+    with pytest.raises(ValueError, match="different plan"):
+        _run(params0, batches, sizes, tmp=tmp_path, resume=True,
+             fingerprint_extra={"lr": 1e-4}, **kw)
+
+
+def test_resume_with_same_stop_after_halts_immediately(params0, clients,
+                                                       tmp_path):
+    """Resuming with the original --stop-after still in force must halt at
+    once (the restored rounds already reach the threshold), not run an
+    extra round past it."""
+    batches, sizes = clients
+    kw = dict(n_rounds=3, engine="sequential", telemetry=False)
+    p_a, h_a = _run(params0, batches, sizes, tmp=tmp_path, stop=1, **kw)
+    p_b, h_b = _run(params0, batches, sizes, tmp=tmp_path, stop=1,
+                    resume=True, **kw)
+    assert len(h_b) == 1 and latest_step(str(tmp_path)) == 1
+    _assert_bitwise(p_a, p_b)
+    _assert_same_history(h_a, h_b)
+
+
+def test_resume_ffdapt_onoff_mismatch_raises(params0, clients, tmp_path):
+    """Resuming an FFDAPT checkpoint without --ffdapt (or with a different
+    gamma/epsilon) must raise — the remaining rounds would otherwise train
+    fully unfrozen and match neither uninterrupted variant."""
+    batches, sizes = clients
+    kw = dict(n_rounds=2, engine="sequential", telemetry=False)
+    _run(params0, batches, sizes, tmp=tmp_path, stop=1,
+         ffdapt=FFDAPTConfig(), **kw)
+    with pytest.raises(ValueError, match="different plan"):
+        _run(params0, batches, sizes, tmp=tmp_path, resume=True, **kw)
+    with pytest.raises(ValueError, match="different plan"):
+        _run(params0, batches, sizes, tmp=tmp_path, resume=True,
+             ffdapt=FFDAPTConfig(gamma=2.0), **kw)
+
+
+def test_resume_ffdapt_schedule_mismatch_raises(params0, clients, tmp_path):
+    """A sidecar whose FFDAPT pointer disagrees with the plan's re-derived
+    schedule (e.g. the client sizes or gamma changed) must refuse to
+    resume rather than silently train the wrong windows."""
+    batches, sizes = clients
+    kw = dict(n_rounds=3, engine="sequential", telemetry=False,
+              ffdapt=FFDAPTConfig(gamma=0.5))
+    _run(params0, batches, sizes, tmp=tmp_path, stop=1, **kw)
+    meta = restore_extra(str(tmp_path), 1)
+    meta["ffdapt_start"] = meta["ffdapt_start"] + 1    # desync the pointer
+    with open(tmp_path / "ckpt_00000001.json", "w") as f:
+        json.dump(meta, f)
+    with pytest.raises(ValueError, match="FFDAPT pointer"):
+        _run(params0, batches, sizes, tmp=tmp_path, resume=True, **kw)
+
+
+def test_resume_without_checkpoint_starts_fresh(params0, clients, tmp_path):
+    batches, sizes = clients
+    kw = dict(n_rounds=1, engine="sequential", telemetry=False)
+    p_a, h_a = _run(params0, batches, sizes, **kw)
+    p_b, h_b = _run(params0, batches, sizes, tmp=tmp_path / "empty",
+                    resume=True, **kw)
+    _assert_bitwise(p_a, p_b)
+    _assert_same_history(h_a, h_b)
+
+
+def test_resume_completed_run_is_noop(params0, clients, tmp_path):
+    batches, sizes = clients
+    kw = dict(n_rounds=2, engine="sequential", telemetry=False)
+    p_a, h_a = _run(params0, batches, sizes, tmp=tmp_path, **kw)
+    p_b, h_b = _run(params0, batches, sizes, tmp=tmp_path, resume=True, **kw)
+    _assert_bitwise(p_a, p_b)
+    _assert_same_history(h_a, h_b)
+
+
+def test_rotation_keeps_resume_alive(params0, clients, tmp_path):
+    """_rotate-safe retention: with keep < rounds the oldest checkpoints
+    are gone but the newest still resumes."""
+    batches, sizes = clients
+    kw = dict(n_rounds=4, engine="sequential", telemetry=False,
+              checkpoint_keep=2)
+    p_full, h_full = _run(params0, batches, sizes, tmp=tmp_path, stop=3, **kw)
+    files = [f for f in os.listdir(tmp_path) if f.endswith(".npz")]
+    assert len(files) == 2 and latest_step(str(tmp_path)) == 3
+    p_b, h_b = _run(params0, batches, sizes, tmp=tmp_path, resume=True, **kw)
+    assert len(h_b) == 4
+
+
+def test_checkpoint_sidecar_contents(params0, clients, tmp_path):
+    """The FederatedState sidecar carries the full resume contract: round
+    pointer, RNG bit-state, serialized history, and a plan fingerprint."""
+    batches, sizes = clients
+    _run(params0, batches, sizes, tmp=tmp_path, stop=1, n_rounds=3,
+         engine="sequential", participation=2 / 3, seed=11, telemetry=False)
+    fed = FederatedState.from_json(restore_extra(str(tmp_path), 1))
+    assert fed.round == 1
+    assert fed.rng_state is not None
+    assert fed.rng_state["bit_generator"] == "PCG64"
+    assert len(fed.history) == 1
+    rr = RoundResult.from_json(fed.history[0])
+    assert rr.round == 0 and rr.clients is not None
+    assert fed.plan["seed"] == 11
+    assert fed.plan["strategy"]["name"] == "fedavg"
+
+
+# ---------------------------------------------------------------------------
+# sim replays survive restarts (serialized history == live history)
+# ---------------------------------------------------------------------------
+
+def _synthetic_history(rounds=3, k=4):
+    out = []
+    for t in range(rounds):
+        steps = [2 + (i + t) % 3 for i in range(k)]
+        out.append(RoundResult(
+            t, 0.5, 0.0, clients=list(range(k)), client_steps=steps,
+            client_step_flops=[1e12] * k, client_step_hbm=[1e9] * k,
+            client_upload_bytes=split_bytes(10_000_001, k),
+            upload_bytes=10_000_001, download_bytes=9_999_999))
+    return out
+
+
+@pytest.mark.parametrize("mode,kw", [
+    ("sync", {}),
+    ("deadline", {"deadline_s": 30.0}),
+    ("async", {"buffer_size": 2}),
+])
+def test_simulate_from_serialized_history(mode, kw):
+    """simulate() over the checkpoint's JSON history dicts == simulate()
+    over the live RoundResults, including async staleness."""
+    hist = _synthetic_history()
+    fleet = make_fleet("edge-mixed", 4, seed=0)
+    live = simulate(hist, fleet, mode=mode, seed=5, **kw)
+    thawed = json.loads(json.dumps([h.to_json() for h in hist]))
+    replay = simulate(thawed, fleet, mode=mode, seed=5, **kw)
+    assert live == replay
+    if mode == "async":
+        assert live.staleness_histogram() == replay.staleness_histogram()
+
+
+def test_ledger_fallback_split_sums_exactly():
+    """Records without a per-client upload list fall back to the same
+    exact-sum remainder rule the engines use (no dropped bytes)."""
+    from repro.sim import ledger_lists
+    rr = {"clients": [0, 1, 2], "upload_bytes": 10_000_001,
+          "download_bytes": 30}
+    _, _, _, _, up, _ = ledger_lists(rr)
+    assert sum(up) == 10_000_001 and max(up) - min(up) <= 1
+
+
+def test_round_result_json_roundtrip():
+    rr = _synthetic_history(1)[0]
+    rr.windows = [(0, 2), (2, 1)]
+    rr.eval_loss = 1.25
+    thawed = RoundResult.from_json(json.loads(json.dumps(rr.to_json())))
+    assert thawed == rr

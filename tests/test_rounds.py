@@ -85,6 +85,39 @@ def test_fdapt_learns_and_ffdapt_tracks(params0):
     assert abs(l_ffd - l_fd) / l_fd < 0.05
 
 
+@pytest.mark.parametrize("engine", ["sequential", "parallel"])
+def test_eval_fn_keeps_train_loss(params0, engine):
+    """Regression: eval_fn used to OVERWRITE RoundResult.loss — both values
+    must survive, train loss in .loss and the eval figure in .eval_loss."""
+    batches, sizes = _clients()
+    plan = RoundPlan(n_rounds=1, engine=engine, client_sizes=sizes,
+                     telemetry=False, eval_fn=lambda p: 123.5)
+    _, hist = FedSession(CFG, optim.adam(1e-4), plan).run(params0, batches)
+    assert hist[-1].eval_loss == 123.5
+    assert hist[-1].loss != 123.5          # the train loss, not the eval
+    assert 0.0 < hist[-1].loss < 50.0
+
+
+def test_upload_byte_shares_sum_exactly(params0):
+    """Regression: the per-client ledger dropped nbytes % len(part) bytes
+    (top-k tie-keeps make the round total indivisible), under-counting the
+    sim replay's wire traffic."""
+    from repro.core.accounting import split_bytes
+    from repro.core.strategy import Compressed, FedAvg
+    assert split_bytes(7, 2) == [4, 3]
+    assert split_bytes(9, 3) == [3, 3, 3]
+    for total, k in ((10_000_001, 3), (5, 4), (0, 2)):
+        shares = split_bytes(total, k)
+        assert sum(shares) == total and max(shares) - min(shares) <= 1
+    batches, sizes = _clients(k=3)
+    plan = RoundPlan(n_rounds=2, client_sizes=sizes, telemetry=False,
+                     strategy=Compressed(inner=FedAvg(), kind="topk",
+                                         frac=0.3))
+    _, hist = FedSession(CFG, optim.adam(1e-4), plan).run(params0, batches)
+    for h in hist:
+        assert sum(h.client_upload_bytes) == h.upload_bytes
+
+
 def test_quantity_skew_weighting():
     """Under quantity skew the big client dominates the average (Eq. n_k/n)."""
     batches, sizes = _clients(k=2, skew="quantity")

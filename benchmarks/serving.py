@@ -1,0 +1,183 @@
+"""Serving benchmark: continuous batching vs the static-batch baseline at
+equal offered load, served from a REAL federated checkpoint.
+
+The point of FDAPT is the model you serve afterwards, so the benchmark
+closes the loop: it runs (or reuses) a ``FedSession`` training run, loads
+the aggregated global params through ``repro.serve.loader``, and drives
+both decode paths with the SAME seeded open-loop Poisson arrival trace and
+per-request stop lengths.  Three numbers matter:
+
+  * ``throughput_ratio`` — continuous over static tokens/s.  Requests stop
+    at heterogeneous lengths; the engine refills freed slots mid-flight
+    while the static batch decodes to its longest member and waits for
+    batches to form, so the ratio should be >= 1.
+  * ``parity_bitwise`` — per-request outputs of the two paths compared
+    token-for-token.  Same sampler, same (seed, position) keys => must be
+    True; the benchmark fails loudly if not.
+  * the per-mode latency breakdown (TTFT / p50 / p99, occupancies).
+
+    PYTHONPATH=src python benchmarks/serving.py --tiny
+    PYTHONPATH=src python benchmarks/serving.py --tiny --rates 5,20,80
+    PYTHONPATH=src python benchmarks/serving.py --ckpt-dir runs/fed/ckpts
+
+``--tiny`` is the CI smoke: a 2-round qwen2-7b run at shrunken width into a
+temp dir, ~200 decode steps total, asserts ratio >= 1 and parity, writes
+``BENCH_serve.json`` (the committed perf-trajectory file).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import tempfile
+
+import jax
+import numpy as np
+
+from repro import optim
+from repro.configs import get_config
+from repro.core.rounds import FedSession
+from repro.data.corpus import generate_corpus
+from repro.core.noniid import make_client_datasets
+from repro.models.model import init_model
+from repro.nn import param as P
+from repro.serve import (DecodeEngine, EngineConfig, PoissonArrivals,
+                         load_serving_params, run_static, synthetic_requests,
+                         write_bench)
+
+
+def shrink(cfg):
+    """Sub-reduced() width for the smoke: decode steps in milliseconds."""
+    return cfg.reduced().replace(d_model=128, n_heads=2, n_kv_heads=1,
+                                 head_dim=64, d_ff=256, vocab_size=512)
+
+
+def train_checkpoint(cfg, ckpt_dir: str, *, n_rounds: int, seed: int) -> None:
+    """A real (tiny) FDAPT run whose round checkpoints land in ckpt_dir."""
+    params0 = P.unbox(init_model(jax.random.PRNGKey(seed), cfg))
+    docs = generate_corpus(24, seed=seed)
+    ds = make_client_datasets(docs, cfg, k=2, batch=2, seq=16, seed=seed)
+    batches = [b[:2] for b in ds["batches"]]
+    session = FedSession(
+        cfg, optim.adam(1e-3), n_rounds=n_rounds, telemetry=False,
+        checkpoint_dir=ckpt_dir,
+        fingerprint_extra={"arch": cfg.name, "bench": "serving"})
+    session.run(params0, batches)
+
+
+def measure(cfg, params, requests, *, n_slots, cache_len, impl):
+    """Both decode paths over (copies of) the same request trace."""
+    engine = DecodeEngine(cfg, params,
+                          EngineConfig(n_slots=n_slots, cache_len=cache_len,
+                                       impl=impl))
+    out_c, sum_c = engine.run([r.replace() for r in requests])
+    assert engine.decode_cache_size() == 1, "decode program recompiled"
+    out_s, sum_s = run_static(cfg, params, [r.replace() for r in requests],
+                              n_slots=n_slots, cache_len=cache_len, impl=impl)
+    parity = all(np.array_equal(out_c[r.rid], out_s[r.rid])
+                 for r in requests)
+    ratio = sum_c["tokens_per_s"] / max(sum_s["tokens_per_s"], 1e-9)
+    return {"continuous": sum_c, "static": sum_s,
+            "throughput_ratio": round(ratio, 4), "parity_bitwise": parity}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-7b")
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: shrunken width, 2 training rounds, "
+                         "asserts ratio >= 1 and bitwise parity")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="serve an existing checkpoint instead of training")
+    ap.add_argument("--rounds", type=int, default=2)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--tokens", type=int, default=48)
+    ap.add_argument("--min-tokens", type=int, default=8)
+    ap.add_argument("--rate", type=float, default=100.0,
+                    help="offered load, requests/s (both modes see the "
+                         "same arrival trace)")
+    ap.add_argument("--rates", default=None,
+                    help="comma-separated rate sweep; summary rows land "
+                         "under 'sweep'")
+    ap.add_argument("--temperature", type=float, default=0.7)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--impl", default="xla", choices=("xla", "pallas"))
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "BENCH_serve.json"))
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    cfg = shrink(cfg) if args.tiny else cfg.reduced()
+
+    tmp = None
+    ckpt_dir = args.ckpt_dir
+    if ckpt_dir is None:
+        tmp = tempfile.TemporaryDirectory(prefix="serve_bench_")
+        ckpt_dir = os.path.join(tmp.name, "ckpts")
+        print(f"training {args.rounds}-round FedSession ({cfg.name}) ...")
+        train_checkpoint(cfg, ckpt_dir, n_rounds=args.rounds, seed=args.seed)
+    params, step, fed = load_serving_params(ckpt_dir, cfg)
+    n_hist = len(fed.history) if fed else 0
+    print(f"serving checkpoint step {step} ({n_hist} recorded rounds)")
+
+    cache_len = args.prompt_len + args.tokens
+    rng = np.random.default_rng(args.seed)
+    requests = synthetic_requests(
+        cfg, args.requests, prompt_len=args.prompt_len, rng=rng,
+        max_new_tokens=args.tokens, min_new_tokens=args.min_tokens,
+        temperature=args.temperature, seed=args.seed)
+
+    rates = ([float(r) for r in args.rates.split(",")] if args.rates
+             else [args.rate])
+    sweep = []
+    for rate in rates:
+        reqs = PoissonArrivals(rate, seed=args.seed).assign(requests)
+        res = measure(cfg, params, reqs, n_slots=args.slots,
+                      cache_len=cache_len, impl=args.impl)
+        print(f"rate {rate:g} rps: continuous "
+              f"{res['continuous']['tokens_per_s']:.1f} tok/s, static "
+              f"{res['static']['tokens_per_s']:.1f} tok/s, ratio "
+              f"{res['throughput_ratio']:.2f}, parity "
+              f"{res['parity_bitwise']}")
+        sweep.append({"rate_rps": rate, **res})
+
+    head = sweep[0]
+    payload = {
+        "benchmark": "serve",
+        "arch": cfg.name,
+        "arch_type": cfg.arch_type,
+        "checkpoint": {"dir": "<temp>" if tmp else ckpt_dir, "step": step,
+                       "rounds_recorded": n_hist},
+        "engine": {"n_slots": args.slots, "cache_len": cache_len,
+                   "impl": args.impl},
+        "workload": {"requests": args.requests,
+                     "prompt_len": args.prompt_len,
+                     "max_new_tokens": args.tokens,
+                     "min_new_tokens": args.min_tokens,
+                     "rate_rps": rates[0],
+                     "temperature": args.temperature, "seed": args.seed},
+        "modes": {"continuous": head["continuous"],
+                  "static": head["static"]},
+        "throughput_ratio": head["throughput_ratio"],
+        "parity_bitwise": head["parity_bitwise"],
+    }
+    if len(sweep) > 1:
+        payload["sweep"] = sweep
+    write_bench(args.out, payload)
+    print(f"wrote {args.out}")
+
+    if args.tiny:
+        assert head["parity_bitwise"], \
+            "continuous/static outputs diverged (bitwise)"
+        assert head["throughput_ratio"] >= 1.0, \
+            f"continuous slower than static: {head['throughput_ratio']}"
+        print("OK (parity bitwise, ratio >= 1)")
+    if tmp:
+        tmp.cleanup()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,6 +1,12 @@
 """Batched serving example: prefill + greedy decode on any zoo arch,
 including the SSM/hybrid state-cache paths and the sliding-window ring cache.
 
+Prompt/batch construction comes from ``repro.serve.requests`` (shared with
+the serving CLI); throughput uses the unified definition — generated tokens
+INCLUDE the one the prefill logits produce, over the prefill+decode interval.
+Logit finiteness is accumulated across the whole decode (``FiniteTrace``),
+so a mid-sequence NaN reports the step it first appeared.
+
     PYTHONPATH=src python examples/serve_decode.py --arch rwkv6-1.6b
     PYTHONPATH=src python examples/serve_decode.py --arch qwen2-7b --window 16
 """
@@ -16,6 +22,8 @@ from repro.configs import get_config
 from repro.models.model import init_model
 from repro.models.steps import make_prefill_step, make_serve_step
 from repro.nn import param as P
+from repro.serve import (FiniteTrace, generated_tokens, prompt_batch,
+                         tokens_per_s)
 
 
 def main():
@@ -41,33 +49,27 @@ def main():
     serve = jax.jit(make_serve_step(cfg))
 
     rng = np.random.default_rng(0)
-    batch = {"tokens": jnp.asarray(
-        rng.integers(5, cfg.vocab_size, (args.batch, args.prompt_len)),
-        jnp.int32)}
-    if cfg.arch_type == "vlm":
-        batch["image_embeds"] = jnp.asarray(
-            rng.normal(0, .1, (args.batch, cfg.n_image_tokens, cfg.d_model)),
-            jnp.float32)
-    if cfg.arch_type == "audio":
-        batch["frames"] = jnp.asarray(
-            rng.normal(0, .1, (args.batch, cfg.n_audio_frames, cfg.d_model)),
-            jnp.float32)
+    batch = prompt_batch(cfg, args.batch, args.prompt_len, rng)
 
-    logits, cache = prefill(params, batch)
-    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    ftrace = FiniteTrace()
     t0 = time.perf_counter()
+    logits, cache = prefill(params, batch)
+    ftrace.update(logits)
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
     toks = [tok]
     for _ in range(args.tokens - 1):
         logits, cache = serve(params, {"tokens": tok}, cache)
+        ftrace.update(logits)
         tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
         toks.append(tok)
     jax.block_until_ready(tok)
     dt = time.perf_counter() - t0
+    n_tokens = generated_tokens(args.batch, args.tokens)
     print(f"{cfg.name} ({cfg.arch_type}): cache_len={cache_len} "
-          f"decoded {args.tokens - 1} steps "
-          f"{(args.tokens - 1) / dt:.1f} steps/s")
+          f"generated {n_tokens} tokens "
+          f"{tokens_per_s(n_tokens, dt):.1f} tok/s")
     print("tokens[0]:", np.asarray(jnp.concatenate(toks, 1))[0][:12])
-    assert bool(jnp.all(jnp.isfinite(logits)))
+    ftrace.assert_finite(f"{cfg.name} decode")
     print("OK")
 
 

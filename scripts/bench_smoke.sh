@@ -17,3 +17,6 @@ python benchmarks/wallclock.py --tiny --calibrated
 
 echo "== resume smoke (checkpoint -> resume bitwise parity) =="
 bash scripts/resume_smoke.sh
+
+echo "== serve smoke (federated checkpoint -> continuous batching) =="
+bash scripts/serve_smoke.sh

@@ -1,0 +1,37 @@
+#!/usr/bin/env bash
+# Serving smoke: train a real 2-round FedSession at tiny scale, serve its
+# checkpoint through the continuous-batching engine AND the static baseline
+# under the same seeded Poisson arrivals, and hold the result to the
+# acceptance bar: bitwise-equal outputs, continuous throughput >= static,
+# and a schema-complete BENCH_serve.json.  Run from anywhere.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+
+TMP=$(mktemp -d)
+trap 'rm -rf "$TMP"' EXIT
+
+echo "== serving benchmark (tiny: 2-round checkpoint -> Poisson traffic) =="
+bash scripts/serve_env.sh python benchmarks/serving.py --tiny \
+    --out "$TMP/BENCH_serve.json"
+
+echo "== BENCH_serve.json schema =="
+python - "$TMP/BENCH_serve.json" <<'EOF'
+import json, sys
+from repro.serve import BENCH_MODE_KEYS
+
+bench = json.load(open(sys.argv[1]))
+for key in ("benchmark", "arch", "arch_type", "checkpoint", "engine",
+            "workload", "modes", "throughput_ratio", "parity_bitwise"):
+    assert key in bench, f"missing top-level key {key!r}"
+assert bench["benchmark"] == "serve"
+assert bench["checkpoint"]["step"] >= 1, "did not serve a real checkpoint"
+for mode in ("continuous", "static"):
+    missing = set(BENCH_MODE_KEYS) - set(bench["modes"][mode])
+    assert not missing, f"{mode} summary missing {sorted(missing)}"
+    assert bench["modes"][mode]["generated_tokens"] > 0
+assert bench["parity_bitwise"] is True
+assert bench["throughput_ratio"] >= 1.0
+print("serve smoke OK: schema complete, parity bitwise, "
+      f"ratio {bench['throughput_ratio']}")
+EOF

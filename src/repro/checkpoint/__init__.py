@@ -1,3 +1,3 @@
 from repro.checkpoint.npz import (  # noqa: F401
     save_checkpoint, restore_checkpoint, restore_extra, latest_step,
-    tree_digest, FederatedState)
+    archive_keys, tree_digest, FederatedState)

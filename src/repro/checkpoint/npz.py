@@ -117,6 +117,18 @@ def restore_checkpoint(directory: str, step: int, template: Any) -> Any:
     return jax.tree_util.tree_unflatten(treedef, new_leaves)
 
 
+def archive_keys(directory: str, step: int) -> List[str]:
+    """Flat leaf keys stored in a checkpoint archive (``::bf16`` markers
+    stripped).  Lets a reader discover the archive's layout — e.g. whether
+    params live under a ``params|`` prefix (a ``FedSession`` round
+    checkpoint) or at the root (a bare params snapshot) — without loading
+    any array data."""
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    with np.load(path) as data:
+        return [k[:-len("::bf16")] if k.endswith("::bf16") else k
+                for k in data.files]
+
+
 def restore_extra(directory: str, step: int) -> Optional[Dict[str, Any]]:
     path = os.path.join(directory, f"ckpt_{step:08d}.json")
     if not os.path.exists(path):

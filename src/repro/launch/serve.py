@@ -1,82 +1,129 @@
-"""Batched serving driver: prefill a prompt batch, then greedy-decode.
+"""Serving CLI over ``repro.serve``: continuous batching by default, the
+static-batch baseline behind ``--static``.
 
-Exercises the decode-shape program (``serve_step``: one token against the KV
-cache) that the dry-run lowers at production scale.
+Serves either fresh-initialized params (default, a shape/perf exercise) or a
+real FDAPT checkpoint::
 
-    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b --tokens 32
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b --requests 8
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b \
+        --ckpt-dir runs/fed/checkpoints            # serve the global model
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b --static \
+        --bench-out BENCH_static.json              # baseline + metrics dump
+
+Traffic is an open-loop Poisson process (``--rate`` requests/s, seeded):
+arrivals never wait for the server, so queueing shows up in the latency
+percentiles instead of being hidden by closed-loop backpressure.  Stops per
+request on ``--tokens`` (max new tokens) or ``--eos-id``.
 """
 
 from __future__ import annotations
 
 import argparse
-import time
+import json
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
 from repro.models.model import init_model
-from repro.models.steps import make_prefill_step, make_serve_step
 from repro.nn import param as P
+from repro.serve import (DecodeEngine, EngineConfig, PoissonArrivals,
+                         load_serving_params, run_static, synthetic_requests,
+                         write_bench)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-7b")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="serve params from a repro.checkpoint archive "
+                         "(a FedSession round checkpoint or bare snapshot)")
+    ap.add_argument("--ckpt-step", type=int, default=None,
+                    help="checkpoint step (default: newest in --ckpt-dir)")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="concurrent decode slots (static mode: batch size)")
+    ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--tokens", type=int, default=32)
-    ap.add_argument("--full-config", action="store_true")
-    ap.add_argument("--impl", default="xla", choices=("xla", "pallas"))
+    ap.add_argument("--tokens", type=int, default=32,
+                    help="max new tokens per request (incl. the "
+                         "prefill-produced token)")
+    ap.add_argument("--min-tokens", type=int, default=None,
+                    help="per-request stop lengths drawn uniform "
+                         "[min,--tokens] (default: all equal --tokens)")
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="Poisson arrival rate, requests/s (0 = all at t=0)")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--eos-id", type=int, default=None)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--impl", default="xla", choices=("xla", "pallas"))
+    ap.add_argument("--window", type=int, default=0,
+                    help="sliding-window variant (ring KV cache)")
+    ap.add_argument("--static", action="store_true",
+                    help="static-batch baseline instead of the engine")
+    ap.add_argument("--bench-out", default=None,
+                    help="write the metrics summary as JSON")
+    ap.add_argument("--full-config", action="store_true")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if not args.full_config:
         cfg = cfg.reduced()
+    if args.window:
+        cfg = cfg.replace(sliding_window=args.window)
     if cfg.arch_type == "mlm":
         raise SystemExit("mlm is encoder-only: no decode step (see DESIGN.md)")
 
+    if args.ckpt_dir:
+        params, step, _ = load_serving_params(args.ckpt_dir, cfg,
+                                              args.ckpt_step)
+        print(f"params: checkpoint step {step} from {args.ckpt_dir}")
+    else:
+        params = P.unbox(init_model(jax.random.PRNGKey(args.seed), cfg))
+        print("params: fresh init (pass --ckpt-dir to serve a trained model)")
+
     cache_len = args.prompt_len + args.tokens
-    params = P.unbox(init_model(jax.random.PRNGKey(args.seed), cfg))
-    prefill = jax.jit(make_prefill_step(cfg, cache_len, impl=args.impl))
-    serve = jax.jit(make_serve_step(cfg, impl=args.impl))
-
     rng = np.random.default_rng(args.seed)
-    batch = {"tokens": jnp.asarray(
-        rng.integers(5, cfg.vocab_size, (args.batch, args.prompt_len)), jnp.int32)}
-    if cfg.arch_type == "vlm":
-        batch["image_embeds"] = jnp.asarray(
-            rng.normal(0, 0.1, (args.batch, cfg.n_image_tokens, cfg.d_model)),
-            jnp.float32)
-    if cfg.arch_type == "audio":
-        batch["frames"] = jnp.asarray(
-            rng.normal(0, 0.1, (args.batch, cfg.n_audio_frames, cfg.d_model)),
-            jnp.float32)
+    requests = synthetic_requests(
+        cfg, args.requests, prompt_len=args.prompt_len, rng=rng,
+        max_new_tokens=args.tokens, min_new_tokens=args.min_tokens,
+        eos_id=args.eos_id, temperature=args.temperature, seed=args.seed)
+    requests = PoissonArrivals(args.rate, seed=args.seed).assign(requests)
 
-    t0 = time.perf_counter()
-    logits, cache = prefill(params, batch)
-    logits.block_until_ready()
-    t_prefill = time.perf_counter() - t0
-    print(f"prefill: {args.batch}x{args.prompt_len} in {t_prefill*1e3:.1f} ms")
+    mode = "static" if args.static else "continuous"
+    if args.static:
+        outputs, summary = run_static(cfg, params, requests,
+                                      n_slots=args.slots,
+                                      cache_len=cache_len, impl=args.impl)
+    else:
+        engine = DecodeEngine(cfg, params, EngineConfig(
+            n_slots=args.slots, cache_len=cache_len, impl=args.impl))
+        outputs, summary = engine.run(requests)
+        print(f"compiled programs: decode={engine.decode_cache_size()} "
+              f"prefill={engine.prefill_cache_size()}")
 
-    tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
-    out_tokens = [tok]
-    t0 = time.perf_counter()
-    for _ in range(args.tokens - 1):
-        step_batch = {"tokens": tok}
-        logits, cache = serve(params, step_batch, cache)
-        tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
-        out_tokens.append(tok)
-    jax.block_until_ready(tok)
-    dt = time.perf_counter() - t0
-    seq = jnp.concatenate(out_tokens, axis=1)
-    tps = args.batch * (args.tokens - 1) / max(dt, 1e-9)
-    print(f"decode: {args.tokens-1} steps, {tps:.1f} tok/s "
-          f"({dt/(args.tokens-1)*1e3:.1f} ms/step)")
-    print("sample token ids:", np.asarray(seq[0, :16]))
-    assert bool(jnp.all(jnp.isfinite(logits))), "non-finite logits"
+    print(f"{cfg.name} ({cfg.arch_type}) {mode}: "
+          f"{summary['n_requests']} requests, "
+          f"{summary['generated_tokens']} tokens, "
+          f"{summary['tokens_per_s']:.1f} tok/s, "
+          f"TTFT p50 {summary['ttft_s']['p50']*1e3:.1f} ms, "
+          f"latency p99 {summary['latency_s']['p99']*1e3:.1f} ms, "
+          f"slot occupancy {summary['slot_occupancy']:.2f}")
+    rid0 = min(outputs)
+    print(f"request {rid0} tokens: {outputs[rid0][:16]}")
+    if args.bench_out:
+        write_bench(args.bench_out, {
+            "benchmark": "serve", "arch": cfg.name, "mode": mode,
+            "workload": {"requests": args.requests,
+                         "prompt_len": args.prompt_len,
+                         "max_new_tokens": args.tokens,
+                         "rate_rps": args.rate, "seed": args.seed},
+            "engine": {"n_slots": args.slots, "cache_len": cache_len,
+                       "impl": args.impl},
+            "metrics": summary,
+        })
+        print(f"wrote {args.bench_out}")
+    else:
+        print(json.dumps(summary, indent=2, sort_keys=True))
 
 
 if __name__ == "__main__":

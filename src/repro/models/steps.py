@@ -279,3 +279,20 @@ def make_serve_step(cfg, *, impl: str = "xla"):
                                        cache=cache, impl=impl)
         return logits[:, -1, :], cache
     return serve_step
+
+
+def make_slot_serve_step(cfg, *, impl: str = "xla"):
+    """The continuous-batching decode program (``repro.serve``): the batch=1
+    serve step vmapped over a leading SLOT axis of stacked per-request
+    caches.
+
+    -> slot_serve(params, batch{tokens (slots,1,1)}, pool) -> (logits
+    (slots,1,V), pool), where every pool leaf is (slots, *batch1_leaf) and
+    each slot carries its OWN cache index — per-slot positions, RoPE phases
+    and ring-buffer writes fall out of the vmap instead of threading a
+    position vector through the model.  The program's shape depends only on
+    the pool, so one compile serves every admit/evict sequence (pinned via
+    the jit cache-miss counter in tests/test_serve.py), and its per-slot
+    math is the single-request math exactly (engine outputs are bitwise
+    identical to static decode)."""
+    return jax.vmap(make_serve_step(cfg, impl=impl), in_axes=(None, 0, 0))

@@ -1,0 +1,32 @@
+"""repro.serve: continuous-batching decode over the jitted serve programs.
+
+Public surface:
+
+  * ``DecodeEngine`` / ``EngineConfig`` — fixed-slot continuous batching
+    (``engine``), plus ``run_static`` as the static-batch reference path;
+  * ``SlotCachePool`` — slot-addressed KV/SSM-state pool (``cache``);
+  * ``Request`` / ``synthetic_requests`` / ``prompt_batch`` — request model
+    and the shared arch-aware prompt construction (``requests``);
+  * ``FIFOScheduler`` / ``PoissonArrivals`` / ``WallClock`` /
+    ``VirtualClock`` — admission order, open-loop traffic, time
+    (``scheduler``);
+  * ``ServeMetrics`` / ``FiniteTrace`` / ``write_bench`` — per-request
+    latency accounting and the BENCH_serve.json schema (``metrics``);
+  * ``load_serving_params`` — params from ``repro.checkpoint`` archives
+    (``loader``).
+"""
+
+from repro.serve.cache import SlotCachePool  # noqa: F401
+from repro.serve.engine import (DecodeEngine, EngineConfig,  # noqa: F401
+                                run_static)
+from repro.serve.loader import (checkpoint_arch, load_serving_params,  # noqa: F401
+                                params_template)
+from repro.serve.metrics import (BENCH_MODE_KEYS, FiniteTrace,  # noqa: F401
+                                 RequestRecord, ServeMetrics, percentiles,
+                                 write_bench)
+from repro.serve.requests import (Request, extra_inputs,  # noqa: F401
+                                  generated_tokens, prompt_batch,
+                                  request_batch, synthetic_requests,
+                                  tokens_per_s)
+from repro.serve.scheduler import (FIFOScheduler, PoissonArrivals,  # noqa: F401
+                                   VirtualClock, WallClock)

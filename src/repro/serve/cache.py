@@ -1,0 +1,88 @@
+"""Slot-addressed KV/SSM-state cache pool.
+
+The pool stacks ``n_slots`` independent single-request caches (each exactly
+the tree ``repro.models.model.cache_struct(cfg, batch=1, cache_len)``
+builds — ring KV for sliding windows, conv+SSD state for mamba, wkv state
+for rwkv, grouped self+cross KV for VLM, ...) along a new leading slot
+axis.  Every slot is fully self-contained, per-slot ``index`` included, so:
+
+  * the decode program is the SINGLE-request program vmapped over the slot
+    axis (``make_slot_serve_step``) — per-slot positions come for free and
+    the program compiles once for the pool shape, never again;
+  * admit is a tree-scatter of a freshly prefilled batch=1 cache into a
+    slot, evict is a tree-gather of that slot to host memory, and readmit
+    scatters the snapshot back into ANY free slot — the slot id appears
+    nowhere inside the cache values, which is why evict-and-readmit is
+    bitwise identical to uninterrupted decode (pinned in tests/test_serve).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import cache_struct
+from repro.nn import param as P
+
+
+def _pool_write(pool, slot, slot_cache):
+    return jax.tree.map(lambda pl, l: pl.at[slot].set(l), pool, slot_cache)
+
+
+def _pool_read(pool, slot):
+    return jax.tree.map(lambda pl: pl[slot], pool)
+
+
+class SlotCachePool:
+    """``n_slots`` stacked batch=1 caches; leaves (n_slots, *leaf.shape).
+
+    ``slot_tokens`` is each slot's admissible KV length: ``min(cache_len,
+    sliding_window)`` on windowed attention (the ring), ``cache_len``
+    otherwise.  SSM/hybrid state caches are O(1) in sequence length — their
+    occupancy is still reported against ``cache_len`` (positions consumed
+    of the slot's decode budget)."""
+
+    def __init__(self, cfg, n_slots: int, cache_len: int, dtype=None):
+        if n_slots < 1:
+            raise ValueError(f"n_slots must be >= 1, got {n_slots}")
+        self.cfg = cfg
+        self.n_slots = int(n_slots)
+        self.cache_len = int(cache_len)
+        self.slot_tokens = (min(cache_len, cfg.sliding_window)
+                            if cfg.sliding_window else cache_len)
+        struct = cache_struct(cfg, 1, cache_len, dtype)
+        self.pool = jax.tree.map(
+            lambda b: jnp.zeros((self.n_slots,) + b.value.shape,
+                                b.value.dtype),
+            struct, is_leaf=P.is_box)
+        self._write = jax.jit(_pool_write)
+        self._read = jax.jit(_pool_read)
+
+    def write(self, slot: int, slot_cache: Any) -> None:
+        """Scatter a batch=1 cache tree into ``slot`` (admit / readmit)."""
+        self.pool = self._write(self.pool, jnp.int32(slot), slot_cache)
+
+    def read(self, slot: int) -> Any:
+        """The slot's batch=1 cache tree (device arrays)."""
+        return self._read(self.pool, jnp.int32(slot))
+
+    def extract(self, slot: int) -> Dict[str, Any]:
+        """Host-side snapshot of the slot (evict): bitwise copies."""
+        return jax.tree.map(np.asarray, self.read(slot))
+
+    def insert(self, slot: int, snapshot: Dict[str, Any]) -> None:
+        """Scatter a host snapshot back into a (possibly different) slot."""
+        self.write(slot, jax.tree.map(jnp.asarray, snapshot))
+
+    def positions(self) -> np.ndarray:
+        """(n_slots,) int32 — each slot's token count (its cache index)."""
+        return np.asarray(self.pool["index"])
+
+    def tokens_used(self, active: np.ndarray) -> int:
+        """Real cache positions held by ``active`` slots (occupancy
+        numerator): per-slot min(index, slot_tokens)."""
+        pos = np.minimum(self.positions(), self.slot_tokens)
+        return int(pos[np.asarray(active, bool)].sum())

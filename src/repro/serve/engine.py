@@ -1,0 +1,483 @@
+"""Continuous-batching decode engine over fixed-shape jitted programs.
+
+``DecodeEngine`` owns a ``SlotCachePool`` of ``n_slots`` per-request caches
+and two programs:
+
+  * prefill — the batch=1 ``make_prefill_step`` program (one trace per
+    distinct prompt length; admission runs it and scatters the filled cache
+    into a free slot);
+  * decode — ``make_slot_serve_step``: the batch=1 serve step vmapped over
+    the slot axis, compiled ONCE for the pool shape.  Requests are admitted
+    and evicted by scattering cache trees in and out of slots; the decode
+    program itself never sees shapes change, so it never recompiles
+    (``decode_cache_size()`` stays 1 — pinned in tests/test_serve.py).
+
+Admission is prefill-prioritized: before every decode step the engine
+drains arrived requests into free slots.  Each request stops on its own
+``max_new_tokens`` or ``eos_id``; finished slots free immediately and the
+next waiting request takes them mid-flight — that is the whole continuous-
+batching win over a static batch, which must run every sequence to the
+longest stop and wait for whole batches to form.
+
+Sampling is greedy (temperature 0, ``argmax``) or temperature-scaled
+categorical with a per-request key ``fold_in(PRNGKey(seed), position)`` —
+the key depends on the request and the absolute token position only, never
+on the slot or the step the engine happened to run, so engine outputs are
+BITWISE identical to ``run_static`` (the batched static-shape reference
+path) for the same requests, including across an evict/readmit cycle.
+
+Per-slot logits finiteness is accumulated every step on device (one flag
+vector, no sync in the loop) and checked when a request completes — a
+mid-sequence NaN names its request instead of surfacing N steps later.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.steps import (make_prefill_step, make_serve_step,
+                                make_slot_serve_step)
+from repro.serve.cache import SlotCachePool
+from repro.serve.metrics import FiniteTrace, RequestRecord, ServeMetrics
+from repro.serve.requests import Request, prompt_batch, request_batch
+from repro.serve.scheduler import FIFOScheduler, VirtualClock, WallClock
+
+_PAD_ID = 5          # benign token id parked in inactive slots
+
+
+def _sample_one(logits, seed, pos, temp):
+    """One token from one row of final logits.  temp==0 -> argmax; else
+    categorical at ``logits/temp`` under ``fold_in(PRNGKey(seed), pos)`` —
+    a function of (request, absolute position) only, so the draw is the
+    same whatever slot or engine path produced the logits."""
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), pos)
+    safe = jnp.where(temp > 0, temp, 1.0)
+    samp = jax.random.categorical(
+        key, logits.astype(jnp.float32) / safe).astype(jnp.int32)
+    return jnp.where(temp > 0, samp, greedy)
+
+
+# one process-wide sampler: the engine and the static reference path run
+# the IDENTICAL compiled program, which is half of the bitwise-parity story
+_SAMPLER = jax.jit(jax.vmap(_sample_one))
+
+
+def _make_decode_kernel(cfg, impl: str):
+    """The engine's per-step device program, fused into ONE dispatch: the
+    slot-vmapped serve step, per-slot sampling, and the finiteness
+    accumulation.  Sampling positions are the post-step cache indices
+    (each slot's ``index`` equals prompt_len + n_generated right after the
+    step).  Fusing ``_sample_one`` here is safe for the bitwise-parity
+    guarantee: its math is elementwise + argmax, which XLA compiles to the
+    same per-row results fused or standalone, any batch size (checked in
+    tests/test_serve.py against the static path's ``_SAMPLER``).  One jit
+    dispatch + one device sync per decode step is what makes the engine's
+    per-step host overhead match the static loop's."""
+    vserve = make_slot_serve_step(cfg, impl=impl)
+
+    def kernel(params, tokens, pool, finite, active, seeds, temps):
+        logits, pool = vserve(params, {"tokens": tokens}, pool)
+        lg = logits[:, 0, :]                                  # (slots, V)
+        ok = jnp.all(jnp.isfinite(lg), axis=-1)
+        finite = jnp.where(active, finite & ok, finite)
+        pos = pool["index"].astype(jnp.int32)                 # (slots,)
+        toks = jax.vmap(_sample_one)(lg, seeds, pos, temps)
+        return toks, finite, pool
+
+    return kernel
+
+
+def _make_admit_kernel(cfg, cache_len: int, impl: str):
+    """Admission's device program (one trace per distinct prompt length):
+    batch=1 prefill + first-token sample (at pos = prompt_len) + logits
+    finiteness, in one dispatch."""
+    prefill = make_prefill_step(cfg, cache_len, impl=impl)
+
+    def kernel(params, batch, seed, pos, temp):
+        logits, cache1 = prefill(params, batch)               # (1, V)
+        tok = jax.vmap(_sample_one)(logits, seed[None], pos[None],
+                                    temp[None])[0]
+        fin = jnp.all(jnp.isfinite(logits))
+        return tok, fin, cache1
+
+    return kernel
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    """Static engine shape: ``n_slots`` concurrent requests, ``cache_len``
+    positions per slot (>= prompt_len + max_new_tokens of any admitted
+    request on full attention; the ring keeps ``sliding_window``)."""
+
+    n_slots: int = 4
+    cache_len: int = 128
+    impl: str = "xla"
+    cache_dtype: Any = None
+    check_finite: bool = True
+
+
+@dataclasses.dataclass
+class _Slot:
+    request: Request
+    out: List[int]
+    n_generated: int
+    admit_s: float
+    first_token_s: float
+    evictions: int = 0
+
+
+class _ZeroClock:
+    """Default clock for low-level admit/decode_step calls: time stands
+    still (records carry zeros; run() supplies a real clock)."""
+
+    def now(self) -> float:
+        return 0.0
+
+    def tick(self) -> None:
+        pass
+
+
+class DecodeEngine:
+    def __init__(self, cfg, params, engine: Optional[EngineConfig] = None,
+                 **kw):
+        if cfg.arch_type == "mlm":
+            raise ValueError("mlm is encoder-only: nothing to decode")
+        self.cfg = cfg
+        self.params = params
+        self.engine = engine or EngineConfig(**kw)
+        ec = self.engine
+        self.pool = SlotCachePool(cfg, ec.n_slots, ec.cache_len,
+                                  ec.cache_dtype)
+        self._admit = jax.jit(_make_admit_kernel(cfg, ec.cache_len,
+                                                 impl=ec.impl))
+        self._kernel = jax.jit(_make_decode_kernel(cfg, ec.impl))
+        self.slots: List[Optional[_Slot]] = [None] * ec.n_slots
+        # per-slot metadata stays on HOST (tiny arrays, shipped with each
+        # kernel call): the serving loop never runs an eager device op, so
+        # each decode step is exactly one dispatch + one result fetch
+        self._next_np = np.full((ec.n_slots, 1, 1), _PAD_ID, np.int32)
+        self._finite = np.ones(ec.n_slots, bool)
+        self._active = np.zeros(ec.n_slots, bool)
+        self._seeds = np.zeros(ec.n_slots, np.int32)
+        self._temps = np.zeros(ec.n_slots, np.float32)
+        self.outputs: Dict[int, np.ndarray] = {}
+        self.metrics = ServeMetrics(ec.n_slots, self.pool.slot_tokens)
+
+    # ------------------------------------------------------------------
+    # Introspection
+    # ------------------------------------------------------------------
+
+    def free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s is None]
+
+    def n_active(self) -> int:
+        return sum(s is not None for s in self.slots)
+
+    def decode_cache_size(self) -> int:
+        """Compiled-program count of the decode kernel jit — the
+        no-recompilation invariant says this stays 1 forever."""
+        return self._kernel._cache_size()
+
+    def prefill_cache_size(self) -> int:
+        """One trace per distinct admitted prompt length."""
+        return self._admit._cache_size()
+
+    # ------------------------------------------------------------------
+    # Admission / decode / eviction
+    # ------------------------------------------------------------------
+
+    def _check_capacity(self, request: Request) -> None:
+        need = request.prompt_len + request.max_new_tokens
+        if not self.cfg.sliding_window and need > self.engine.cache_len:
+            raise ValueError(
+                f"request {request.rid}: prompt {request.prompt_len} + "
+                f"max_new {request.max_new_tokens} exceeds cache_len "
+                f"{self.engine.cache_len}")
+
+    def admit(self, request: Request, clock=None) -> int:
+        """Prefill the request (batch=1) into a free slot; samples the
+        first token (from the prefill logits) before returning."""
+        clock = clock or _ZeroClock()
+        free = self.free_slots()
+        if not free:
+            raise RuntimeError("admit with no free slot")
+        self._check_capacity(request)
+        slot = free[0]
+        t_admit = clock.now()
+        batch = {"tokens": jnp.asarray(request.tokens[None])}
+        if request.extras:
+            for k, v in request.extras.items():
+                batch[k] = jnp.asarray(v[None])
+        tok, fin, cache1 = self._admit(
+            self.params, batch, jnp.int32(request.seed),
+            jnp.int32(request.prompt_len), jnp.float32(request.temperature))
+        tok_i, fin_b = jax.device_get((tok, fin))            # syncs
+        tok_i = int(tok_i)
+        self._finite[slot] = bool(fin_b)
+        self._active[slot] = True
+        self._seeds[slot] = request.seed
+        self._temps[slot] = request.temperature
+        self.pool.write(slot, cache1)
+        t_first = clock.now()
+        self.slots[slot] = _Slot(request=request, out=[tok_i],
+                                 n_generated=1, admit_s=t_admit,
+                                 first_token_s=t_first)
+        self._next_np[slot, 0, 0] = tok_i
+        if self._stopped(request, tok_i, 1):
+            self._complete(slot, t_first)
+        return slot
+
+    @staticmethod
+    def _stopped(request: Request, tok: int, n_generated: int) -> bool:
+        return (n_generated >= request.max_new_tokens
+                or (request.eos_id is not None and tok == request.eos_id))
+
+    def decode_step(self, clock=None) -> None:
+        """One lockstep decode over the whole pool (no-op when idle)."""
+        clock = clock or _ZeroClock()
+        active = [i for i, s in enumerate(self.slots) if s is not None]
+        if not active:
+            return
+        toks_d, fin_d, self.pool.pool = self._kernel(
+            self.params, self._next_np, self.pool.pool, self._finite,
+            self._active, self._seeds, self._temps)
+        toks, fin = jax.device_get((toks_d, fin_d))          # syncs
+        self._finite = np.array(fin)            # device_get is read-only
+        clock.tick()
+        now = clock.now()
+        used = sum(min(self.slots[i].request.prompt_len
+                       + self.slots[i].n_generated, self.pool.slot_tokens)
+                   for i in active)
+        for i in active:
+            s = self.slots[i]
+            tok_i = int(toks[i])
+            s.out.append(tok_i)
+            s.n_generated += 1
+            self._next_np[i, 0, 0] = tok_i
+            if self._stopped(s.request, tok_i, s.n_generated):
+                self._complete(i, now)
+        self.metrics.on_step(len(active), used)
+
+    def _complete(self, slot: int, now: float) -> None:
+        s = self.slots[slot]
+        if self.engine.check_finite and not self._finite[slot]:
+            raise FloatingPointError(
+                f"request {s.request.rid}: non-finite logits during decode "
+                f"(caught at completion; slot {slot})")
+        self.outputs[s.request.rid] = np.asarray(s.out, np.int32)
+        self.metrics.finish(RequestRecord(
+            rid=s.request.rid, arrival_s=s.request.arrival_s,
+            admit_s=s.admit_s, first_token_s=s.first_token_s, finish_s=now,
+            prompt_len=s.request.prompt_len, n_generated=s.n_generated,
+            evictions=s.evictions))
+        self.slots[slot] = None
+        self._next_np[slot, 0, 0] = _PAD_ID
+        self._finite[slot] = True
+        self._active[slot] = False
+
+    def evict(self, slot: int) -> Dict[str, Any]:
+        """Preempt a live request: host snapshot of everything needed to
+        resume it bitwise — cache state, generated tokens, next input
+        token, finiteness flag."""
+        s = self.slots[slot]
+        if s is None:
+            raise ValueError(f"slot {slot} is empty")
+        snap = {
+            "cache": self.pool.extract(slot),
+            "request": s.request,
+            "out": list(s.out),
+            "n_generated": s.n_generated,
+            "next_token": int(self._next_np[slot, 0, 0]),
+            "finite": bool(self._finite[slot]),
+            "admit_s": s.admit_s,
+            "first_token_s": s.first_token_s,
+            "evictions": s.evictions + 1,
+        }
+        self.slots[slot] = None
+        self._next_np[slot, 0, 0] = _PAD_ID
+        self._finite[slot] = True
+        self._active[slot] = False
+        return snap
+
+    def readmit(self, snap: Dict[str, Any]) -> int:
+        """Resume an evicted request in any free slot.  The snapshot is
+        self-contained, so the continuation is bitwise identical to the
+        uninterrupted decode regardless of the new slot id."""
+        free = self.free_slots()
+        if not free:
+            raise RuntimeError("readmit with no free slot")
+        slot = free[0]
+        self.pool.insert(slot, snap["cache"])
+        self.slots[slot] = _Slot(
+            request=snap["request"], out=list(snap["out"]),
+            n_generated=snap["n_generated"], admit_s=snap["admit_s"],
+            first_token_s=snap["first_token_s"],
+            evictions=snap["evictions"])
+        self._next_np[slot, 0, 0] = snap["next_token"]
+        self._finite[slot] = snap["finite"]
+        self._active[slot] = True
+        self._seeds[slot] = snap["request"].seed
+        self._temps[slot] = snap["request"].temperature
+        return slot
+
+    # ------------------------------------------------------------------
+    # Driver
+    # ------------------------------------------------------------------
+
+    def warmup(self, prompt_lens) -> None:
+        """Compile the admit kernel (per distinct prompt length), the
+        decode kernel, and the pool gather/scatter programs before the
+        clock starts; engine state is untouched (warmup results are
+        discarded)."""
+        rng = np.random.default_rng(0)
+        for L in sorted(set(int(x) for x in prompt_lens)):
+            batch = prompt_batch(self.cfg, 1, L, rng)
+            self._admit(self.params, batch, jnp.int32(0), jnp.int32(L),
+                        jnp.float32(0.0))
+        # identity round-trip on slot 0 warms the pool gather/scatter jits
+        # (otherwise the first admit pays their compile on the clock)
+        self.pool.write(0, self.pool.read(0))
+        toks, _, _ = self._kernel(self.params, self._next_np, self.pool.pool,
+                                  self._finite, self._active, self._seeds,
+                                  self._temps)
+        jax.block_until_ready(toks)
+
+    def run(self, requests: List[Request], *, clock=None,
+            warmup: bool = True) -> Tuple[Dict[int, np.ndarray],
+                                          Dict[str, Any]]:
+        """Serve ``requests`` to completion under their arrival times.
+        -> ({rid: generated token ids}, metrics summary dict)."""
+        clock = clock if clock is not None else WallClock()
+        sched = FIFOScheduler(requests)
+        if warmup:
+            self.warmup([r.prompt_len for r in requests])
+        clock.start()
+        while sched.waiting or self.n_active():
+            now = clock.now()
+            while self.free_slots():
+                r = sched.next_ready(now)
+                if r is None:
+                    break
+                self.admit(r, clock)
+                now = clock.now()
+            if not self.n_active():
+                nxt = sched.next_arrival()
+                if nxt is None:
+                    break
+                clock.advance_to(nxt)
+                continue
+            self.decode_step(clock)
+        return dict(self.outputs), self.metrics.summary()
+
+
+# ---------------------------------------------------------------------------
+# Static-batch reference path
+# ---------------------------------------------------------------------------
+
+def run_static(cfg, params, requests: List[Request], *, n_slots: int,
+               cache_len: int, impl: str = "xla", clock=None,
+               check_finite: bool = True, warmup: bool = True
+               ) -> Tuple[Dict[int, np.ndarray], Dict[str, Any]]:
+    """The baseline the engine is measured against: requests are served in
+    arrival order in fixed batches of ``n_slots`` through the BATCHED
+    prefill/serve programs.  A batch only starts once its last member has
+    arrived and the previous batch finished, and decodes until its longest
+    request stops (finished rows ride along, their outputs truncated) —
+    faithful static-batch semantics.
+
+    Per-request sampling is the same ``_SAMPLER`` program at the same
+    (seed, position) inputs as the engine, which is why engine outputs
+    match this path bitwise.  Logit finiteness is accumulated across the
+    WHOLE decode (``FiniteTrace``) — a mid-sequence NaN is reported at the
+    step it appeared."""
+    clock = clock if clock is not None else WallClock()
+    window = cfg.sliding_window
+    slot_tokens = min(cache_len, window) if window else cache_len
+    metrics = ServeMetrics(n_slots, slot_tokens)
+    prefill = jax.jit(make_prefill_step(cfg, cache_len, impl=impl))
+    serve = jax.jit(make_serve_step(cfg, impl=impl))
+    order = sorted(requests, key=lambda r: (r.arrival_s, r.rid))
+    groups = [order[i:i + n_slots] for i in range(0, len(order), n_slots)]
+    for r in order:
+        need = r.prompt_len + r.max_new_tokens
+        if not window and need > cache_len:
+            raise ValueError(f"request {r.rid} exceeds cache_len {cache_len}")
+
+    if warmup:
+        rng = np.random.default_rng(0)
+        for g in groups:
+            G, L = len(g), g[0].prompt_len
+            lgw, _ = prefill(params, prompt_batch(cfg, G, L, rng))
+            jnp.all(jnp.isfinite(lgw))     # warm the FiniteTrace eager ops
+            z = jnp.zeros(G)
+            jax.block_until_ready(
+                _SAMPLER(lgw, z.astype(jnp.int32), z.astype(jnp.int32),
+                         z.astype(jnp.float32)))
+        sizes = sorted(set(len(g) for g in groups))
+        for G in sizes:
+            cache = prefill(params, prompt_batch(
+                cfg, G, groups[0][0].prompt_len, rng))[1]
+            jax.block_until_ready(serve(
+                params, {"tokens": jnp.full((G, 1), _PAD_ID, jnp.int32)},
+                cache)[0])
+
+    outputs: Dict[int, np.ndarray] = {}
+    ftrace = FiniteTrace()
+    clock.start()
+    for g in groups:
+        clock.advance_to(max(r.arrival_s for r in g))   # batch formation
+        t_admit = clock.now()
+        G = len(g)
+        batch = request_batch(cfg, g)
+        seeds = jnp.asarray([r.seed for r in g], jnp.int32)
+        temps = jnp.asarray([r.temperature for r in g], jnp.float32)
+        n_gen = np.zeros(G, np.int32)
+        pos = np.asarray([r.prompt_len for r in g], np.int32)
+        logits, cache = prefill(params, batch)
+        ftrace.update(logits)
+        toks = np.asarray(_SAMPLER(logits, seeds, jnp.asarray(pos), temps))
+        t_first = clock.now()
+        outs = [[int(t)] for t in toks]
+        n_gen += 1
+        done = np.array([DecodeEngine._stopped(r, int(t), 1)
+                         for r, t in zip(g, toks)])
+        recs = [RequestRecord(
+            rid=r.rid, arrival_s=r.arrival_s, admit_s=t_admit,
+            first_token_s=t_first, finish_s=t_first, prompt_len=r.prompt_len,
+            n_generated=1) for r in g]
+        cur = toks.reshape(G, 1).astype(np.int32)
+        while not done.all():
+            logits, cache = serve(params, {"tokens": jnp.asarray(cur)}, cache)
+            ftrace.update(logits)
+            pos_now = np.asarray([r.prompt_len for r in g], np.int32) + n_gen
+            toks = np.asarray(_SAMPLER(logits, seeds, jnp.asarray(pos_now),
+                                       temps))
+            clock.tick()
+            now = clock.now()
+            n_active = int((~done).sum())
+            used = sum(min(g[i].prompt_len + int(n_gen[i]), slot_tokens)
+                       for i in range(G) if not done[i])
+            for i in range(G):
+                if done[i]:
+                    continue
+                tok_i = int(toks[i])
+                outs[i].append(tok_i)
+                n_gen[i] += 1
+                cur[i, 0] = tok_i
+                if DecodeEngine._stopped(g[i], tok_i, int(n_gen[i])):
+                    done[i] = True
+                    recs[i].finish_s = now
+                    recs[i].n_generated = int(n_gen[i])
+            metrics.on_step(n_active, used)
+        for i, r in enumerate(g):
+            outputs[r.rid] = np.asarray(outs[i], np.int32)
+            metrics.finish(recs[i])
+    if check_finite:
+        ftrace.assert_finite("static decode")
+    return outputs, metrics.summary()

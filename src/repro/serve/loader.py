@@ -1,0 +1,83 @@
+"""Serve the model FDAPT just trained: direct parameter loading from
+``repro.checkpoint`` archives.
+
+``FedSession`` round checkpoints store ``{"params": ..., "server": ...}``
+(global params plus the strategy's server state) with a ``FederatedState``
+JSON sidecar.  The loader restores ONLY the params subtree — the server
+state and RNG bit-state are training concerns — against an allocation-free
+template derived from the arch config, and cross-checks the sidecar's plan
+fingerprint (``train.py`` records the arch name there) so a qwen2 server
+never silently deserializes a distilbert checkpoint that happens to share
+leaf names.
+
+Bare params snapshots (``save_checkpoint(dir, step, params)`` with no
+wrapper) load too: ``archive_keys`` sniffs whether the archive uses the
+``params|`` prefix.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+
+from repro.checkpoint import (archive_keys, latest_step, restore_checkpoint,
+                              restore_extra)
+from repro.checkpoint.npz import FederatedState
+from repro.models.model import init_model
+from repro.nn import param as P
+
+
+def params_template(cfg) -> Any:
+    """Unboxed params tree as ShapeDtypeStructs — no allocation."""
+    boxed = jax.eval_shape(lambda k: init_model(k, cfg),
+                           jax.random.PRNGKey(0))
+    return P.unbox(boxed)
+
+
+def checkpoint_arch(ckpt_dir: str, step: Optional[int] = None
+                    ) -> Optional[str]:
+    """Arch name recorded in the checkpoint's plan fingerprint (None when
+    the sidecar is absent or was written without ``fingerprint_extra``)."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+    if step is None:
+        return None
+    meta = restore_extra(ckpt_dir, step)
+    if not meta:
+        return None
+    plan = FederatedState.from_json(meta).plan or {}
+    extra = plan.get("extra") or {}
+    return extra.get("arch")
+
+
+def load_serving_params(ckpt_dir: str, cfg, step: Optional[int] = None,
+                        *, check_arch: bool = True
+                        ) -> Tuple[Any, int, Optional[FederatedState]]:
+    """-> (params, step, FederatedState sidecar or None).
+
+    ``step`` defaults to the newest checkpoint in ``ckpt_dir``.  Params
+    restore BITWISE (the archive stores exact bytes; the template dtype
+    matches the arch config, so the cast is the identity) — the served
+    model IS the aggregated global model round ``step`` produced."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir!r}")
+    if check_arch:
+        arch = checkpoint_arch(ckpt_dir, step)
+        if arch is not None and arch != cfg.name:
+            raise ValueError(
+                f"checkpoint {step} in {ckpt_dir!r} was trained as "
+                f"{arch!r}, not {cfg.name!r} — pass the matching --arch "
+                f"(or check_arch=False to force)")
+    template = params_template(cfg)
+    wrapped = any(k.startswith("params|") for k in archive_keys(ckpt_dir, step))
+    if wrapped:
+        params = restore_checkpoint(ckpt_dir, step,
+                                    {"params": template})["params"]
+    else:
+        params = restore_checkpoint(ckpt_dir, step, template)
+    meta = restore_extra(ckpt_dir, step)
+    fed = FederatedState.from_json(meta) if meta else None
+    return params, step, fed

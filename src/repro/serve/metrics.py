@@ -1,0 +1,155 @@
+"""Serving metrics: per-request latency records, step-level occupancy, the
+``BENCH_serve.json`` payload, and the accumulated finiteness trace.
+
+Every completed request leaves a ``RequestRecord`` (arrival -> admit ->
+first token -> finish); ``ServeMetrics.summary()`` reduces the records plus
+the per-step occupancy samples to the benchmark schema:
+
+    tokens_per_s, generated_tokens, wall_s, n_decode_steps,
+    ttft_s{mean,p50,p99}, latency_s{mean,p50,p99},
+    slot_occupancy, cache_occupancy
+
+``FiniteTrace`` is the accumulated replacement for the old final-step-only
+``assert isfinite(logits)``: it banks one device-side flag per decode step
+(no host sync in the loop) and, at the end, names the FIRST step whose
+logits went non-finite — a mid-sequence NaN is reported where it happened
+instead of being noticed (or masked) 30 steps later.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Any, Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve.requests import tokens_per_s
+
+
+@dataclasses.dataclass
+class RequestRecord:
+    """Lifecycle timestamps (seconds on the run's clock) for one request."""
+
+    rid: int
+    arrival_s: float
+    admit_s: float
+    first_token_s: float
+    finish_s: float
+    prompt_len: int
+    n_generated: int
+    evictions: int = 0
+
+    @property
+    def ttft_s(self) -> float:
+        return self.first_token_s - self.arrival_s
+
+    @property
+    def latency_s(self) -> float:
+        return self.finish_s - self.arrival_s
+
+
+def percentiles(xs: List[float]) -> Dict[str, float]:
+    if not xs:
+        return {"mean": 0.0, "p50": 0.0, "p99": 0.0}
+    a = np.asarray(xs, np.float64)
+    return {"mean": float(a.mean()),
+            "p50": float(np.percentile(a, 50)),
+            "p99": float(np.percentile(a, 99))}
+
+
+class ServeMetrics:
+    """Accumulates request records and per-step occupancy samples."""
+
+    def __init__(self, n_slots: int, slot_tokens: int):
+        self.n_slots = int(n_slots)
+        self.slot_tokens = int(slot_tokens)   # KV/state capacity per slot
+        self.records: List[RequestRecord] = []
+        self._slot_samples: List[float] = []
+        self._cache_samples: List[float] = []
+        self._steps = 0
+
+    def on_step(self, n_active: int, cache_tokens_used: int) -> None:
+        """One decode step over the slot pool: ``n_active`` slots held live
+        requests; ``cache_tokens_used`` cache positions held real tokens."""
+        self._steps += 1
+        self._slot_samples.append(n_active / max(self.n_slots, 1))
+        cap = self.n_slots * max(self.slot_tokens, 1)
+        self._cache_samples.append(cache_tokens_used / cap)
+
+    def finish(self, record: RequestRecord) -> None:
+        self.records.append(record)
+
+    def summary(self) -> Dict[str, Any]:
+        recs = sorted(self.records, key=lambda r: r.rid)
+        total_tokens = sum(r.n_generated for r in recs)
+        if recs:
+            span = (max(r.finish_s for r in recs)
+                    - min(r.arrival_s for r in recs))
+        else:
+            span = 0.0
+        return {
+            "n_requests": len(recs),
+            "generated_tokens": total_tokens,
+            "wall_s": span,
+            "n_decode_steps": self._steps,
+            "tokens_per_s": tokens_per_s(total_tokens, span),
+            "ttft_s": percentiles([r.ttft_s for r in recs]),
+            "latency_s": percentiles([r.latency_s for r in recs]),
+            "slot_occupancy": (float(np.mean(self._slot_samples))
+                               if self._slot_samples else 0.0),
+            "cache_occupancy": (float(np.mean(self._cache_samples))
+                                if self._cache_samples else 0.0),
+        }
+
+
+# The keys scripts/serve_smoke.sh (and the docs) hold the schema to.
+BENCH_MODE_KEYS = ("n_requests", "generated_tokens", "wall_s",
+                   "n_decode_steps", "tokens_per_s", "ttft_s", "latency_s",
+                   "slot_occupancy", "cache_occupancy")
+
+
+def write_bench(path: str, payload: Dict[str, Any]) -> str:
+    """Write a BENCH_*.json perf-trajectory file (sorted keys, trailing
+    newline — two identical runs produce byte-identical files)."""
+    d = os.path.dirname(os.path.abspath(path))
+    os.makedirs(d, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path
+
+
+class FiniteTrace:
+    """Accumulated per-step finiteness check.
+
+    ``update(logits)`` banks one device-side boolean per decode step (the
+    all-finite reduction stays on device; nothing syncs inside the loop).
+    ``first_failure()`` pulls the flags once and returns the index of the
+    first non-finite step, or None.  ``assert_finite()`` raises naming that
+    step — where the NaN happened, not where it was finally looked at."""
+
+    def __init__(self):
+        self._flags = []
+
+    def update(self, logits) -> None:
+        self._flags.append(jnp.all(jnp.isfinite(logits)))
+
+    def __len__(self) -> int:
+        return len(self._flags)
+
+    def first_failure(self) -> Optional[int]:
+        if not self._flags:
+            return None
+        flags = np.asarray(jnp.stack(self._flags))
+        bad = np.flatnonzero(~flags)
+        return int(bad[0]) if bad.size else None
+
+    def assert_finite(self, what: str = "decode") -> None:
+        bad = self.first_failure()
+        if bad is not None:
+            raise FloatingPointError(
+                f"non-finite logits first appeared at {what} step {bad} "
+                f"of {len(self._flags)}")

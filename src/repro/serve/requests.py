@@ -1,0 +1,135 @@
+"""Serving requests + the shared arch-aware prompt/batch construction.
+
+One ``Request`` is a prompt (token ids plus the arch's extra prefill inputs
+for VLM/audio), a stop condition (``max_new_tokens`` and an optional
+``eos_id``), a sampling policy (``temperature``; 0 = greedy, and a
+per-request ``seed`` so sampled continuations are reproducible no matter
+which engine slot the request lands in), and an open-loop ``arrival_s``
+timestamp assigned by the traffic generator.
+
+This module is also the single home of the random prompt/batch construction
+that ``launch/serve.py`` and ``examples/serve_decode.py`` used to duplicate
+(~50 lines each), and of the ONE throughput definition both report:
+
+    generated tokens = n_sequences * n_new_tokens
+
+where ``n_new_tokens`` INCLUDES the token produced from the prefill logits
+(the first sampled token) — the old drivers disagreed (one counted
+``batch*(tokens-1)``, the other reported bare ``steps/s``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    """One decode request.  ``tokens`` is the prompt (prompt_len,) int32;
+    ``extras`` carries per-request prefill-only inputs without a batch dim
+    (VLM ``image_embeds`` (n_image_tokens, d); audio ``frames`` (F, d))."""
+
+    rid: int
+    tokens: np.ndarray
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    temperature: float = 0.0
+    seed: int = 0
+    arrival_s: float = 0.0
+    extras: Optional[Dict[str, np.ndarray]] = None
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.tokens.shape[0])
+
+    def replace(self, **kw) -> "Request":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Arch-aware prompt construction (the deduplicated driver code)
+# ---------------------------------------------------------------------------
+
+def extra_inputs(cfg, batch: int, rng: np.random.Generator,
+                 *, batched: bool = True) -> Dict[str, np.ndarray]:
+    """The non-token prefill inputs each arch family needs (stub frontends,
+    matching the training pipeline's conventions)."""
+    out: Dict[str, np.ndarray] = {}
+    if cfg.arch_type == "vlm":
+        out["image_embeds"] = rng.normal(
+            0, 0.1, (batch, cfg.n_image_tokens, cfg.d_model)).astype(np.float32)
+    if cfg.arch_type == "audio":
+        out["frames"] = rng.normal(
+            0, 0.1, (batch, cfg.n_audio_frames, cfg.d_model)).astype(np.float32)
+    if not batched:
+        out = {k: v[0] for k, v in out.items()}
+    return out
+
+
+def prompt_batch(cfg, batch: int, prompt_len: int,
+                 rng: np.random.Generator) -> Dict[str, jnp.ndarray]:
+    """Random prompt batch for ``make_prefill_step``: tokens (B, S) plus the
+    arch's extra inputs.  Token ids start at 5, clear of special ids."""
+    b = {"tokens": jnp.asarray(
+        rng.integers(5, cfg.vocab_size, (batch, prompt_len)), jnp.int32)}
+    for k, v in extra_inputs(cfg, batch, rng).items():
+        b[k] = jnp.asarray(v)
+    return b
+
+
+def synthetic_requests(cfg, n: int, prompt_len: int,
+                       rng: np.random.Generator, *,
+                       max_new_tokens: int = 16,
+                       min_new_tokens: int = 0,
+                       eos_id: Optional[int] = None,
+                       temperature: float = 0.0,
+                       seed: int = 0) -> List[Request]:
+    """n seeded requests with fixed ``prompt_len`` and per-request
+    ``max_new_tokens`` drawn uniformly from [min_new_tokens or max,
+    max_new_tokens] — heterogeneous decode lengths are what continuous
+    batching exploits (a static batch runs every row to the longest)."""
+    reqs = []
+    for i in range(n):
+        toks = rng.integers(5, cfg.vocab_size, (prompt_len,)).astype(np.int32)
+        lo = min_new_tokens or max_new_tokens
+        mx = int(rng.integers(lo, max_new_tokens + 1))
+        reqs.append(Request(
+            rid=i, tokens=toks, max_new_tokens=mx, eos_id=eos_id,
+            temperature=temperature, seed=seed + i,
+            extras=extra_inputs(cfg, 1, rng, batched=False) or None))
+    return reqs
+
+
+def request_batch(cfg, requests: List[Request]) -> Dict[str, jnp.ndarray]:
+    """Stack equal-length requests into one batched prefill input."""
+    lens = {r.prompt_len for r in requests}
+    if len(lens) != 1:
+        raise ValueError(f"static batch needs equal prompt lengths, got {lens}")
+    b = {"tokens": jnp.asarray(np.stack([r.tokens for r in requests]))}
+    if requests[0].extras:
+        for k in requests[0].extras:
+            b[k] = jnp.asarray(np.stack([r.extras[k] for r in requests]))
+    return b
+
+
+# ---------------------------------------------------------------------------
+# The one throughput definition
+# ---------------------------------------------------------------------------
+
+def generated_tokens(n_sequences: int, n_new_tokens: int) -> int:
+    """Tokens produced for ``n_sequences`` sequences of ``n_new_tokens`` new
+    tokens each — the first of which comes from the PREFILL logits, the
+    remaining ``n_new_tokens - 1`` from decode steps.  Both drivers count
+    with this (no more ``batch*(tokens-1)`` vs ``steps/s`` mismatch)."""
+    return int(n_sequences) * int(n_new_tokens)
+
+
+def tokens_per_s(n_tokens: int, seconds: float) -> float:
+    """Throughput over the interval that produced ``n_tokens`` — for a
+    prefill+decode run the interval covers BOTH phases (the prefill-produced
+    token is in the numerator, so prefill time belongs in the denominator)."""
+    return n_tokens / max(seconds, 1e-9)

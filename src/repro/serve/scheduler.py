@@ -1,0 +1,121 @@
+"""Request queue + open-loop traffic generation + serving clocks.
+
+``PoissonArrivals`` stamps requests with open-loop arrival times (exponential
+inter-arrivals at ``rate_rps``, seeded — the generator never waits for the
+server, which is what "heavy traffic" means: load keeps coming whether or
+not slots are free).  ``FIFOScheduler`` holds the stamped requests and
+releases them in arrival order once their timestamp has passed.
+
+Clocks decouple the engine loop from real time: ``WallClock`` is
+``time.perf_counter`` anchored at ``start()`` (``advance_to`` sleeps, so an
+idle engine honestly waits for the next open-loop arrival), and
+``VirtualClock`` advances only when told (a fixed ``step_s`` per decode
+step) — the deterministic clock the tests and the bitwise parity checks run
+under.
+"""
+
+from __future__ import annotations
+
+import time
+from collections import deque
+from typing import List, Optional
+
+import numpy as np
+
+from repro.serve.requests import Request
+
+
+class PoissonArrivals:
+    """Open-loop Poisson arrival process: ``assign`` stamps each request's
+    ``arrival_s`` with a seeded exponential inter-arrival draw at
+    ``rate_rps`` requests/second (rate 0 = everything arrives at t=0)."""
+
+    def __init__(self, rate_rps: float, seed: int = 0):
+        if rate_rps < 0:
+            raise ValueError(f"rate_rps must be >= 0, got {rate_rps}")
+        self.rate_rps = float(rate_rps)
+        self.seed = int(seed)
+
+    def times(self, n: int) -> np.ndarray:
+        if self.rate_rps == 0:
+            return np.zeros(n)
+        rng = np.random.default_rng(self.seed)
+        return np.cumsum(rng.exponential(1.0 / self.rate_rps, size=n))
+
+    def assign(self, requests: List[Request]) -> List[Request]:
+        ts = self.times(len(requests))
+        return [r.replace(arrival_s=float(t)) for r, t in zip(requests, ts)]
+
+
+class FIFOScheduler:
+    """FIFO over arrived requests.  The engine drains ``next_ready`` into
+    free slots BEFORE each decode step (prefill-prioritized admission: a
+    waiting request never idles behind decode work while a slot is open)."""
+
+    def __init__(self, requests: List[Request]):
+        order = sorted(requests, key=lambda r: (r.arrival_s, r.rid))
+        self._pending = deque(order)     # not yet arrived (time-sorted)
+        self._ready: deque = deque()     # arrived, waiting for a slot
+
+    def poll(self, now: float) -> None:
+        while self._pending and self._pending[0].arrival_s <= now:
+            self._ready.append(self._pending.popleft())
+
+    def next_ready(self, now: float) -> Optional[Request]:
+        self.poll(now)
+        return self._ready.popleft() if self._ready else None
+
+    def next_arrival(self) -> Optional[float]:
+        """Earliest not-yet-arrived timestamp (None when all arrived)."""
+        return self._pending[0].arrival_s if self._pending else None
+
+    @property
+    def waiting(self) -> int:
+        return len(self._pending) + len(self._ready)
+
+    def __len__(self) -> int:
+        return self.waiting
+
+
+class WallClock:
+    """Real time, anchored at ``start()``; ``advance_to`` sleeps until the
+    target (the engine is idle and the next open-loop arrival is ahead)."""
+
+    def __init__(self):
+        self._t0 = time.perf_counter()
+
+    def start(self) -> None:
+        self._t0 = time.perf_counter()
+
+    def now(self) -> float:
+        return time.perf_counter() - self._t0
+
+    def advance_to(self, t: float) -> None:
+        dt = t - self.now()
+        if dt > 0:
+            time.sleep(dt)
+
+    def tick(self) -> None:            # decode steps advance real time alone
+        pass
+
+
+class VirtualClock:
+    """Deterministic clock: ``tick()`` (one decode step) advances ``step_s``,
+    ``advance_to`` jumps.  Engine runs under it are exactly reproducible —
+    the parity tests pin engine-vs-static outputs bitwise under this."""
+
+    def __init__(self, step_s: float = 1.0):
+        self.step_s = float(step_s)
+        self._now = 0.0
+
+    def start(self) -> None:
+        self._now = 0.0
+
+    def now(self) -> float:
+        return self._now
+
+    def advance_to(self, t: float) -> None:
+        self._now = max(self._now, t)
+
+    def tick(self) -> None:
+        self._now += self.step_s

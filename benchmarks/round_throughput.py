@@ -1,0 +1,179 @@
+"""Round engine throughput: cohort-scan vs stacked-vmap.
+
+One sampled federated round over cohort sizes {8, 64, 512} (tiny config,
+one local step per client, lazy 4-shard data pool), timed on the warm
+(already-compiled) round for both parallel-engine modes:
+
+  * stacked-vmap  — ``cohort_shard=None``: the whole cohort's params, opt
+    state and batches live at once (peak memory grows with the cohort);
+    measured only up to cohort 64 — the point of the scan engine is that
+    the stacked mode stops scaling.
+  * cohort-scan   — ``--shard``-wide shards streamed through ONE compiled
+    shard program with an O(params) fold carry; peak live buffers are
+    O(shard) regardless of cohort size.
+
+Both modes produce bitwise-identical params (tests/test_cohort.py pins
+that); this benchmark records the throughput/memory side of the trade:
+clients/s, per-client step FLOPs (compiled-program analysis), aggregate
+wire bytes, and an analytic peak-live-bytes proxy (live clients x
+(params + opt state + batches) + the fold carry).  Results land in
+``BENCH_round.json`` — the second entry in the ``BENCH_<area>.json``
+perf trajectory (after ``BENCH_serve.json``).
+
+    PYTHONPATH=src python benchmarks/round_throughput.py           # full
+    PYTHONPATH=src python benchmarks/round_throughput.py --tiny    # CI smoke
+
+``--tiny`` trims the sweep to cohorts {8, 64} and asserts the scan
+engine's warm-round throughput is no worse than stacked-vmap at
+cohort 64 (the crossover the ISSUE pins).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro import optim
+from repro.configs import get_config
+from repro.core.noniid import make_client_pool
+from repro.core.rounds import FedSession, RoundPlan, _shard_widths
+from repro.core.strategy import tree_bytes
+from repro.data.corpus import generate_corpus
+from repro.models.model import init_model
+from repro.nn import param as P
+from repro.serve import write_bench
+
+COHORTS = (8, 64, 512)
+STACKED_MAX = 64          # stacked-vmap measured only up to this cohort
+
+
+def _batch_bytes(batch) -> int:
+    return sum(np.asarray(v).nbytes for v in jax.tree.leaves(batch))
+
+
+def peak_live_bytes(width: int, params_bytes: int, opt_bytes: int,
+                    batch_block_bytes: int) -> int:
+    """Analytic peak proxy for one shard program invocation: ``width``
+    stacked replicas of (params + opt state + one epoch of batches), plus
+    the global params broadcast source and the fp32 fold carry."""
+    f32_params = params_bytes  # reduced configs train in fp32 already
+    return width * (params_bytes + opt_bytes + batch_block_bytes) \
+        + params_bytes + f32_params
+
+
+def run_round(cfg, params0, pool, *, cohort_shard, rounds, seed):
+    """Time a short FedSession; returns (warm_round_s, last RoundResult)."""
+    plan = RoundPlan(n_rounds=rounds, engine="parallel",
+                     cohort_shard=cohort_shard, seed=seed, telemetry=True)
+    _, hist = FedSession(cfg, optim.adam(1e-3), plan).run(params0, pool)
+    # round 1 pays the compile; the steady-state rounds are the number
+    warm = min(h.round_time_s for h in hist[1:])
+    return warm, hist[-1]
+
+
+def sweep(cfg, *, cohorts, shard, pool_shards, docs, steps, rounds, seed):
+    params0 = P.unbox(init_model(jax.random.PRNGKey(seed), cfg))
+    params_bytes = tree_bytes(params0)
+    opt_bytes = tree_bytes(optim.adam(1e-3).init(params0))
+    corpus = generate_corpus(docs, seed=seed)
+
+    rows = []
+    for cohort in cohorts:
+        pool = make_client_pool(corpus, cfg, n_clients=cohort,
+                                pool=pool_shards, batch=2, seq=32,
+                                seed=seed, limit=steps)
+        batch_block = _batch_bytes(pool.batches_for(0)[0]) * steps
+        row = {"cohort": cohort}
+
+        for mode, cs in (("stacked_vmap", None), ("cohort_scan", shard)):
+            if cs is None and cohort > STACKED_MAX:
+                row[mode] = None      # O(cohort) live buffers: not measured
+                continue
+            warm_s, rr = run_round(cfg, params0, pool, cohort_shard=cs,
+                                   rounds=rounds, seed=seed)
+            width = max(_shard_widths(cohort, cs))
+            row[mode] = {
+                "round_s": round(warm_s, 6),
+                "clients_per_s": round(cohort / warm_s, 2),
+                "step_flops_per_client": rr.client_step_flops[0],
+                "aggregate_upload_bytes": rr.upload_bytes,
+                "aggregate_download_bytes": rr.download_bytes,
+                "peak_live_bytes_proxy": peak_live_bytes(
+                    width, params_bytes, opt_bytes, batch_block),
+            }
+        s, c = row.get("stacked_vmap"), row.get("cohort_scan")
+        if s and c:
+            row["scan_over_stacked_throughput"] = round(
+                c["clients_per_s"] / s["clients_per_s"], 4)
+            row["scan_over_stacked_peak_mem"] = round(
+                c["peak_live_bytes_proxy"] / s["peak_live_bytes_proxy"], 4)
+        rows.append(row)
+        print(f"cohort {cohort:4d}: " + "  ".join(
+            f"{m}={row[m]['clients_per_s']:.1f} cl/s" if row[m] else f"{m}=–"
+            for m in ("stacked_vmap", "cohort_scan")))
+    return rows, params_bytes, opt_bytes
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="distilbert-mlm")
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: cohorts {8, 64} only, asserts "
+                         "cohort-scan >= stacked-vmap clients/s at 64")
+    ap.add_argument("--shard", type=int, default=8,
+                    help="cohort-scan shard width")
+    ap.add_argument("--pool", type=int, default=4,
+                    help="lazy data-pool shards backing the population")
+    ap.add_argument("--docs", type=int, default=60)
+    ap.add_argument("--steps", type=int, default=1,
+                    help="local steps per client per round")
+    ap.add_argument("--rounds", type=int, default=3,
+                    help="rounds per timed session (first pays compile)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "BENCH_round.json"))
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    cohorts = tuple(c for c in COHORTS if c <= 64) if args.tiny else COHORTS
+    rows, params_bytes, opt_bytes = sweep(
+        cfg, cohorts=cohorts, shard=args.shard, pool_shards=args.pool,
+        docs=args.docs, steps=args.steps, rounds=args.rounds, seed=args.seed)
+
+    payload = {
+        "benchmark": "round_throughput",
+        "arch": cfg.name,
+        "engine": "parallel",
+        "cohort_shard": args.shard,
+        "local_steps": args.steps,
+        "params_bytes": params_bytes,
+        "opt_state_bytes": opt_bytes,
+        "rows": rows,
+        "note": "warm-round timings (compile excluded); stacked_vmap null "
+                "above cohort %d — its live buffers grow O(cohort) while "
+                "cohort_scan stays O(shard)" % STACKED_MAX,
+    }
+    if not args.tiny:
+        path = write_bench(args.out, payload)
+        print(f"wrote {path}")
+
+    crossover = [r for r in rows
+                 if r["cohort"] >= 64 and r.get("stacked_vmap")]
+    if args.tiny:
+        assert crossover, "tiny sweep must include the cohort-64 crossover"
+        for r in crossover:
+            ratio = r["scan_over_stacked_throughput"]
+            assert ratio >= 0.9, (
+                f"cohort-scan fell behind stacked-vmap at cohort "
+                f"{r['cohort']}: ratio {ratio}")
+            print(f"tiny OK: cohort {r['cohort']} scan/stacked "
+                  f"throughput ratio {ratio}")
+
+
+if __name__ == "__main__":
+    main()

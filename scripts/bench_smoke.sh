@@ -15,8 +15,14 @@ python benchmarks/ffdapt_efficiency.py --tiny
 echo "== wallclock (tiny, calibrated + overlap checks) =="
 python benchmarks/wallclock.py --tiny --calibrated
 
+echo "== round_throughput (tiny) =="
+scripts/train_env.sh python benchmarks/round_throughput.py --tiny
+
 echo "== resume smoke (checkpoint -> resume bitwise parity) =="
 bash scripts/resume_smoke.sh
+
+echo "== cohort smoke (cohort-scan vs full-width bitwise parity) =="
+bash scripts/cohort_smoke.sh
 
 echo "== serve smoke (federated checkpoint -> continuous batching) =="
 bash scripts/serve_smoke.sh

@@ -13,15 +13,16 @@ ARGS=(--arch distilbert-mlm --clients 2 --rounds 2 --docs 40 --batch-size 2
       --seq-len 32 --max-steps-per-round 2 --strategy fedavgm --ffdapt)
 
 echo "-- uninterrupted run --"
-python -m repro.launch.train "${ARGS[@]}" --ledger-out "$TMP/full.json"
+scripts/train_env.sh python -m repro.launch.train "${ARGS[@]}" \
+    --ledger-out "$TMP/full.json"
 
 echo "-- interrupted after round 1 (checkpoint written) --"
-python -m repro.launch.train "${ARGS[@]}" --ckpt-dir "$TMP/ckpt" \
-    --ckpt-every 1 --stop-after 1
+scripts/train_env.sh python -m repro.launch.train "${ARGS[@]}" \
+    --ckpt-dir "$TMP/ckpt" --ckpt-every 1 --stop-after 1
 
 echo "-- resumed from the checkpoint --"
-python -m repro.launch.train "${ARGS[@]}" --ckpt-dir "$TMP/ckpt" --resume \
-    --ledger-out "$TMP/resumed.json"
+scripts/train_env.sh python -m repro.launch.train "${ARGS[@]}" \
+    --ckpt-dir "$TMP/ckpt" --resume --ledger-out "$TMP/resumed.json"
 
 diff "$TMP/full.json" "$TMP/resumed.json"
 echo "resume smoke OK: ledger + final params bitwise identical"

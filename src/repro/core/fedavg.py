@@ -1,11 +1,22 @@
 """FedAvg aggregation (McMahan et al., 2017): W = sum_k (n_k / n) W_k.
 
-Two layouts:
+Three layouts:
   * ``fedavg``          — list of K param trees (the sequential engine).
-  * ``fedavg_stacked``  — ONE tree with a leading client dim (the mesh
-    engine / production program).  On the production mesh the client dim is
-    sharded over the ``pod`` axis, so the weighted mean lowers to exactly one
-    cross-pod all-reduce — FedAvg's communication pattern on DCN.
+  * ``fedavg_stacked``  — ONE tree with a leading client dim, reduced with
+    ``jnp.sum`` over axis 0 (the production mesh program).  With the client
+    dim sharded over the ``pod`` axis the weighted mean lowers to exactly
+    one cross-pod all-reduce — FedAvg's communication pattern on DCN.
+  * ``fedavg_fold``     — the STREAMING reduction: a client-index left fold
+    ``acc <- acc + w_k * W_k`` carried in fp32.  This is the cohort-scan
+    engine's canonical reduction order: a left fold is invariant to where
+    shard boundaries fall (folding shards [0:S), [S:2S), ... through a
+    carried accumulator performs literally the same add sequence as one
+    fold over all K), which is what makes cohort-scan results bitwise
+    identical to the full-width vmapped round at any shard size.  Note
+    ``jnp.sum`` does NOT reduce in this order (XLA vectorizes it), so the
+    fold and the sum differ in the last ulp — the parallel round engine
+    uses the fold everywhere; the mesh program keeps the sum (one
+    all-reduce beats a serialized fold on a sharded client axis).
 """
 
 from __future__ import annotations
@@ -41,6 +52,41 @@ def fedavg_stacked(stacked: Any, sizes: Sequence[float]) -> Any:
                        ).astype(l.dtype)
 
     return jax.tree.map(combine, stacked)
+
+
+def fold_init(tree: Any) -> Any:
+    """Zero fp32 accumulator shaped like one (unstacked) param tree — the
+    carry a streaming aggregation threads across cohort shards."""
+    return jax.tree.map(lambda l: jnp.zeros(l.shape, jnp.float32), tree)
+
+
+def fedavg_fold(partial: Any, stacked: Any, norm_weights: jax.Array) -> Any:
+    """Continue the canonical left fold: ``partial[i+1] = partial[i] +
+    w_k * W_k`` over this shard's client axis.  ``norm_weights`` must
+    already be normalized over the FULL cohort (w_k = n_k / n) — the fold
+    itself never sees the cohort size, so any shard partition of the same
+    client sequence produces the same bits."""
+    def body(acc, xw):
+        x, wk = xw
+        return (jax.tree.map(lambda a, l: a + wk * l.astype(jnp.float32),
+                             acc, x), None)
+
+    acc, _ = jax.lax.scan(body, partial, (stacked, norm_weights))
+    return acc
+
+
+def fold_finalize(partial: Any, like: Any) -> Any:
+    """Cast a finished fp32 fold accumulator back to the param dtypes
+    (the same final cast ``fedavg_stacked`` performs)."""
+    return jax.tree.map(lambda a, l: a.astype(l.dtype), partial, like)
+
+
+def scalar_fold(acc: jax.Array, vals: jax.Array) -> jax.Array:
+    """Left fold of a 1-D vector into a scalar carry (loss/token totals of
+    the streaming round engine — same shard-invariance argument as
+    ``fedavg_fold``)."""
+    out, _ = jax.lax.scan(lambda a, v: (a + v, None), acc, vals)
+    return out
 
 
 def broadcast_clients(tree: Any, k: int) -> Any:

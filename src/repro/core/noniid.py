@@ -16,7 +16,8 @@ from typing import Dict, List, Sequence
 
 from repro.data.batching import shard_batches
 from repro.data.corpus import Document
-from repro.data.partition import SKEWS, client_stats_table, partition
+from repro.data.partition import (SKEWS, ClientPool, client_stats_table,
+                                  partition)
 
 
 def make_client_datasets(docs: Sequence[Document], cfg, *, k: int,
@@ -40,3 +41,25 @@ def make_client_datasets(docs: Sequence[Document], cfg, *, k: int,
     return {"batches": batches, "sizes": sizes,
             "steps": [len(b) for b in batches],
             "stats": client_stats_table(shards)}
+
+
+def make_client_pool(docs: Sequence[Document], cfg, *, n_clients: int,
+                     pool: int, skew: str = "iid", batch: int = 8,
+                     seq: int = 128, seed: int = 0,
+                     limit: int = 0) -> ClientPool:
+    """Mega-cohort population: ``n_clients`` VIRTUAL clients served by a
+    ``pool``-way partition of the corpus (virtual client k trains pool
+    shard k % pool — same skew statistics, cycled).  Pool shards tokenize
+    lazily on first access, so a sampled round builds at most ``pool``
+    datasets no matter how large ``n_clients`` is; feed the result straight
+    to ``FedSession.run`` in place of the materialized batch lists.
+    ``limit`` > 0 caps each client's local steps per epoch (the
+    ``--max-steps-per-round`` knob)."""
+    if skew not in SKEWS:
+        raise ValueError(f"skew must be one of {SKEWS}")
+    shards = partition(docs, pool, skew, seed=seed)
+    builders = [(lambda s=s, i=i: shard_batches(s, cfg, batch, seq,
+                                                seed=seed + i))
+                for i, s in enumerate(shards)]
+    return ClientPool(n_clients, builders, [len(s) for s in shards],
+                      limit=limit)

@@ -8,12 +8,30 @@ the session's strategy, repeat.  Two execution engines with identical math:
     clients as processes; we run them as successive jit calls).  Supports
     FFDAPT *static* windows: each (window pattern) compiles once, frozen
     layers truly skip backward dW.
-  * ``engine="parallel"``  — all participating clients execute as ONE
-    program, client dim vmapped/mesh-sharded (clients <-> pod/data axes at
-    production scale); aggregation happens inside the jitted program via the
-    strategy's ``aggregate_stacked`` (FedAvg lowers to one weighted
-    all-reduce over the client dim).  FFDAPT runs in *masked* mode here
-    (traced per-client masks — a single program for all rounds).
+  * ``engine="parallel"``  — the cohort-scan engine.  Participants are
+    processed in fixed-size SHARDS of the stacked client axis: one jitted
+    per-shard program (clients vmapped inside; the client axis mesh-shards
+    via ``sharding/rules.py COHORT_RULES`` at production scale) runs each
+    shard's local epochs and folds the shard into the strategy's streaming
+    aggregation carry (``aggregate_partial``); a second tiny program
+    combines the carry into the new global model (``aggregate_combine``).
+    Peak live client state is O(shard), not O(cohort), and the compile
+    count is independent of cohort size (one shard program, reused —
+    plus one remainder-width program when shard does not divide the
+    cohort).  ``RoundPlan.cohort_shard=None`` runs a single full-cohort
+    shard — the classic all-clients-one-program vmapped round.  Because
+    the aggregation is the canonical client-index left fold
+    (``repro.core.fedavg.fedavg_fold``), every ``cohort_shard`` setting
+    produces BITWISE the same round (pinned in tests/test_cohort.py).
+    FFDAPT runs in *masked* mode here (traced per-client masks — a single
+    program for all rounds).
+
+``run`` accepts client data either as the materialized
+``client_batches[k]`` lists or as a lazy provider (``data.partition.
+ClientPool`` — anything with ``batches_for(k)`` / ``sizes`` /
+``max_steps`` / ``__len__``): with a provider, only the sampled cohort's
+shards are ever materialized, so million-client populations never build
+1M datasets.
 
 The round "what" lives in ``RoundPlan`` (strategy, FFDAPT schedule, client
 participation, engine); the engines only supply the "how".  Every round
@@ -55,7 +73,7 @@ import numpy as np
 
 from repro.core import ffdapt as ffd
 from repro.core.accounting import split_bytes
-from repro.core.fedavg import broadcast_clients, fedavg_stacked
+from repro.core.fedavg import broadcast_clients, fedavg_stacked, scalar_fold
 from repro.core.strategy import FedAvg, FederatedStrategy
 from repro.models.steps import make_masked_train_step
 from repro.nn import param as P
@@ -118,6 +136,16 @@ class RoundPlan:
     n_rounds: int = 15
     engine: str = "sequential"            # sequential | parallel
     impl: str = "xla"
+    # cohort-scan shard size for the parallel engine: at most this many
+    # clients are live at once (params/opt-state/batches stacked per shard;
+    # the streaming aggregation carry is O(params)).  None = one full-cohort
+    # shard (the classic vmapped round).  Any value produces bitwise the
+    # same result — the fold reduction is shard-invariant and the schedule
+    # never emits a width-1 shard (``_shard_widths``: clamps to >= 2,
+    # absorbs a lone remainder) — so this is a pure memory/compile knob,
+    # deliberately NOT part of the checkpoint fingerprint (a run may be
+    # resumed under a different shard size).
+    cohort_shard: Optional[int] = None
     strategy: FederatedStrategy = dataclasses.field(default_factory=FedAvg)
     ffdapt: Optional[ffd.FFDAPTConfig] = None
     participation: float = 1.0            # fraction of clients per round
@@ -171,10 +199,91 @@ def _epoch(step, params, opt_state, batches: Sequence[Dict[str, Any]],
 
 
 def _participants(rng, k: int, participation: float) -> List[int]:
+    """Sample the round's cohort: m of k clients, without replacement, in
+    O(m) memory via Floyd's algorithm — ``rng.choice(k, replace=False)``
+    materializes a k-length permutation, which at million-client
+    populations dominates the round's host memory.  The draw consumes the
+    generator deterministically (one vectorized ``integers`` call), so the
+    PR 5 resume contract holds: restoring the checkpointed RNG bit-state
+    reproduces the exact cohort sequence."""
     if participation >= 1.0:
         return list(range(k))
     m = max(1, int(round(participation * k)))
-    return sorted(rng.choice(k, size=m, replace=False).tolist())
+    if m >= k:
+        return list(range(k))
+    # Floyd: for j = k-m .. k-1, draw t in [0, j]; take t unless already
+    # chosen, else take j.  Each j is chosen with probability m/k, uniform
+    # over all m-subsets.  The m draws vectorize into one generator call.
+    ts = rng.integers(0, np.arange(k - m + 1, k + 1))
+    chosen: set = set()
+    for j, t in zip(range(k - m, k), ts.tolist()):
+        chosen.add(t if t not in chosen else j)
+    return sorted(chosen)
+
+
+class _ListClientData:
+    """Adapter giving materialized ``client_batches`` lists the lazy
+    provider interface the engines consume (``ClientPool`` is the
+    million-client implementation; see ``repro.data.partition``)."""
+
+    def __init__(self, client_batches: List[List[Dict[str, Any]]]):
+        self._batches = client_batches
+
+    def __len__(self) -> int:
+        return len(self._batches)
+
+    @property
+    def sizes(self) -> List[int]:
+        return [len(bs) for bs in self._batches]
+
+    @property
+    def max_steps(self) -> int:
+        return max(len(bs) for bs in self._batches)
+
+    def batches_for(self, k: int) -> List[Dict[str, Any]]:
+        return self._batches[k]
+
+
+def _as_client_data(client_batches) -> Any:
+    if hasattr(client_batches, "batches_for"):
+        return client_batches
+    return _ListClientData(client_batches)
+
+
+def _shard_widths(m: int, shard: Optional[int]) -> List[int]:
+    """Cohort-scan shard schedule: widths summing to ``m``, each ``shard``
+    except the tail.  Two rules keep every schedule BITWISE equal to the
+    full-width program: no shard is ever width 1 (XLA lowers a degenerate
+    single-client vmap differently — its lanes come out a ulp off the
+    width>=2 programs, which are all per-lane identical), so the requested
+    width clamps to >= 2 and a remainder of 1 is absorbed into the last
+    shard (width ``shard + 1``) instead of trailing alone.  At most two
+    distinct widths -> at most two shard-program compiles per session."""
+    if shard is None or shard >= m:
+        return [m]
+    shard = max(2, shard)
+    if shard >= m:
+        return [m]
+    widths = [shard] * (m // shard)
+    r = m % shard
+    if r == 1:
+        widths[-1] += 1
+    elif r:
+        widths.append(r)
+    return widths
+
+
+def _stack_shard(data, ids: Sequence[int], max_steps: int):
+    """Materialize ONE shard's rectangular batch block: (shard, steps,
+    B, ...) per leaf.  Short clients pad by CYCLING their local batches
+    (same rule the full-width engine always used), and only this shard's
+    clients are ever resident."""
+    per_client = []
+    for k in ids:
+        bs = data.batches_for(k)
+        padded = [bs[i % len(bs)] for i in range(max_steps)]
+        per_client.append(jax.tree.map(lambda *xs: jnp.stack(xs), *padded))
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *per_client)
 
 
 class FedSession:
@@ -194,14 +303,17 @@ class FedSession:
         self.optimizer = optimizer
         self.plan = plan
 
-    def run(self, params, client_batches: List[List[Dict[str, Any]]],
-            *, resume: bool = False):
+    def run(self, params, client_batches, *, resume: bool = False):
         """Returns (final_params, [RoundResult...]).
 
-        client_batches[k] = that client's local batches for one epoch
+        ``client_batches`` is either the materialized lists —
+        ``client_batches[k]`` = that client's local batches for one epoch
         (re-used each round — the paper re-iterates the local dataset every
-        round).  ``plan.client_sizes`` defaults to per-client batch counts
-        (n_k of Algorithm 1).
+        round) — or a lazy provider (``repro.data.partition.ClientPool``)
+        exposing ``batches_for(k)`` / ``sizes`` / ``max_steps`` /
+        ``__len__``, under which only sampled cohorts materialize.
+        ``plan.client_sizes`` defaults to per-client batch counts (n_k of
+        Algorithm 1).
 
         ``resume=True`` restores the latest checkpoint in
         ``plan.checkpoint_dir`` (params, server state, RNG position, FFDAPT
@@ -210,8 +322,9 @@ class FedSession:
         identical to the uninterrupted one.
         """
         plan = self.plan
+        data = _as_client_data(client_batches)
         sizes = (list(plan.client_sizes) if plan.client_sizes is not None
-                 else [len(bs) for bs in client_batches])
+                 else list(data.sizes))
         # the client population is part of the checkpoint fingerprint:
         # resuming over different clients/weights must raise, not diverge
         self._run_sizes = sizes
@@ -241,11 +354,11 @@ class FedSession:
         if start >= plan.n_rounds:
             return params, history or []
         if plan.engine == "sequential":
-            return self._run_sequential(params, client_batches, sizes,
+            return self._run_sequential(params, data, sizes,
                                         windows, n_units, start=start,
                                         state=state, rng=rng, history=history)
         if plan.engine == "parallel":
-            return self._run_parallel(params, client_batches, sizes,
+            return self._run_parallel(params, data, sizes,
                                       windows, n_units, start=start,
                                       state=state, rng=rng, history=history)
         raise ValueError(plan.engine)
@@ -266,12 +379,26 @@ class FedSession:
         plan = self.plan
         strat = {"name": plan.strategy.name,
                  **dataclasses.asdict(plan.strategy)}
+        sizes = [int(s) for s in getattr(self, "_run_sizes", [])]
+        if len(sizes) > 4096:
+            # mega-cohort populations: fingerprint the size vector by
+            # digest, not value — a million-entry list would dominate every
+            # checkpoint sidecar.  Deterministic, so fresh and restored
+            # fingerprints still compare equal.
+            import hashlib
+            sizes = {"n": len(sizes),
+                     "sha256": hashlib.sha256(
+                         np.asarray(sizes, np.int64).tobytes()).hexdigest()}
         fp = {"strategy": strat, "engine": plan.engine, "impl": plan.impl,
               "seed": plan.seed, "participation": plan.participation,
               "ffdapt": (dataclasses.asdict(plan.ffdapt)
                          if plan.ffdapt else None),
-              "client_sizes": [int(s) for s in
-                               getattr(self, "_run_sizes", [])],
+              "client_sizes": sizes,
+              # recorded for information, like n_rounds — NOT resume-
+              # enforced: the fold aggregation is shard-invariant, so a
+              # run may legitimately resume under a different cohort_shard
+              # (pinned bitwise in tests/test_cohort.py)
+              "cohort_shard": plan.cohort_shard,
               # telemetry/simulate/overlap don't move the params, but they
               # decide the history's ledger columns — a resumed run must
               # fill them the same way or the prefix and suffix disagree
@@ -406,13 +533,13 @@ class FedSession:
         from repro.sim.clock import resolve_fleet
         return resolve_fleet(self.plan.simulate, n_clients, self.plan.seed)
 
-    def _run_sequential(self, params, client_batches, sizes, windows,
+    def _run_sequential(self, params, data, sizes, windows,
                         n_units, *, start=0, state=None, rng=None,
                         history=None):
         plan, optimizer, strategy = self.plan, self.optimizer, self.plan.strategy
         rng = np.random.default_rng(plan.seed) if rng is None else rng
         state = strategy.init_state(params) if state is None else state
-        fleet = self._fleet(len(client_batches))
+        fleet = self._fleet(len(data))
         history = [] if history is None else history
         for t in range(start, plan.n_rounds):
             # loop-ENTRY guard: a resumed run whose restored rounds already
@@ -422,7 +549,7 @@ class FedSession:
                     and t >= plan.stop_after_round):
                 break
             t0 = time.perf_counter()
-            part = _participants(rng, len(client_batches), plan.participation)
+            part = _participants(rng, len(data), plan.participation)
             down = strategy.download_bytes(params, len(part))
             locals_, losses, tokens = [], [], 0.0
             flops_e = hbm_e = coll_e = 0.0
@@ -431,10 +558,11 @@ class FedSession:
                 frozen = None
                 if windows is not None:
                     frozen = ffd.window_mask(n_units, windows[t][k])
-                steps_k = len(client_batches[k])
+                bs_k = data.batches_for(k)
+                steps_k = len(bs_k)
                 c_steps.append(steps_k)
                 if plan.telemetry:
-                    cost = self._step_cost(client_batches[k][0], frozen=frozen)
+                    cost = self._step_cost(bs_k[0], frozen=frozen)
                     c_flops.append(cost.flops)
                     c_hbm.append(cost.hbm_bytes)
                     flops_e += cost.flops * steps_k
@@ -443,8 +571,7 @@ class FedSession:
                 opt_state = P.unbox(optimizer.init(params))
                 anchor = params if strategy.needs_anchor else None
                 p_k, _, loss, tok = _epoch(self._step_for(frozen), params,
-                                           opt_state, client_batches[k],
-                                           anchor)
+                                           opt_state, bs_k, anchor)
                 locals_.append(p_k)
                 losses.append(loss)
                 tokens += tok
@@ -478,35 +605,43 @@ class FedSession:
         return params, history
 
     # -----------------------------------------------------------------
-    # Parallel (mesh / vmap engine; masked FFDAPT)
+    # Parallel (cohort-scan engine; masked FFDAPT)
     # -----------------------------------------------------------------
 
-    def _run_parallel(self, params, client_batches, sizes, windows, n_units,
+    def _run_parallel(self, params, data, sizes, windows, n_units,
                       *, start=0, state=None, rng=None, history=None):
         plan, optimizer, strategy = self.plan, self.optimizer, self.plan.strategy
-        K = len(client_batches)
-        max_steps = max(len(b) for b in client_batches)
-        # rectangular schedule for the stacked engine: pad short clients by
-        # CYCLING their local batches (quantity skew -> unequal local steps);
-        # the n_k aggregation weights stay the true sizes.  NOTE: cycling
-        # means a short client re-iterates its data within the round (>1
-        # local epoch), so sequential/parallel only match exactly when all
+        K = len(data)
+        # rectangular schedule: pad short clients by CYCLING their local
+        # batches (quantity skew -> unequal local steps); the n_k
+        # aggregation weights stay the true sizes.  NOTE: cycling means a
+        # short client re-iterates its data within the round (>1 local
+        # epoch), so sequential/parallel only match exactly when all
         # clients have equal step counts; RoundResult.tokens counts the
         # repeats (they were trained on).
-        padded = [[bs[i % len(bs)] for i in range(max_steps)]
-                  for bs in client_batches]
-        per_client = [jax.tree.map(lambda *xs: jnp.stack(xs), *bs)
-                      for bs in padded]
-        batches = jax.tree.map(lambda *xs: jnp.stack(xs), *per_client)
-        # leaves: (K, steps, B, ...)
+        max_steps = data.max_steps
 
         use_mask = windows is not None
         client_step = strategy.make_client_step(
             self.cfg, optimizer, masked=use_mask, impl=plan.impl)
         needs_anchor = strategy.needs_anchor
 
-        @jax.jit
-        def fed_round(global_params, state, bsub, fmasks, w):
+        # traced (= compiled) shard-program count this session: the
+        # compile-count invariant tests/test_cohort.py pins — one program
+        # per distinct shard WIDTH (so 1, or 2 when the shard size does
+        # not divide the cohort), never one per shard or per round.
+        self.shard_compiles = 0
+
+        def _fed_shard(global_params, partial, loss_acc, tok_acc, bsub,
+                       fmasks, w_agg, w_loss):
+            """One cohort shard: vmapped local epochs + streaming fold.
+
+            ``partial``/``loss_acc``/``tok_acc`` are the round's carries;
+            ``w_agg`` is this shard's slice of the cohort-normalized
+            aggregation weights, ``w_loss`` the raw-normalized loss
+            weights.  Traced once per shard width (jit caches on shapes).
+            """
+            self.shard_compiles += 1          # trace-time, not per call
             ksub = fmasks.shape[0]
             stacked = broadcast_clients(global_params, ksub)
             opts = jax.vmap(lambda p: P.unbox(optimizer.init(p)))(stacked)
@@ -528,17 +663,39 @@ class FedSession:
 
             p_k, losses, toks = jax.vmap(client_epoch)(stacked, opts, bsub,
                                                        fmasks)
-            new_global, new_state = strategy.aggregate_stacked(
-                global_params, p_k, w, state)
-            wn = w / jnp.sum(w)
-            return new_global, new_state, jnp.sum(losses * wn), jnp.sum(toks)
+            partial = strategy.aggregate_partial(global_params, p_k, w_agg,
+                                                 partial)
+            return (partial, scalar_fold(loss_acc, losses * w_loss),
+                    scalar_fold(tok_acc, toks))
+
+        fed_shard = jax.jit(_fed_shard)
+
+        @jax.jit
+        def norm_weights(w):
+            """Both weight normalizations, over the FULL cohort vector
+            before any sharding — every shard folds with weights the whole
+            cohort normalized, exactly like the full-width program."""
+            we = strategy.effective_weights(w)
+            return we / jnp.sum(we), w / jnp.sum(w)
+
+        combine_cache: Dict[int, Callable] = {}
+
+        def _combine_for(m: int):
+            # aggregate_combine takes the cohort size statically (AsyncFedAvg
+            # resolves its fresh path on it); participation keeps m constant
+            # across rounds, so this compiles once per session
+            if m not in combine_cache:
+                combine_cache[m] = jax.jit(
+                    lambda gp, pa, st: strategy.aggregate_combine(
+                        gp, pa, st, k=m))
+            return combine_cache[m]
 
         rng = np.random.default_rng(plan.seed) if rng is None else rng
         w_all = jnp.asarray(sizes, jnp.float32)
         state = strategy.init_state(params) if state is None else state
         # one program family for the whole session: a single cached analysis
         # covers every round (masked FFDAPT has no per-window programs)
-        step_cost = (self._step_cost(client_batches[0][0], masked=use_mask)
+        step_cost = (self._step_cost(data.batches_for(0)[0], masked=use_mask)
                      if plan.telemetry else None)
         fleet = self._fleet(K)
         history = [] if history is None else history
@@ -551,20 +708,28 @@ class FedSession:
                 break
             t0 = time.perf_counter()
             part = _participants(rng, K, plan.participation)
-            if windows is not None:
-                fmasks = jnp.stack([
-                    jnp.asarray(ffd.window_mask(n_units, windows[t][k]),
-                                jnp.float32) for k in part])
-            else:
-                fmasks = jnp.zeros((len(part), n_units), jnp.float32)
-            if len(part) == K:
-                bsub, w = batches, w_all
-            else:
-                idx = jnp.asarray(part, jnp.int32)
-                bsub = jax.tree.map(lambda x: x[idx], batches)
-                w = w_all[idx]
-            params, state, loss, toks = fed_round(params, state, bsub,
-                                                  fmasks, w)
+            m = len(part)
+            w = w_all if m == K else w_all[jnp.asarray(part, jnp.int32)]
+            w_agg, w_loss = norm_weights(w)
+            partial = strategy.aggregate_init(params)
+            loss_acc = jnp.zeros((), jnp.float32)
+            tok_acc = jnp.zeros((), jnp.float32)
+            off = 0
+            for width in _shard_widths(m, plan.cohort_shard):
+                ids = part[off:off + width]
+                bsub = _stack_shard(data, ids, max_steps)
+                if windows is not None:
+                    fmasks = jnp.stack([
+                        jnp.asarray(ffd.window_mask(n_units, windows[t][k]),
+                                    jnp.float32) for k in ids])
+                else:
+                    fmasks = jnp.zeros((len(ids), n_units), jnp.float32)
+                partial, loss_acc, tok_acc = fed_shard(
+                    params, partial, loss_acc, tok_acc, bsub, fmasks,
+                    w_agg[off:off + width], w_loss[off:off + width])
+                off += width
+            params, state = _combine_for(m)(params, partial, state)
+            loss, toks = loss_acc, tok_acc
             jax.block_until_ready(loss)   # async dispatch would under-time
             dt = time.perf_counter() - t0
             toks = float(toks)

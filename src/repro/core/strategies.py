@@ -24,7 +24,7 @@ from typing import Any, Callable, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.fedavg import fedavg, fedavg_stacked
+from repro.core.fedavg import fedavg
 from repro.core.strategy import FederatedStrategy, tree_bytes
 
 
@@ -129,15 +129,23 @@ class AsyncFedAvg(FederatedStrategy):
         return (self._server_step(global_params, fedavg(client_params, w)),
                 state, nbytes)
 
-    def aggregate_stacked(self, global_params, stacked, weights, state):
-        """Stacked-layout aggregation traced inside the jitted mesh program
-        (leaves carry a leading client dim; ``weights`` are the n_k)."""
+    def effective_weights(self, weights):
+        """n_k -> n_k * s(tau_k) over the full cohort weight vector.  With
+        no staleness configured the weights pass through UNTOUCHED (not
+        multiplied by 1.0), keeping the fresh path the exact FedAvg
+        program — the bitwise-parity contract above."""
         k = int(weights.shape[0])
+        taus = self._taus(k)
+        if all(t == 0 for t in taus):
+            return weights
+        d = jnp.asarray([self.discount(t) for t in taus], jnp.float32)
+        return weights * d
+
+    def server_update(self, global_params, mean, state, *, k):
+        """Move ``server_lr`` of the way from the global model to the
+        discounted mean (identity on the fresh path — bitwise FedAvg)."""
         if self._fresh(k):
-            return fedavg_stacked(stacked, weights), state
-        d = jnp.asarray([self.discount(t) for t in self._taus(k)],
-                        jnp.float32)
-        mean = fedavg_stacked(stacked, weights * d)
+            return mean, state
         return self._server_step(global_params, mean), state
 
 

@@ -6,8 +6,15 @@ A strategy owns the three places federated algorithms differ:
   * the **client objective** — ``make_client_step`` builds the local train
     step (FedProx plugs its proximal term in here);
   * the **server aggregation** — ``aggregate`` (list-of-trees layout, the
-    sequential engine) and ``aggregate_stacked`` (one tree with a leading
-    client dim, traced inside the jitted mesh program);
+    sequential engine) and the streaming contract ``aggregate_init`` /
+    ``aggregate_partial`` / ``aggregate_combine`` (the cohort-scan engine
+    folds one client shard at a time through a carried fp32 accumulator;
+    ``aggregate_stacked`` is the same contract over a single full-cohort
+    shard).  Strategies customize via ``effective_weights`` (AsyncFedAvg
+    staleness discounts), ``map_clients`` (Compressed delta round-trip),
+    and ``server_update`` (FedAvgM momentum) — the reduction order itself
+    is fixed (a client-index left fold), which is what keeps results
+    bitwise independent of the shard size;
   * the **upload accounting** — ``aggregate`` returns exact client->server
     bytes; ``upload_bytes`` is the static (shape-derived) figure the jitted
     path reports.
@@ -31,7 +38,8 @@ from typing import Any, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.fedavg import fedavg, fedavg_stacked
+from repro.core.fedavg import (fedavg, fedavg_fold, fedavg_stacked,
+                               fold_finalize, fold_init)
 from repro.models.steps import make_masked_train_step, make_train_step
 
 
@@ -171,9 +179,72 @@ class FederatedStrategy:
     def aggregate_stacked(self, global_params: Any, stacked: Any,
                           weights: jax.Array, state: Any) -> Tuple[Any, Any]:
         """Stacked layout: every leaf of ``stacked`` is (K, ...).  Pure jax —
-        runs inside the jitted mesh round (byte accounting is static; see
-        ``upload_bytes``)."""
-        return fedavg_stacked(stacked, weights), state
+        traced inside the jitted round program (byte accounting is static;
+        see ``upload_bytes``).
+
+        Derived from the STREAMING contract below, so the full-width vmapped
+        round and the cohort-scan engine share one reduction order: it is
+        exactly ``aggregate_partial`` over a single shard holding the whole
+        cohort, followed by ``aggregate_combine``."""
+        k = int(weights.shape[0])
+        wn = self.effective_weights(weights)
+        wn = wn / jnp.sum(wn)
+        partial = self.aggregate_partial(global_params, stacked, wn,
+                                         self.aggregate_init(global_params))
+        return self.aggregate_combine(global_params, partial, state, k=k)
+
+    # -- streaming aggregation (the cohort-scan contract) --------------
+    #
+    # The cohort-scan engine never holds the whole cohort: it folds one
+    # fixed-size shard at a time through a carried fp32 ``partial`` and
+    # combines once at the end of the round.  Peak live client state is
+    # O(shard), not O(cohort).  The reduction is the canonical client-index
+    # left fold (``repro.core.fedavg.fedavg_fold``) — shard boundaries
+    # cannot change the add sequence, so any shard size produces bitwise
+    # the same round as the full-width vmapped program.
+    #
+    # Strategies customize three orthogonal hooks instead of rewriting the
+    # reduction: ``effective_weights`` (AsyncFedAvg's staleness discounts),
+    # ``map_clients`` (Compressed's per-client delta round-trip), and
+    # ``server_update`` (FedAvgM's momentum, AsyncFedAvg's server step).
+
+    def effective_weights(self, weights: jax.Array) -> jax.Array:
+        """Cohort weight vector -> aggregation weights, BEFORE the global
+        normalization.  Called once per round on the full cohort's (K,)
+        weights — never per shard, so the normalizer sees every client."""
+        return weights
+
+    def map_clients(self, global_params: Any, stacked: Any) -> Any:
+        """Per-client transform applied to a shard's stacked params before
+        they enter the fold (vmapped-style, O(shard) live).  ``Compressed``
+        round-trips each client's delta here."""
+        return stacked
+
+    def server_update(self, global_params: Any, mean: Any, state: Any,
+                      *, k: int) -> Tuple[Any, Any]:
+        """Turn the finished weighted mean into the new global params.
+        ``k`` is the cohort size (static).  FedAvg: the mean IS the new
+        model."""
+        return mean, state
+
+    def aggregate_init(self, global_params: Any) -> Any:
+        """Fresh fold carry for one round (fp32 zeros, unstacked shapes)."""
+        return fold_init(global_params)
+
+    def aggregate_partial(self, global_params: Any, stacked: Any,
+                          norm_weights: jax.Array, partial: Any) -> Any:
+        """Fold ONE shard into the carry.  ``stacked`` leaves are
+        (shard, ...); ``norm_weights`` is this shard's slice of the
+        cohort-normalized weights."""
+        return fedavg_fold(partial, self.map_clients(global_params, stacked),
+                           norm_weights)
+
+    def aggregate_combine(self, global_params: Any, partial: Any, state: Any,
+                          *, k: int) -> Tuple[Any, Any]:
+        """Finish the round: cast the fp32 carry back to param dtypes and
+        apply the strategy's server update."""
+        mean = fold_finalize(partial, global_params)
+        return self.server_update(global_params, mean, state, k=k)
 
     # -- accounting ----------------------------------------------------
     def upload_bytes(self, global_params: Any, k: int) -> int:
@@ -219,9 +290,8 @@ class FedAvgM(FederatedStrategy):
         new, m = self._apply(global_params, fedavg(client_params, sizes), state)
         return new, m, len(client_params) * tree_bytes(global_params)
 
-    def aggregate_stacked(self, global_params, stacked, weights, state):
-        return self._apply(global_params, fedavg_stacked(stacked, weights),
-                           state)
+    def server_update(self, global_params, mean, state, *, k):
+        return self._apply(global_params, mean, state)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -302,7 +372,10 @@ class Compressed(FederatedStrategy):
                                              state)
         return new, state, nbytes
 
-    def aggregate_stacked(self, global_params, stacked, weights, state):
+    def map_clients(self, global_params, stacked):
+        """Per-client delta -> compress -> rebuild round-trip, vmapped over
+        the shard's client axis (O(shard) live — each cohort shard is
+        round-tripped as it streams through the fold)."""
         deltas = jax.tree.map(
             lambda s, g: s.astype(jnp.float32) - g.astype(jnp.float32)[None],
             stacked, global_params)
@@ -310,8 +383,13 @@ class Compressed(FederatedStrategy):
         rebuilt = jax.tree.map(
             lambda g, d: (g.astype(jnp.float32)[None] + d).astype(g.dtype),
             global_params, comp)
-        return self.inner.aggregate_stacked(global_params, rebuilt, weights,
-                                            state)
+        return self.inner.map_clients(global_params, rebuilt)
+
+    def effective_weights(self, weights):
+        return self.inner.effective_weights(weights)
+
+    def server_update(self, global_params, mean, state, *, k):
+        return self.inner.server_update(global_params, mean, state, k=k)
 
     def upload_bytes(self, global_params, k):
         if self.kind == "topk":

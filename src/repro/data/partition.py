@@ -108,6 +108,71 @@ def partition(docs: Sequence[Document], k: int, skew: str = "iid",
     raise ValueError(f"unknown skew {skew!r}; have {SKEWS}")
 
 
+class ClientPool:
+    """Virtual population of ``n_clients`` federated clients backed by a
+    small pool of real data shards — the lazy client-data provider the
+    round engines consume (``batches_for`` / ``sizes`` / ``max_steps`` /
+    ``__len__``).
+
+    Cross-device populations are sampled, not enumerated: a 100k–1M-client
+    round touches only its cohort, so materializing every client's batches
+    up front is both impossible (memory) and pointless.  Virtual client
+    ``k`` serves pool shard ``k % P``; a pool shard's batches build on
+    FIRST access (``builders[i]`` is a zero-arg callable) and are cached,
+    so a run materializes at most ``P`` datasets no matter how many
+    clients exist or participate.
+
+    >>> pool = ClientPool(6, [lambda: ["a", "b"], lambda: ["c"]], sizes=[2, 1])
+    >>> len(pool), pool.batches_for(3)
+    (6, ['c'])
+    >>> pool.sizes
+    [2, 1, 2, 1, 2, 1]
+    >>> pool.materialized        # only shard 1 was ever built
+    [1]
+    """
+
+    def __init__(self, n_clients: int, builders: Sequence, sizes: Sequence[int],
+                 *, limit: int = 0):
+        if len(builders) != len(sizes):
+            raise ValueError(f"{len(builders)} builders vs {len(sizes)} sizes")
+        if n_clients < 1 or not builders:
+            raise ValueError("need n_clients >= 1 and a non-empty pool")
+        self._n = int(n_clients)
+        self._builders = list(builders)
+        self._pool_sizes = [int(s) for s in sizes]
+        self._limit = int(limit)              # >0: cap local steps per epoch
+        self._cache: dict = {}
+
+    def __len__(self) -> int:
+        return self._n
+
+    @property
+    def sizes(self) -> List[int]:
+        """Virtual n_k aggregation weights: the pool sizes, cycled."""
+        p = len(self._builders)
+        return [self._pool_sizes[k % p] for k in range(self._n)]
+
+    @property
+    def max_steps(self) -> int:
+        """Longest local epoch across the pool (materializes the pool — at
+        most P builds, cached; never per virtual client)."""
+        return max(len(self._shard(i)) for i in range(len(self._builders)))
+
+    @property
+    def materialized(self) -> List[int]:
+        """Pool shard indices built so far (laziness observability)."""
+        return sorted(self._cache)
+
+    def _shard(self, i: int):
+        if i not in self._cache:
+            built = self._builders[i]()
+            self._cache[i] = built[:self._limit] if self._limit else built
+        return self._cache[i]
+
+    def batches_for(self, k: int):
+        return self._shard(k % len(self._builders))
+
+
 def client_stats_table(shards: Sequence[Sequence[Document]]) -> dict:
     """Table-3 analogue: mean and sigma of (quantity, sentence length,
     union vocabulary, per-doc vocabulary) across clients.  The per-doc

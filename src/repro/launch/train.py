@@ -36,7 +36,20 @@ from repro.nn import param as P
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="distilbert-mlm")
-    ap.add_argument("--clients", type=int, default=2)
+    ap.add_argument("--clients", type=int, default=2,
+                    help="client population size; with --client-pool this "
+                         "can go to 100k-1M (clients are virtual and only "
+                         "sampled cohorts materialize data)")
+    ap.add_argument("--client-pool", type=int, default=0,
+                    help="mega-cohort mode: back --clients VIRTUAL clients "
+                         "with this many lazily-built data shards (client k "
+                         "trains shard k %% pool); 0 = materialize every "
+                         "client's batches up front")
+    ap.add_argument("--cohort-shard", type=int, default=0,
+                    help="parallel engine: process the sampled cohort in "
+                         "shards of this many clients (O(shard) live "
+                         "memory; bitwise-identical to the full-width "
+                         "round at any value); 0 = one full-cohort shard")
     ap.add_argument("--skew", default="iid",
                     choices=("iid", "quantity", "length", "vocab"))
     ap.add_argument("--rounds", type=int, default=15)
@@ -119,15 +132,28 @@ def main() -> None:
 
     from repro.data.corpus import split_holdout
     docs, held_docs = split_holdout(generate_corpus(args.docs, seed=args.seed))
-    ds = make_client_datasets(docs, cfg, k=args.clients, skew=args.skew,
-                              batch=args.batch_size, seq=args.seq_len,
-                              seed=args.seed)
-    batches = ds["batches"]
-    if args.max_steps_per_round:
-        batches = [b[:args.max_steps_per_round] for b in batches]
-    print("per-client local steps:", [len(b) for b in batches])
-    print("data skew sigmas:", json.dumps(
-        {k: round(v["sigma"], 2) for k, v in ds["stats"].items()}))
+    ds = None
+    if args.client_pool:
+        from repro.core.noniid import make_client_pool
+        batches = make_client_pool(docs, cfg, n_clients=args.clients,
+                                   pool=args.client_pool, skew=args.skew,
+                                   batch=args.batch_size, seq=args.seq_len,
+                                   seed=args.seed,
+                                   limit=args.max_steps_per_round)
+        sizes = batches.sizes
+        print(f"client pool: {args.clients:,} virtual clients over "
+              f"{args.client_pool} lazily-built data shards")
+    else:
+        ds = make_client_datasets(docs, cfg, k=args.clients, skew=args.skew,
+                                  batch=args.batch_size, seq=args.seq_len,
+                                  seed=args.seed)
+        batches = ds["batches"]
+        if args.max_steps_per_round:
+            batches = [b[:args.max_steps_per_round] for b in batches]
+        sizes = ds["sizes"]
+        print("per-client local steps:", [len(b) for b in batches])
+        print("data skew sigmas:", json.dumps(
+            {k: round(v["sigma"], 2) for k, v in ds["stats"].items()}))
 
     params = P.unbox(init_model(jax.random.PRNGKey(args.seed), cfg))
     print(f"params: {sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params)):,}")
@@ -137,11 +163,12 @@ def main() -> None:
                              frac=args.topk_frac, alpha=args.async_alpha)
     plan = RoundPlan(n_rounds=args.rounds, engine=args.engine,
                      strategy=strategy,
+                     cohort_shard=args.cohort_shard or None,
                      ffdapt=FFDAPTConfig(epsilon=args.epsilon,
                                          gamma=args.gamma) if args.ffdapt
                      else None,
                      participation=args.participation, seed=args.seed,
-                     client_sizes=ds["sizes"],
+                     client_sizes=sizes,
                      simulate=(make_fleet(args.fleet, args.clients,
                                           seed=args.seed,
                                           calibrated=args.calibrated)
@@ -158,10 +185,13 @@ def main() -> None:
                          "batch": args.batch_size, "seq": args.seq_len,
                          "docs": args.docs, "skew": args.skew,
                          "max_steps": args.max_steps_per_round,
+                         "client_pool": args.client_pool,
                          "fleet": args.fleet, "calibrated": args.calibrated,
                          "sim_seed": args.sim_seed})
+    shard_note = (f" cohort_shard={args.cohort_shard}"
+                  if args.cohort_shard else "")
     print(f"strategy={strategy.name} engine={args.engine} "
-          f"participation={args.participation}")
+          f"participation={args.participation}{shard_note}")
     if args.resume and args.ckpt_dir:
         at = latest_step(args.ckpt_dir)
         print("resume: "
@@ -174,8 +204,10 @@ def main() -> None:
 
     for h in hist:
         w = f" windows={h.windows}" if h.windows else ""
-        c = (f" clients={h.clients}"
-             if h.clients is not None and len(h.clients) < args.clients else "")
+        c = ""
+        if h.clients is not None and len(h.clients) < args.clients:
+            c = (f" clients={h.clients}" if len(h.clients) <= 32
+                 else f" cohort={len(h.clients):,}")
         s = f"  sim {h.sim_round_s:7.1f}s" if args.fleet else ""
         print(f"round {h.round:3d}  loss {h.loss:7.4f}  {h.round_time_s:6.2f}s"
               f"{s}  up {h.upload_bytes / 2**20:7.1f}MB  "
@@ -210,7 +242,8 @@ def main() -> None:
                                     buffer_size=args.async_buffer,
                                     seed=args.sim_seed,
                                     overlap=args.overlap,
-                                    client_steps=ds["steps"]))
+                                    client_steps=(ds["steps"] if ds
+                                                  else None)))
         for rep in reports:
             print("\n".join(ledger_lines(rep)))
 

@@ -9,10 +9,14 @@ fails all candidates is replicated — a *fallback*, never an error, so every
 architecture in the zoo lowers even when its head counts do not match the
 mesh (qwen2's 28 heads on a 16-way model axis, whisper's 6, ...).
 
-Two rule tables ship:
+Main rule tables:
   * ``DEFAULT_RULES``  — 2D/3D tensor+data parallel training/serving layout.
   * ``FED_RULES``      — federated layout: the ``client`` logical axis maps to
     the ``pod`` mesh axis so each pod holds one client's diverging replica.
+  * ``COHORT_RULES``   — mega-cohort layout for the cohort-scan engine: one
+    client SHARD is live at a time and its client dim takes the whole mesh
+    (within-client tensors replicate), so the streaming FedAvg fold lowers
+    to a single model-sized all-reduce over clients.
 """
 
 from __future__ import annotations
@@ -68,6 +72,31 @@ FED_RULES = Rules({
     P.CLIENT: ("pod", None),
     P.BATCH:  ("data", None),
     P.EMBED:  ("data", None),
+})
+
+# Mega-cohort layout for the cohort-scan engine: ONE shard of the stacked
+# client axis is live at a time, and that shard's client dim takes every
+# mesh axis (the whole machine works on the shard); within a client the
+# tensors replicate.  The per-shard weighted-sum fold then lowers to a
+# single all-reduce over the client axis whose payload is exactly one
+# model's bytes — the committed 512-device HLO fixture
+# (tests/fixtures/cohort_agg_512dev.json) pins those collective bytes.
+COHORT_RULES = Rules({
+    P.CLIENT:   (("pod", "data", "model"), ("pod", "data"), ("data", "model"),
+                 ("pod", "model"), "data", "pod", "model", None),
+    P.BATCH:    (None,),
+    P.SEQ:      (None,),
+    P.ATTN_SEQ: (None,),
+    P.EMBED:    (None,),
+    P.FFN:      (None,),
+    P.VOCAB:    (None,),
+    P.HEADS:    (None,),
+    P.KV_HEADS: (None,),
+    P.HEAD_DIM: (None,),
+    P.LAYERS:   (None,),
+    P.EXPERTS:  (None,),
+    P.DSTATE:   (None,),
+    P.DCONV:    (None,),
 })
 
 # Beyond-paper optimized layout (§Perf): context-parallel attention — the

@@ -31,7 +31,10 @@ selectable there and from ``repro.launch.train --overlap``.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, List, Optional, Sequence
+
+import numpy as np
 
 from repro.core.accounting import split_bytes
 from repro.sim.fleet import DeviceProfile, Fleet
@@ -184,13 +187,68 @@ def round_timings(rr: Any, fleet: Fleet) -> List[ClientTiming]:
             for i, k in enumerate(clients)]
 
 
+# cohort size at which sync_round_s switches from the per-client object
+# loop to the vectorized numpy clock (identical IEEE-754 arithmetic — the
+# cutover is invisible; pinned exact in tests/test_cohort.py)
+VECTOR_MIN_CLIENTS = 2048
+
+
+@functools.lru_cache(maxsize=8)
+def _fleet_arrays(fleet: Fleet):
+    """Per-device attribute columns for the vectorized clock, cached per
+    (hashable, frozen) Fleet.  Bandwidths pre-clamped like ``comm_time_s``
+    (``max(bw, 1.0)``) so the vector path divides by the same numbers."""
+    devs = fleet.devices
+    return {
+        "peak_flops": np.asarray([d.peak_flops for d in devs], np.float64),
+        "hbm_bw": np.asarray([d.hbm_bw for d in devs], np.float64),
+        "up_bw": np.asarray([max(d.up_bw, 1.0) for d in devs], np.float64),
+        "down_bw": np.asarray([max(d.down_bw, 1.0) for d in devs],
+                              np.float64),
+        "latency_s": np.asarray([d.latency_s for d in devs], np.float64),
+    }
+
+
+def _sync_round_s_vec(clients, steps, flops, hbm, up, down_each, fleet,
+                      overlap: bool) -> float:
+    """Vectorized ``sync_round_s`` body.  Op-for-op the same float64
+    arithmetic as ``client_timing``/``phase_total_s`` (same operand order,
+    same clamps), so it returns BITWISE the number the object loop does —
+    just without building 100k ``ClientTiming`` per round."""
+    arr = _fleet_arrays(fleet)
+    idx = np.asarray(clients, np.int64)
+    lat = arr["latency_s"][idx]
+    down_s = lat + float(down_each) / arr["down_bw"][idx]
+    comp = np.asarray(steps, np.float64) * np.maximum(
+        np.asarray(flops, np.float64) / arr["peak_flops"][idx],
+        np.asarray(hbm, np.float64) / arr["hbm_bw"][idx])
+    up_s = lat + np.asarray(up, np.float64) / arr["up_bw"][idx]
+    if overlap:
+        tot = 2.0 * lat + np.maximum(np.maximum(down_s - lat, comp),
+                                     up_s - lat)
+    else:
+        tot = down_s + comp + up_s
+    return float(tot.max()) if tot.size else 0.0
+
+
 def sync_round_s(rr: Any, fleet: Fleet, *, overlap: bool = False) -> float:
     """Ideal (dropout-free) synchronous round SECONDS: the server waits for
     the slowest sampled client.  This is what ``RoundPlan.simulate`` records
     live; ``repro.sim.events`` adds availability noise and other modes.
     ``overlap=True`` uses the pipelined clock (``ClientTiming.
-    total_overlap_s``) instead of the sequential phase sum."""
-    ts = round_timings(rr, fleet)
+    total_overlap_s``) instead of the sequential phase sum.
+
+    Mega-cohort rounds (>= ``VECTOR_MIN_CLIENTS`` participants) take a
+    vectorized numpy path that computes the identical float64 numbers
+    without materializing per-client ``ClientTiming`` objects."""
+    clients, steps, flops, hbm, up, down_each = ledger_lists(rr)
+    if len(clients) >= VECTOR_MIN_CLIENTS:
+        return _sync_round_s_vec(clients, steps, flops, hbm, up, down_each,
+                                 fleet, overlap)
+    ts = [client_timing(k, fleet[k], n_steps=steps[i],
+                        step_flops=flops[i], step_hbm_bytes=hbm[i],
+                        upload_bytes=up[i], download_bytes=down_each)
+          for i, k in enumerate(clients)]
     return max((t.total(overlap) for t in ts), default=0.0)
 
 

@@ -12,7 +12,8 @@ from repro.telemetry.hlo import (DTYPE_BYTES, Computation, Op,
                                  parse_computations, shape_bytes, shape_dims,
                                  trip_count, while_parts)
 from repro.telemetry.step import (StepCost, batch_struct, client_step_cost,
-                                  client_step_costs, train_batch_struct)
+                                  client_step_costs, shard_epoch_cost,
+                                  train_batch_struct)
 
 __all__ = [
     "COLLECTIVES", "DTYPE_BYTES", "Computation", "HloStats", "Op",
@@ -20,7 +21,8 @@ __all__ = [
     "client_step_costs",
     "collective_kind", "cond_trip_count", "conv_flops", "dot_flops",
     "entry_name", "multiplicities", "op_hbm_bytes", "parse_computations",
-    "parse_op", "shape_bytes", "shape_dims", "top_contributors",
+    "parse_op", "shape_bytes", "shape_dims", "shard_epoch_cost",
+    "top_contributors",
     "train_batch_struct", "trip_count", "while_parts", "xla_cost",
     "xla_flops",
 ]

@@ -103,6 +103,79 @@ def client_step_cost(cfg, optimizer, strategy, batch_sds: Dict[str, Any], *,
     return cost
 
 
+def shard_epoch_cost(cfg, optimizer, strategy, batch_sds: Dict[str, Any], *,
+                     shard: int, steps: int, masked: bool = False,
+                     impl: str = "xla") -> StepCost:
+    """Analyze ONE compiled cohort-scan shard program (cached): ``shard``
+    clients vmapped, ``steps`` local steps scanned per client, plus the
+    streaming aggregation fold into the round carry — the exact program
+    family ``FedSession``'s parallel engine runs per shard.
+
+    The scan-aware analyzer multiplies every loop body by its trip count,
+    so the result prices the WHOLE shard epoch: the compute terms land at
+    ``shard x steps x client_step_cost`` (plus the O(params) fold, which is
+    FLOP-free under the dot/conv metric) — the multiplicity identity
+    tests/test_cohort.py pins, and the reason the round ledger may price a
+    cohort as ``n_steps x client_step_cost`` regardless of shard size."""
+    key = ("shard_epoch", cfg, optimizer, strategy.client_step_key(),
+           strategy.needs_anchor, shard, steps, masked, impl,
+           _batch_key(batch_sds))
+    if key in _COST_CACHE:
+        return _COST_CACHE[key]
+
+    from repro.core.fedavg import broadcast_clients, scalar_fold
+    from repro.models.model import n_freeze_units
+    from repro.models.steps import abstract_train_state
+    from repro.nn import param as P
+
+    params_sds, _ = abstract_train_state(cfg, optimizer)
+    step = strategy.make_client_step(cfg, optimizer, masked=masked, impl=impl)
+    needs_anchor = strategy.needs_anchor
+
+    bsub = jax.tree.map(lambda l: jax.ShapeDtypeStruct(
+        (shard, steps) + l.shape, l.dtype), batch_sds)
+    fm_sds = jax.ShapeDtypeStruct((shard, n_freeze_units(cfg)), jnp.float32)
+    w_sds = jax.ShapeDtypeStruct((shard,), jnp.float32)
+    partial_sds = jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, jnp.float32), params_sds)
+    sc = jax.ShapeDtypeStruct((), jnp.float32)
+
+    def shard_epoch(gp, partial, loss_acc, tok_acc, bs_all, fmasks,
+                    w_agg, w_loss):
+        stacked = broadcast_clients(gp, shard)
+        opts = jax.vmap(lambda p: P.unbox(optimizer.init(p)))(stacked)
+
+        def client_epoch(p, o, bs, fm):
+            def one(carry, b):
+                p_, o_ = carry
+                args = (p_, o_)
+                if needs_anchor:
+                    args += (gp,)
+                args += (b,)
+                if masked:
+                    args += (fm,)
+                p_, o_, m = step(*args)
+                return (p_, o_), (m["loss"], m["tokens"])
+
+            (p, o), (ls, toks) = jax.lax.scan(one, (p, o), bs)
+            return p, jnp.mean(ls), jnp.sum(toks)
+
+        p_k, losses, toks = jax.vmap(client_epoch)(stacked, opts, bs_all,
+                                                   fmasks)
+        partial = strategy.aggregate_partial(gp, p_k, w_agg, partial)
+        return (partial, scalar_fold(loss_acc, losses * w_loss),
+                scalar_fold(tok_acc, toks))
+
+    compiled = jax.jit(shard_epoch).lower(
+        params_sds, partial_sds, sc, sc, bsub, fm_sds, w_sds, w_sds).compile()
+    stats = analyze(compiled.as_text())
+    cost = StepCost(flops=float(stats.dot_flops),
+                    hbm_bytes=float(stats.hbm_bytes),
+                    collective_bytes=float(stats.collective_total))
+    _COST_CACHE[key] = cost
+    return cost
+
+
 def client_step_costs(cfg, optimizer, strategy,
                       batch_sds_list: Sequence[Dict[str, Any]], *,
                       frozen_list: Optional[Sequence[Optional[Tuple[bool, ...]]]] = None,

@@ -1,0 +1,92 @@
+"""Regenerate the 512-device cohort-aggregation fixtures.
+
+The cohort-scan engine's per-shard aggregation is algebraically a weighted
+sum over the shard's client axis; at production mesh scale that axis shards
+over the whole machine (``repro.sharding.rules.COHORT_RULES``) and the sum
+lowers — like ``fedavg_stacked`` in the mesh round program — to exactly ONE
+all-reduce whose payload is one model's bytes, regardless of how many
+clients the shard holds.  This script resolves the client-sharded layout
+through COHORT_RULES on a 512 forced host devices mesh, compiles the
+partial-update program, and freezes:
+
+  * ``cohort_agg_512dev.hlo.txt`` — the partitioned HLO text;
+  * ``cohort_agg_512dev.json``    — the analyzer's collective bytes per
+    kind plus the expected all-reduce payload (weight bytes), pinned by
+    ``tests/test_sharding.py``.
+
+Run from the repo root when jax or the program changes:
+
+    PYTHONPATH=src python tests/fixtures/gen_cohort_fixture.py
+"""
+
+import json
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import jax                                                     # noqa: E402
+import jax.numpy as jnp                                        # noqa: E402
+import numpy as np                                             # noqa: E402
+from jax.sharding import Mesh, NamedSharding, PartitionSpec    # noqa: E402
+
+from repro import telemetry as T                               # noqa: E402
+from repro.nn import param as P                                # noqa: E402
+from repro.sharding.rules import COHORT_RULES, logical_to_spec  # noqa: E402
+
+HERE = os.path.dirname(__file__)
+N_DEV = 512
+K = 512            # one cohort shard: one client per device
+D = 256            # each client's "model" is (D, D) fp32
+
+
+def main():
+    assert len(jax.devices()) == N_DEV, len(jax.devices())
+    mesh = Mesh(np.array(jax.devices()).reshape(N_DEV), ("data",))
+
+    # the layout COHORT_RULES resolves for a (client, embed, ffn) tensor on
+    # this mesh: client axis sharded over every mesh axis, weights replicated
+    spec = logical_to_spec((P.CLIENT, P.EMBED, P.FFN), (K, D, D), mesh,
+                           COHORT_RULES)
+    assert spec == PartitionSpec("data"), spec
+
+    def agg_partial(partial, stacked, w):
+        # one shard folded into the carry: algebraically sum_k w_k * W_k
+        return partial + jnp.sum(stacked * w[:, None, None], axis=0)
+
+    part_sh = NamedSharding(mesh, PartitionSpec())       # carry: replicated
+    stack_sh = NamedSharding(mesh, spec)                 # clients: sharded
+    w_sh = NamedSharding(mesh, PartitionSpec("data"))
+    Pa = jax.ShapeDtypeStruct((D, D), jnp.float32)
+    S = jax.ShapeDtypeStruct((K, D, D), jnp.float32)
+    W = jax.ShapeDtypeStruct((K,), jnp.float32)
+    compiled = (jax.jit(agg_partial,
+                        in_shardings=(part_sh, stack_sh, w_sh),
+                        out_shardings=part_sh)
+                .lower(Pa, S, W).compile())
+    hlo = compiled.as_text()
+    stats = T.analyze(hlo)
+
+    with open(os.path.join(HERE, "cohort_agg_512dev.hlo.txt"), "w") as f:
+        f.write(hlo)
+    record = {
+        "program": "partial + sum_k w_k * W_k (client axis mesh-sharded)",
+        "n_devices": N_DEV,
+        "mesh": [N_DEV], "axes": ["data"],
+        "client_spec": ["data"],
+        "shard_clients": K, "weight_shape": [D, D], "dtype": "f32",
+        # the aggregation all-reduce: one model's bytes, independent of K
+        "expected_allreduce_bytes_min": D * D * 4,
+        "collective_bytes_per_device": {k: int(v) for k, v
+                                        in stats.collective_bytes.items()
+                                        if v},
+        "jax_version": jax.__version__,
+    }
+    with open(os.path.join(HERE, "cohort_agg_512dev.json"), "w") as f:
+        json.dump(record, f, indent=1)
+    print(json.dumps(record, indent=1))
+
+
+if __name__ == "__main__":
+    main()
+
+

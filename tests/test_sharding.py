@@ -2,15 +2,20 @@
 per-arch spec sanity.  Uses a small host mesh (1 device is fine: rules are
 pure functions of mesh SHAPE, so we build abstract meshes)."""
 
+import json
+import os
+
 import jax
 import numpy as np
 import pytest
 from jax.sharding import Mesh, PartitionSpec
 
 from repro.nn import param as P
-from repro.sharding.rules import (DECODE_RULES, DEFAULT_RULES, FED_RULES,
-                                  LONG_CONTEXT_RULES, OPT_RULES,
+from repro.sharding.rules import (COHORT_RULES, DECODE_RULES, DEFAULT_RULES,
+                                  FED_RULES, LONG_CONTEXT_RULES, OPT_RULES,
                                   logical_to_spec, spec_bytes_per_device)
+
+FIXTURES = os.path.join(os.path.dirname(__file__), "fixtures")
 
 
 def _ent(spec, i):
@@ -87,3 +92,53 @@ def test_spec_bytes_per_device():
     spec = PartitionSpec("data", "model")
     b = spec_bytes_per_device((4096, 16384), np.float32, spec, MESH)
     assert b == 4096 * 16384 * 4 // 256
+
+
+# ---------------------------------------------------------------------------
+# COHORT_RULES: the cohort-scan shard layout
+# ---------------------------------------------------------------------------
+
+def test_cohort_rules_client_takes_whole_mesh():
+    # a shard of 512 clients on the 2x16x16 pod mesh: client axis over all
+    # three mesh axes (512 divides 512), within-client dims replicated
+    spec = logical_to_spec((P.CLIENT, P.EMBED, P.FFN), (512, 768, 3072),
+                           POD, COHORT_RULES)
+    assert spec[0] == ("pod", "data", "model")
+    assert _ent(spec, 1) is None and _ent(spec, 2) is None
+
+
+def test_cohort_rules_partial_mesh_fallback():
+    # 32 clients can't take the full 512-way product; falls through to the
+    # first divisible candidate
+    spec = logical_to_spec((P.CLIENT, P.EMBED), (32, 768), POD, COHORT_RULES)
+    assert spec[0] == ("pod", "data")
+    # indivisible everywhere -> replicated
+    spec = logical_to_spec((P.CLIENT, P.EMBED), (7, 768), POD, COHORT_RULES)
+    assert _ent(spec, 0) is None
+
+
+def test_cohort_rules_per_client_shard_bytes():
+    # the memory model the engine promises: per-device bytes of a sharded
+    # 512-client stack equal ONE client's tensor
+    spec = logical_to_spec((P.CLIENT, P.EMBED, P.FFN), (512, 768, 3072),
+                           POD, COHORT_RULES)
+    b = spec_bytes_per_device((512, 768, 3072), np.float32, spec, POD)
+    assert b == 768 * 3072 * 4
+
+
+def test_cohort_agg_fixture_collective_bytes():
+    """The committed 512-device HLO fixture: a COHORT_RULES-sharded shard
+    aggregation lowers to exactly one all-reduce of one model's bytes,
+    independent of how many clients the shard holds."""
+    from repro import telemetry as T
+    with open(os.path.join(FIXTURES, "cohort_agg_512dev.json")) as f:
+        rec = json.load(f)
+    with open(os.path.join(FIXTURES, "cohort_agg_512dev.hlo.txt")) as f:
+        stats = T.analyze(f.read())
+    want = rec["weight_shape"][0] * rec["weight_shape"][1] * 4
+    assert rec["expected_allreduce_bytes_min"] == want
+    assert stats.collective_bytes["all-reduce"] >= want
+    # ... and not meaningfully more: the payload is O(model), NOT O(clients)
+    assert stats.collective_bytes["all-reduce"] < want * rec["shard_clients"]
+    assert {k: int(v) for k, v in stats.collective_bytes.items() if v} \
+        == rec["collective_bytes_per_device"]

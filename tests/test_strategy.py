@@ -18,7 +18,8 @@ import pytest
 
 from repro import optim
 from repro.configs import get_config
-from repro.core.fedavg import broadcast_clients, fedavg, fedavg_stacked
+from repro.core.fedavg import (broadcast_clients, fedavg, fedavg_fold,
+                               fold_finalize, fold_init)
 from repro.core.rounds import FedSession, RoundPlan
 from repro.core.strategy import (Compressed, FedAvg, FedAvgM, FedProx,
                                  make_strategy, tree_bytes)
@@ -68,7 +69,9 @@ def _legacy_sequential(opt, params, batches, sizes, rounds):
 
 
 def _legacy_parallel(opt, params, batches_list, sizes, rounds):
-    """The pre-strategy mesh round: vmapped epochs + stacked FedAvg."""
+    """The hand-rolled vmapped round: vmapped epochs + the canonical
+    client-index FedAvg fold (``fedavg_fold``) — the reduction both the
+    full-width and cohort-scan parallel engines lower to."""
     K = len(batches_list)
     per_client = [jax.tree.map(lambda *xs: jnp.stack(xs), *bs)
                   for bs in batches_list]
@@ -90,10 +93,14 @@ def _legacy_parallel(opt, params, batches_list, sizes, rounds):
             return p, jnp.mean(losses)
 
         p_k, _ = jax.vmap(client_epoch)(stacked, opts, batches)
-        return fedavg_stacked(p_k, w)
+        return fedavg_fold(fold_init(gp), p_k, w / jnp.sum(w))
+
+    @jax.jit
+    def combine(gp, partial):
+        return fold_finalize(partial, gp)
 
     for _ in range(rounds):
-        params = fed_round(params, batches)
+        params = combine(params, fed_round(params, batches))
     return params
 
 

@@ -137,7 +137,16 @@ def main() -> None:
     ap.add_argument("--out", default=os.path.join(
         os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
         "BENCH_round.json"))
+    ap.add_argument("--trace-out", default="",
+                    help="enable the span tracer and write the sweep's "
+                         "Chrome trace-event JSON here (per-shard dispatch "
+                         "and compile spans; load in Perfetto)")
     args = ap.parse_args()
+
+    if args.trace_out:
+        from repro import obs
+        obs.enable()
+        obs.capture_compiles()
 
     cfg = get_config(args.arch).reduced()
     cohorts = tuple(c for c in COHORTS if c <= 64) if args.tiny else COHORTS
@@ -173,6 +182,10 @@ def main() -> None:
                 f"{r['cohort']}: ratio {ratio}")
             print(f"tiny OK: cohort {r['cohort']} scan/stacked "
                   f"throughput ratio {ratio}")
+
+    if args.trace_out:
+        from repro import obs
+        print(f"chrome trace: {obs.get_tracer().export(args.trace_out)}")
 
 
 if __name__ == "__main__":

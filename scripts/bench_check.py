@@ -1,0 +1,138 @@
+#!/usr/bin/env python
+"""Validate BENCH_*.json perf-trajectory files against the shared schema.
+
+One schema per benchmark family, held in ONE place (here) instead of
+drifting between inline heredocs in each smoke script:
+
+  * ``serve``            — ``benchmarks/serving.py`` (two-mode payload with
+    bitwise parity + throughput ratio) and ``repro.launch.serve
+    --bench-out`` (single-mode payload);
+  * ``round_throughput`` — ``benchmarks/round_throughput.py``.
+
+Usage::
+
+    python scripts/bench_check.py FILE [FILE ...]   # validate these files
+    python scripts/bench_check.py                   # committed BENCH_*.json
+
+Exits non-zero naming the first violation.  CI runs this twice: over the
+committed trajectory files (schema rot) and over freshly-generated tiny
+runs (producer rot) — see scripts/bench_smoke.sh / serve_smoke.sh.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+from repro.serve.metrics import BENCH_MODE_KEYS  # noqa: E402
+
+PERCENTILE_KEYS = ("mean", "p50", "p99")
+
+
+def _require(cond: bool, path: str, msg: str) -> None:
+    if not cond:
+        raise AssertionError(f"{path}: {msg}")
+
+
+def _check_mode_summary(path: str, mode: str, summary: dict) -> None:
+    missing = set(BENCH_MODE_KEYS) - set(summary)
+    _require(not missing, path, f"{mode} summary missing {sorted(missing)}")
+    _require(summary["generated_tokens"] > 0, path,
+             f"{mode}: generated_tokens must be > 0")
+    for field in ("ttft_s", "latency_s"):
+        got = set(summary[field])
+        _require(got == set(PERCENTILE_KEYS), path,
+                 f"{mode}.{field} keys {sorted(got)} != "
+                 f"{sorted(PERCENTILE_KEYS)}")
+
+
+def check_serve(path: str, bench: dict) -> str:
+    if "modes" in bench:           # benchmarks/serving.py two-mode payload
+        for key in ("arch", "arch_type", "checkpoint", "engine", "workload",
+                    "modes", "throughput_ratio", "parity_bitwise"):
+            _require(key in bench, path, f"missing top-level key {key!r}")
+        _require(bench["checkpoint"]["step"] >= 1, path,
+                 "did not serve a real checkpoint")
+        for mode in ("continuous", "static"):
+            _require(mode in bench["modes"], path, f"missing mode {mode!r}")
+            _check_mode_summary(path, mode, bench["modes"][mode])
+        _require(bench["parity_bitwise"] is True, path,
+                 "continuous/static outputs not bitwise equal")
+        _require(bench["throughput_ratio"] >= 1.0, path,
+                 f"continuous slower than static "
+                 f"(ratio {bench['throughput_ratio']})")
+        return (f"serve: parity bitwise, "
+                f"ratio {bench['throughput_ratio']}")
+    # repro.launch.serve --bench-out single-mode payload
+    for key in ("arch", "mode", "workload", "engine", "metrics"):
+        _require(key in bench, path, f"missing top-level key {key!r}")
+    _check_mode_summary(path, bench["mode"], bench["metrics"])
+    return f"serve ({bench['mode']}): schema complete"
+
+
+def check_round_throughput(path: str, bench: dict) -> str:
+    for key in ("arch", "engine", "cohort_shard", "local_steps",
+                "params_bytes", "opt_state_bytes", "rows"):
+        _require(key in bench, path, f"missing top-level key {key!r}")
+    _require(bench["rows"], path, "empty rows")
+    mode_keys = {"round_s", "clients_per_s", "step_flops_per_client",
+                 "aggregate_upload_bytes", "aggregate_download_bytes",
+                 "peak_live_bytes_proxy"}
+    for row in bench["rows"]:
+        _require("cohort" in row, path, "row missing cohort")
+        for mode in ("stacked_vmap", "cohort_scan"):
+            _require(mode in row, path,
+                     f"cohort {row['cohort']}: missing {mode!r}")
+            cell = row[mode]
+            if cell is None:       # stacked-vmap unmeasured above crossover
+                continue
+            missing = mode_keys - set(cell)
+            _require(not missing, path,
+                     f"cohort {row['cohort']}.{mode} missing "
+                     f"{sorted(missing)}")
+            _require(cell["round_s"] > 0, path,
+                     f"cohort {row['cohort']}.{mode}: round_s must be > 0")
+    return f"round_throughput: {len(bench['rows'])} cohort rows"
+
+
+CHECKERS = {"serve": check_serve,
+            "round_throughput": check_round_throughput}
+
+
+def check_file(path: str) -> str:
+    with open(path) as f:
+        bench = json.load(f)
+    _require(isinstance(bench, dict), path, "payload is not a JSON object")
+    _require("benchmark" in bench, path, "missing 'benchmark' key")
+    name = bench["benchmark"]
+    _require(name in CHECKERS, path,
+             f"unknown benchmark {name!r} (known: {sorted(CHECKERS)}) — "
+             f"add its schema to scripts/bench_check.py")
+    return CHECKERS[name](path, bench)
+
+
+def main(argv) -> int:
+    paths = argv[1:]
+    if not paths:
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        paths = sorted(glob.glob(os.path.join(root, "BENCH_*.json")))
+        if not paths:
+            print("bench_check: no BENCH_*.json files found", file=sys.stderr)
+            return 1
+    for path in paths:
+        try:
+            detail = check_file(path)
+        except AssertionError as e:
+            print(f"bench_check FAIL: {e}", file=sys.stderr)
+            return 1
+        print(f"bench_check OK [{os.path.basename(path)}] {detail}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -15,6 +15,9 @@ python benchmarks/ffdapt_efficiency.py --tiny
 echo "== wallclock (tiny, calibrated + overlap checks) =="
 python benchmarks/wallclock.py --tiny --calibrated
 
+echo "== committed BENCH_*.json schemas =="
+python scripts/bench_check.py
+
 echo "== round_throughput (tiny) =="
 scripts/train_env.sh python benchmarks/round_throughput.py --tiny
 
@@ -26,3 +29,6 @@ bash scripts/cohort_smoke.sh
 
 echo "== serve smoke (federated checkpoint -> continuous batching) =="
 bash scripts/serve_smoke.sh
+
+echo "== obs smoke (trace/metrics/drift artifacts) =="
+bash scripts/obs_smoke.sh

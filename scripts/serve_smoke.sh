@@ -15,23 +15,5 @@ echo "== serving benchmark (tiny: 2-round checkpoint -> Poisson traffic) =="
 bash scripts/serve_env.sh python benchmarks/serving.py --tiny \
     --out "$TMP/BENCH_serve.json"
 
-echo "== BENCH_serve.json schema =="
-python - "$TMP/BENCH_serve.json" <<'EOF'
-import json, sys
-from repro.serve import BENCH_MODE_KEYS
-
-bench = json.load(open(sys.argv[1]))
-for key in ("benchmark", "arch", "arch_type", "checkpoint", "engine",
-            "workload", "modes", "throughput_ratio", "parity_bitwise"):
-    assert key in bench, f"missing top-level key {key!r}"
-assert bench["benchmark"] == "serve"
-assert bench["checkpoint"]["step"] >= 1, "did not serve a real checkpoint"
-for mode in ("continuous", "static"):
-    missing = set(BENCH_MODE_KEYS) - set(bench["modes"][mode])
-    assert not missing, f"{mode} summary missing {sorted(missing)}"
-    assert bench["modes"][mode]["generated_tokens"] > 0
-assert bench["parity_bitwise"] is True
-assert bench["throughput_ratio"] >= 1.0
-print("serve smoke OK: schema complete, parity bitwise, "
-      f"ratio {bench['throughput_ratio']}")
-EOF
+echo "== BENCH_serve.json schema (shared rules: scripts/bench_check.py) =="
+python scripts/bench_check.py "$TMP/BENCH_serve.json"

@@ -77,6 +77,9 @@ from repro.core.fedavg import broadcast_clients, fedavg_stacked, scalar_fold
 from repro.core.strategy import FedAvg, FederatedStrategy
 from repro.models.steps import make_masked_train_step
 from repro.nn import param as P
+from repro.obs.metrics import registry as _obs_registry
+from repro.obs.profile import record_compile
+from repro.obs.trace import span as _obs_span
 from repro.telemetry import batch_struct, client_step_cost
 
 
@@ -284,6 +287,19 @@ def _stack_shard(data, ids: Sequence[int], max_steps: int):
         padded = [bs[i % len(bs)] for i in range(max_steps)]
         per_client.append(jax.tree.map(lambda *xs: jnp.stack(xs), *padded))
     return jax.tree.map(lambda *xs: jnp.stack(xs), *per_client)
+
+
+def _record_round_metrics(rr: "RoundResult") -> None:
+    """Bank one round into the process-wide metrics registry (counters +
+    the round-seconds histogram ``--metrics-out`` exports).  Host floats
+    only — negligible next to a round."""
+    reg = _obs_registry()
+    reg.counter("train.rounds").inc()
+    reg.counter("train.tokens").inc(rr.tokens)
+    reg.counter("train.upload_bytes").inc(rr.upload_bytes)
+    reg.counter("train.comm_bytes").inc(rr.comm_bytes)
+    reg.histogram("train.round_s").observe(rr.round_time_s)
+    reg.gauge("train.last_loss").set(rr.loss)
 
 
 class FedSession:
@@ -497,10 +513,12 @@ class FedSession:
             rng_state=rng.bit_generator.state,
             history=[h.to_json() for h in history],
             plan=self._ckpt_plan_fingerprint())
-        save_checkpoint(
-            plan.checkpoint_dir, done,
-            {"params": params, "server": strategy.state_to_tree(state)},
-            extra=fed.to_json(), keep=plan.checkpoint_keep)
+        with _obs_span("train.checkpoint", cat="train", round=t):
+            save_checkpoint(
+                plan.checkpoint_dir, done,
+                {"params": params, "server": strategy.state_to_tree(state)},
+                extra=fed.to_json(), keep=plan.checkpoint_keep)
+        _obs_registry().counter("train.checkpoints").inc()
 
     # -----------------------------------------------------------------
     # Sequential (paper-faithful; static FFDAPT windows)
@@ -515,6 +533,11 @@ class FedSession:
         key = (self.cfg, self.optimizer, self.plan.strategy.client_step_key(),
                frozen, self.plan.impl)
         if key not in _STEP_CACHE:
+            # a cache miss means the next call traces+compiles a new client
+            # program — mark it so the trace shows which round paid it
+            record_compile("client_step",
+                           strategy=self.plan.strategy.name,
+                           impl=self.plan.impl)
             _STEP_CACHE[key] = jax.jit(self.plan.strategy.make_client_step(
                 self.cfg, self.optimizer, frozen=frozen, impl=self.plan.impl))
         return _STEP_CACHE[key]
@@ -548,36 +571,46 @@ class FedSession:
             if (plan.stop_after_round is not None
                     and t >= plan.stop_after_round):
                 break
-            t0 = time.perf_counter()
-            part = _participants(rng, len(data), plan.participation)
-            down = strategy.download_bytes(params, len(part))
-            locals_, losses, tokens = [], [], 0.0
-            flops_e = hbm_e = coll_e = 0.0
-            c_steps, c_flops, c_hbm = [], [], []
-            for k in part:
-                frozen = None
-                if windows is not None:
-                    frozen = ffd.window_mask(n_units, windows[t][k])
-                bs_k = data.batches_for(k)
-                steps_k = len(bs_k)
-                c_steps.append(steps_k)
-                if plan.telemetry:
-                    cost = self._step_cost(bs_k[0], frozen=frozen)
-                    c_flops.append(cost.flops)
-                    c_hbm.append(cost.hbm_bytes)
-                    flops_e += cost.flops * steps_k
-                    hbm_e += cost.hbm_bytes * steps_k
-                    coll_e += cost.collective_bytes * steps_k
-                opt_state = P.unbox(optimizer.init(params))
-                anchor = params if strategy.needs_anchor else None
-                p_k, _, loss, tok = _epoch(self._step_for(frozen), params,
-                                           opt_state, bs_k, anchor)
-                locals_.append(p_k)
-                losses.append(loss)
-                tokens += tok
-            params, state, nbytes = strategy.aggregate(
-                params, locals_, [sizes[k] for k in part], state)
-            dt = time.perf_counter() - t0
+            with _obs_span("train.round", cat="train", round=t,
+                           engine="sequential"):
+                t0 = time.perf_counter()
+                part = _participants(rng, len(data), plan.participation)
+                down = strategy.download_bytes(params, len(part))
+                locals_, losses, tokens = [], [], 0.0
+                flops_e = hbm_e = coll_e = 0.0
+                c_steps, c_flops, c_hbm = [], [], []
+                for k in part:
+                    frozen = None
+                    if windows is not None:
+                        frozen = ffd.window_mask(n_units, windows[t][k])
+                    bs_k = data.batches_for(k)
+                    steps_k = len(bs_k)
+                    c_steps.append(steps_k)
+                    if plan.telemetry:
+                        cost = self._step_cost(bs_k[0], frozen=frozen)
+                        c_flops.append(cost.flops)
+                        c_hbm.append(cost.hbm_bytes)
+                        flops_e += cost.flops * steps_k
+                        hbm_e += cost.hbm_bytes * steps_k
+                        coll_e += cost.collective_bytes * steps_k
+                    opt_state = P.unbox(optimizer.init(params))
+                    anchor = params if strategy.needs_anchor else None
+                    # dispatch span = one client's whole local epoch (the
+                    # sequential engine's unit of dispatch); jit calls sync
+                    # per batch, so this measures real compute
+                    with _obs_span("train.dispatch", cat="train", round=t,
+                                   client=k, steps=steps_k):
+                        p_k, _, loss, tok = _epoch(self._step_for(frozen),
+                                                   params, opt_state, bs_k,
+                                                   anchor)
+                    locals_.append(p_k)
+                    losses.append(loss)
+                    tokens += tok
+                with _obs_span("train.aggregate", cat="train", round=t,
+                               clients=len(part)):
+                    params, state, nbytes = strategy.aggregate(
+                        params, locals_, [sizes[k] for k in part], state)
+                dt = time.perf_counter() - t0
             rr = RoundResult(
                 t, float(np.mean(losses)), dt,
                 windows[t] if windows else None,
@@ -600,6 +633,7 @@ class FedSession:
             if plan.eval_fn is not None:
                 rr.eval_loss = float(plan.eval_fn(params))
             history.append(rr)
+            _record_round_metrics(rr)
             self._checkpoint(t, params, state, rng, history, windows,
                              n_units)
         return params, history
@@ -643,6 +677,10 @@ class FedSession:
             """
             self.shard_compiles += 1          # trace-time, not per call
             ksub = fmasks.shape[0]
+            # emit the compile as a trace event too: the Perfetto timeline
+            # then shows WHICH round/shard width paid each trace (the
+            # shard_compiles counter alone only says how many)
+            record_compile("shard_program", width=int(ksub))
             stacked = broadcast_clients(global_params, ksub)
             opts = jax.vmap(lambda p: P.unbox(optimizer.init(p)))(stacked)
 
@@ -706,32 +744,45 @@ class FedSession:
             if (plan.stop_after_round is not None
                     and t >= plan.stop_after_round):
                 break
-            t0 = time.perf_counter()
-            part = _participants(rng, K, plan.participation)
-            m = len(part)
-            w = w_all if m == K else w_all[jnp.asarray(part, jnp.int32)]
-            w_agg, w_loss = norm_weights(w)
-            partial = strategy.aggregate_init(params)
-            loss_acc = jnp.zeros((), jnp.float32)
-            tok_acc = jnp.zeros((), jnp.float32)
-            off = 0
-            for width in _shard_widths(m, plan.cohort_shard):
-                ids = part[off:off + width]
-                bsub = _stack_shard(data, ids, max_steps)
-                if windows is not None:
-                    fmasks = jnp.stack([
-                        jnp.asarray(ffd.window_mask(n_units, windows[t][k]),
-                                    jnp.float32) for k in ids])
-                else:
-                    fmasks = jnp.zeros((len(ids), n_units), jnp.float32)
-                partial, loss_acc, tok_acc = fed_shard(
-                    params, partial, loss_acc, tok_acc, bsub, fmasks,
-                    w_agg[off:off + width], w_loss[off:off + width])
-                off += width
-            params, state = _combine_for(m)(params, partial, state)
-            loss, toks = loss_acc, tok_acc
-            jax.block_until_ready(loss)   # async dispatch would under-time
-            dt = time.perf_counter() - t0
+            with _obs_span("train.round", cat="train", round=t,
+                           engine="parallel"):
+                t0 = time.perf_counter()
+                part = _participants(rng, K, plan.participation)
+                m = len(part)
+                w = w_all if m == K else w_all[jnp.asarray(part, jnp.int32)]
+                w_agg, w_loss = norm_weights(w)
+                partial = strategy.aggregate_init(params)
+                loss_acc = jnp.zeros((), jnp.float32)
+                tok_acc = jnp.zeros((), jnp.float32)
+                off = 0
+                for si, width in enumerate(_shard_widths(m,
+                                                         plan.cohort_shard)):
+                    ids = part[off:off + width]
+                    # dispatch span = shard materialization + the async jit
+                    # dispatch (device work may still be in flight when it
+                    # closes; the round span is bounded by block_until_ready)
+                    with _obs_span("train.dispatch", cat="train", round=t,
+                                   shard=si, width=width):
+                        bsub = _stack_shard(data, ids, max_steps)
+                        if windows is not None:
+                            fmasks = jnp.stack([
+                                jnp.asarray(ffd.window_mask(n_units,
+                                                            windows[t][k]),
+                                            jnp.float32) for k in ids])
+                        else:
+                            fmasks = jnp.zeros((len(ids), n_units),
+                                               jnp.float32)
+                        partial, loss_acc, tok_acc = fed_shard(
+                            params, partial, loss_acc, tok_acc, bsub, fmasks,
+                            w_agg[off:off + width], w_loss[off:off + width])
+                    off += width
+                with _obs_span("train.aggregate", cat="train", round=t,
+                               clients=m):
+                    params, state = _combine_for(m)(params, partial, state)
+                    loss, toks = loss_acc, tok_acc
+                    # async dispatch would under-time the round
+                    jax.block_until_ready(loss)
+                dt = time.perf_counter() - t0
             toks = float(toks)
             nbytes = strategy.upload_bytes(params, len(part))
             # rectangular schedule: every participant runs max_steps steps
@@ -764,6 +815,7 @@ class FedSession:
             if plan.eval_fn is not None:
                 rr.eval_loss = float(plan.eval_fn(params))
             history.append(rr)
+            _record_round_metrics(rr)
             self._checkpoint(t, params, state, rng, history, windows,
                              n_units)
         return params, history

@@ -62,8 +62,29 @@ def main() -> None:
                     help="static-batch baseline instead of the engine")
     ap.add_argument("--bench-out", default=None,
                     help="write the metrics summary as JSON")
+    ap.add_argument("--trace-out", default="",
+                    help="enable the span tracer and write a Chrome "
+                         "trace-event JSON here (admit/decode/evict spans "
+                         "+ compile events; load in Perfetto)")
+    ap.add_argument("--metrics-out", default="",
+                    help="write the process-wide metrics registry as JSONL")
+    ap.add_argument("--drift-out", default="",
+                    help="join the measured mean decode-step seconds "
+                         "against a --drift-device roofline prediction and "
+                         "write the ratio ledger (JSON) here")
+    ap.add_argument("--drift-device", default="rtx2080ti",
+                    help="device preset pricing the decode step for "
+                         "--drift-out (see repro.sim.fleet.PRESETS)")
+    ap.add_argument("--drift-warn", type=float, default=4.0,
+                    help="drift warn threshold: warn when "
+                         "measured/predicted falls outside [1/W, W]")
     ap.add_argument("--full-config", action="store_true")
     args = ap.parse_args()
+
+    from repro import obs
+    if args.trace_out:
+        obs.enable()
+        obs.capture_compiles()
 
     cfg = get_config(args.arch)
     if not args.full_config:
@@ -124,6 +145,34 @@ def main() -> None:
         print(f"wrote {args.bench_out}")
     else:
         print(json.dumps(summary, indent=2, sort_keys=True))
+
+    if args.drift_out:
+        from repro.sim.clock import device_roofline_s
+        from repro.sim.fleet import PRESETS
+        from repro.telemetry import decode_step_cost
+        dev = PRESETS[args.drift_device]
+        cost = decode_step_cost(cfg, args.slots, cache_len, impl=args.impl)
+        terms = device_roofline_s(cost.flops, cost.hbm_bytes,
+                                  cost.collective_bytes, dev)
+        predicted = max(terms["compute"], terms["memory"]) + terms["collective"]
+        # measured per-step seconds: the tracer's spans when tracing, else
+        # the run's wall seconds over its decode steps
+        spans = [e.dur_us / 1e6 for e in obs.get_tracer().events()
+                 if e.name == "serve.decode_step"]
+        if spans:
+            measured = sum(spans) / len(spans)
+        else:
+            measured = (summary["wall_s"]
+                        / max(summary["n_decode_steps"], 1))
+        mon = obs.DriftMonitor(warn_ratio=args.drift_warn)
+        mon.observe(0, "decode_step", measured, predicted,
+                    source=f"device:{dev.name}")
+        print("\n".join(mon.lines()))
+        print("drift ledger:", mon.export(args.drift_out))
+    if args.trace_out:
+        print("chrome trace:", obs.get_tracer().export(args.trace_out))
+    if args.metrics_out:
+        print("metrics:", obs.registry().export_jsonl(args.metrics_out))
 
 
 if __name__ == "__main__":

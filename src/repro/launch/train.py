@@ -119,10 +119,36 @@ def main() -> None:
                     help="write the deterministic run ledger (per-round "
                          "history minus wall-clock fields + a params "
                          "sha256) to this JSON file — two bitwise-equal "
-                         "runs produce byte-equal files")
+                         "runs produce byte-equal files; wall-clock fields "
+                         "go to a <ledger>.timing.json sidecar instead")
+    ap.add_argument("--trace-out", default="",
+                    help="enable the span tracer and write a Chrome "
+                         "trace-event JSON here (load in Perfetto / "
+                         "chrome://tracing): round/dispatch/aggregate/"
+                         "checkpoint spans, compile events, and — with "
+                         "--fleet — the simulated timeline side-by-side")
+    ap.add_argument("--metrics-out", default="",
+                    help="write the process-wide metrics registry "
+                         "(counters/gauges/histograms) as JSONL here")
+    ap.add_argument("--drift-out", default="",
+                    help="run the measured-vs-predicted drift monitor over "
+                         "the round history and write its ratio ledger "
+                         "(JSON) here; predictions come from --fleet when "
+                         "set, else the recorded sim_round_s")
+    ap.add_argument("--drift-warn", type=float, default=4.0,
+                    help="drift warn threshold: a round warns when "
+                         "measured/predicted falls outside [1/W, W]")
+    ap.add_argument("--jax-profile", default="",
+                    help="also capture a jax.profiler device trace into "
+                         "this directory (TensorBoard/xprof format)")
     args = ap.parse_args()
     if args.resume and not args.ckpt_dir:
         ap.error("--resume requires --ckpt-dir")
+
+    from repro import obs
+    if args.trace_out:
+        obs.enable()
+        obs.capture_compiles()
 
     cfg = get_config(args.arch)
     if not args.full_config:
@@ -198,8 +224,9 @@ def main() -> None:
               + (f"round checkpoint {at} found" if at is not None
                  else "no checkpoint on disk, starting fresh"))
     t0 = time.perf_counter()
-    params, hist = FedSession(cfg, optim.adam(args.lr), plan).run(
-        params, batches, resume=args.resume)
+    with obs.jax_profile(args.jax_profile or None):
+        params, hist = FedSession(cfg, optim.adam(args.lr), plan).run(
+            params, batches, resume=args.resume)
     wall = time.perf_counter() - t0
 
     for h in hist:
@@ -246,6 +273,13 @@ def main() -> None:
                                                   else None)))
         for rep in reports:
             print("\n".join(ledger_lines(rep)))
+        if args.trace_out:
+            # replay the sync report onto the tracer: the simulated
+            # timeline lands in its own Perfetto process lane next to the
+            # measured rounds
+            from repro.sim import emit_spans
+            n = emit_spans(reports[0])
+            print(f"trace: {n} synthetic sim spans emitted")
 
     if args.ledger_out:
         # the deterministic ledger: everything a resumed run must reproduce
@@ -258,6 +292,19 @@ def main() -> None:
             json.dump({"params_sha256": tree_digest(params), "rounds": rows},
                       f, indent=1, sort_keys=True)
         print("ledger:", args.ledger_out)
+        # the stripped wall-clock fields go to a sidecar: the main ledger
+        # stays byte-equal across bitwise-equal runs, the timing lives on
+        import os
+        base, _ = os.path.splitext(args.ledger_out)
+        timing_path = base + ".timing.json"
+        with open(timing_path, "w") as f:
+            json.dump({"total_wall_s": wall,
+                       "rounds": [{"round": h.round,
+                                   "round_time_s": h.round_time_s,
+                                   "tokens_per_s": h.tokens_per_s}
+                                  for h in hist]},
+                      f, indent=1, sort_keys=True)
+        print("timing sidecar:", timing_path)
 
     stopped_early = args.stop_after and args.stop_after < args.rounds
     if not stopped_early:
@@ -271,6 +318,18 @@ def main() -> None:
     if args.ckpt_dir:
         at = latest_step(args.ckpt_dir)
         print(f"checkpoints: {args.ckpt_dir} (latest round {at})")
+
+    if args.drift_out:
+        mon = obs.from_history(
+            hist, fleet=plan.simulate, overlap=args.overlap,
+            warn_ratio=args.drift_warn,
+            tracer=obs.get_tracer() if args.trace_out else None)
+        print("\n".join(mon.lines()))
+        print("drift ledger:", mon.export(args.drift_out))
+    if args.trace_out:
+        print("chrome trace:", obs.get_tracer().export(args.trace_out))
+    if args.metrics_out:
+        print("metrics:", obs.registry().export_jsonl(args.metrics_out))
 
 
 if __name__ == "__main__":

@@ -1,0 +1,205 @@
+"""Measured-vs-predicted drift monitor: does reality match the model?
+
+The repo predicts a round three independent ways — the analytic roofline
+ledger (``repro.telemetry`` FLOPs/HBM/comm per compiled step), the
+simulated wall-clock (``repro.sim.clock``/``repro.sim.events``), and the
+calibrated presets — but a prediction nobody checks rots silently.  The
+``DriftMonitor`` closes the loop per round: it joins a MEASURED duration
+(a tracer span, or the ``RoundResult.round_time_s`` the engines record)
+against a PREDICTED duration and banks the ratio in a ledger.
+
+    monitor = DriftMonitor(warn_ratio=4.0)
+    for rr in history:
+        monitor.observe_round(rr, fleet=plan.simulate)
+    monitor.export("drift.json"); monitor.warnings()
+
+Prediction sources, in precedence order (``predicted_round_s``):
+
+  1. ``fleet`` — ``repro.sim.clock.sync_round_s`` on that fleet (the
+     slowest sampled client under the roofline clock);
+  2. the round's recorded ``sim_round_s`` (a live ``RoundPlan.simulate``
+     hook already priced it);
+  3. ``device`` — a single ``DeviceProfile`` (or preset name): roofline
+     seconds of the round's ledger totals on that device.
+
+Ratios are ``measured / predicted``: 1.0 means the model nails reality,
+a drifting ratio means either the machine changed (regression!) or the
+model is mis-calibrated — both worth a warning.  The WARN rule is
+symmetric in log-space: a row warns when ``ratio > warn_ratio`` or
+``ratio < 1 / warn_ratio``.  A non-positive prediction yields
+``ratio=None`` and warns (the model failed to price the round at all).
+
+Every observed ratio also lands in the metrics registry (histogram
+``drift.<phase>.ratio``), so ``--metrics-out`` carries the drift summary
+even without the full ledger file.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Any, Dict, List, Optional, Sequence
+
+from repro.obs.metrics import MetricsRegistry, registry as _default_registry
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftRecord:
+    """One measured-vs-predicted join.  Seconds on both sides;
+    ``ratio = measured_s / predicted_s`` (None when the prediction is
+    non-positive); ``warn`` applies the monitor's symmetric threshold."""
+
+    round: int
+    phase: str
+    measured_s: float
+    predicted_s: float
+    ratio: Optional[float]
+    warn: bool
+    source: str = ""               # which predictor priced this row
+
+    def to_json(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+def _resolve_device(device: Any):
+    """A DeviceProfile, or a preset name from ``repro.sim.fleet``."""
+    if isinstance(device, str):
+        from repro.sim.fleet import PRESETS
+        if device not in PRESETS:
+            raise ValueError(
+                f"unknown device preset {device!r} (one of {sorted(PRESETS)})")
+        return PRESETS[device]
+    return device
+
+
+def predicted_round_s(rr: Any, *, fleet: Any = None, device: Any = None,
+                      overlap: bool = False) -> tuple:
+    """Price one round record -> ``(seconds, source)`` using the best
+    available predictor (fleet clock > recorded sim_round_s > single-device
+    roofline).  ``rr`` is duck-typed like the sim replays (a ``RoundResult``
+    or its serialized dict)."""
+    from repro.sim.clock import device_roofline_s, record_field, sync_round_s
+    if fleet is not None:
+        return float(sync_round_s(rr, fleet, overlap=overlap)), "fleet"
+    sim_s = float(record_field(rr, "sim_round_s", 0.0) or 0.0)
+    if sim_s > 0.0:
+        return sim_s, "sim_round_s"
+    if device is not None:
+        dev = _resolve_device(device)
+        terms = device_roofline_s(
+            float(record_field(rr, "flops_estimate", 0.0) or 0.0),
+            float(record_field(rr, "hbm_bytes_estimate", 0.0) or 0.0),
+            float(record_field(rr, "comm_bytes", 0) or 0), dev)
+        return (max(terms["compute"], terms["memory"])
+                + terms["collective"]), f"device:{dev.name}"
+    return 0.0, "none"
+
+
+def measured_round_s(rr: Any, tracer: Any = None) -> float:
+    """The round's measured seconds: the tracer's ``train.round`` span for
+    this round when one exists (span args carry ``round``), else the
+    engine's own ``round_time_s``.  The span and the perf_counter delta
+    bound the same interval — the tracer join exists so drift can be
+    computed for any phase the tracer names, not just whole rounds."""
+    from repro.sim.clock import record_field
+    t = int(record_field(rr, "round", 0))
+    if tracer is not None:
+        for e in tracer.events():
+            if (e.name == "train.round" and e.phase == "X"
+                    and (e.args or {}).get("round") == t):
+                return e.dur_us / 1e6
+    return float(record_field(rr, "round_time_s", 0.0) or 0.0)
+
+
+class DriftMonitor:
+    """Accumulates measured-vs-predicted rows and applies the warn rule."""
+
+    def __init__(self, warn_ratio: float = 4.0,
+                 metrics: Optional[MetricsRegistry] = None):
+        if warn_ratio < 1.0:
+            raise ValueError(f"warn_ratio {warn_ratio} < 1 (the rule is "
+                             f"symmetric: ratio outside [1/w, w] warns)")
+        self.warn_ratio = float(warn_ratio)
+        self.records: List[DriftRecord] = []
+        self._metrics = metrics if metrics is not None else _default_registry()
+
+    def observe(self, round: int, phase: str, measured_s: float,
+                predicted_s: float, source: str = "") -> DriftRecord:
+        """Join one (measured, predicted) pair; returns the banked row."""
+        if predicted_s > 0.0:
+            ratio: Optional[float] = measured_s / predicted_s
+            warn = not (1.0 / self.warn_ratio <= ratio <= self.warn_ratio)
+        else:
+            ratio, warn = None, True
+        rec = DriftRecord(round=int(round), phase=phase,
+                          measured_s=float(measured_s),
+                          predicted_s=float(predicted_s),
+                          ratio=ratio, warn=warn, source=source)
+        self.records.append(rec)
+        if ratio is not None:
+            self._metrics.histogram(f"drift.{phase}.ratio").observe(ratio)
+        self._metrics.counter("drift.rows").inc()
+        if warn:
+            self._metrics.counter("drift.warnings").inc()
+        return rec
+
+    def observe_round(self, rr: Any, *, fleet: Any = None, device: Any = None,
+                      overlap: bool = False, tracer: Any = None
+                      ) -> DriftRecord:
+        """Join one round record against the best available predictor."""
+        pred, source = predicted_round_s(rr, fleet=fleet, device=device,
+                                         overlap=overlap)
+        from repro.sim.clock import record_field
+        return self.observe(int(record_field(rr, "round", 0)), "round",
+                            measured_round_s(rr, tracer), pred, source)
+
+    # -- reporting ------------------------------------------------------
+
+    def warnings(self) -> List[DriftRecord]:
+        return [r for r in self.records if r.warn]
+
+    def rows(self) -> List[Dict[str, Any]]:
+        return [r.to_json() for r in self.records]
+
+    def lines(self) -> List[str]:
+        """Human-readable ledger (the train driver prints it)."""
+        out = [f"drift ledger: {len(self.records)} rows, "
+               f"{len(self.warnings())} warnings (warn outside "
+               f"[1/{self.warn_ratio:g}, {self.warn_ratio:g}]x)"]
+        for r in self.records:
+            ratio = f"{r.ratio:8.3f}x" if r.ratio is not None else "     n/a"
+            flag = "  WARN" if r.warn else ""
+            out.append(f"  round {r.round:3d} {r.phase:<10s} "
+                       f"measured {r.measured_s:9.3f}s  predicted "
+                       f"{r.predicted_s:9.3f}s  ratio {ratio} "
+                       f"[{r.source}]{flag}")
+        return out
+
+    def export(self, path: str) -> str:
+        """Write the ratio ledger as JSON (sorted keys, trailing newline;
+        ``ratio`` is null where the prediction was non-positive, so the
+        file is strict JSON)."""
+        d = os.path.dirname(os.path.abspath(path))
+        os.makedirs(d, exist_ok=True)
+        payload = {"warn_ratio": self.warn_ratio,
+                   "n_rows": len(self.records),
+                   "n_warnings": len(self.warnings()),
+                   "rows": self.rows()}
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+            f.write("\n")
+        return path
+
+
+def from_history(history: Sequence[Any], *, fleet: Any = None,
+                 device: Any = None, overlap: bool = False,
+                 warn_ratio: float = 4.0, tracer: Any = None,
+                 metrics: Optional[MetricsRegistry] = None) -> DriftMonitor:
+    """Build a monitor over a full session history (live ``RoundResult``
+    objects or the serialized dicts a checkpoint sidecar carries)."""
+    mon = DriftMonitor(warn_ratio=warn_ratio, metrics=metrics)
+    for rr in history:
+        mon.observe_round(rr, fleet=fleet, device=device, overlap=overlap,
+                          tracer=tracer)
+    return mon

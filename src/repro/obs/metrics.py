@@ -1,0 +1,241 @@
+"""Process-wide metrics: counters, gauges, histograms, exact quantiles.
+
+``MetricsRegistry`` is a named, typed bag of metrics with a thread-safe
+get-or-create API (``registry().counter("train.rounds").inc()``); a
+process-wide default registry backs the ``--metrics-out`` flags, and
+subsystems that need isolated accounting (e.g. one ``ServeMetrics`` per
+engine in a parity test) construct their own.
+
+Quantiles are EXACT and version-pinned: ``quantile`` implements linear
+interpolation between closest ranks (``h = (n-1)q``) in pure Python —
+the method numpy calls ``"linear"`` — so p50/p99 summaries cannot drift
+when numpy changes its default interpolation across versions (it did:
+the ``interpolation=`` -> ``method=`` migration).  ``summary_stats`` is
+the single mean/p50/p99 rule; ``repro.serve.metrics.percentiles``
+delegates here, which is what makes ``BENCH_serve.json`` percentile
+fields reproducible bit-for-bit on any numpy.
+
+Export is JSONL — one metric per line, sorted by name, deterministic —
+so two identical runs produce byte-identical files and downstream tools
+can stream-parse.
+
+>>> quantile([1.0, 2.0, 3.0, 4.0], 0.5)
+2.5
+>>> quantile([1.0, 2.0, 3.0, 4.0, 5.0], 0.25)
+2.0
+>>> summary_stats([3.0, 1.0, 2.0])["p50"]
+2.0
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import os
+import threading
+from typing import Any, Dict, Iterable, List, Optional, Union
+
+Number = Union[int, float]
+
+
+def quantile(xs: Iterable[Number], q: float) -> float:
+    """Exact q-quantile (0 <= q <= 1) by linear interpolation between
+    closest ranks: ``h = (n-1) q``, result = ``s[floor(h)] + frac(h) *
+    (s[ceil(h)] - s[floor(h)])`` over the sorted values.  Pure Python on
+    purpose — pinned against numpy method changes.  Empty input -> 0.0.
+
+    >>> quantile([], 0.5)
+    0.0
+    >>> quantile([7.0], 0.99)
+    7.0
+    """
+    if not 0.0 <= q <= 1.0:
+        raise ValueError(f"q {q} not in [0, 1]")
+    s = sorted(float(x) for x in xs)
+    if not s:
+        return 0.0
+    h = (len(s) - 1) * q
+    lo = math.floor(h)
+    hi = math.ceil(h)
+    if lo == hi:
+        return s[lo]
+    return s[lo] + (s[hi] - s[lo]) * (h - lo)
+
+
+def summary_stats(xs: Iterable[Number]) -> Dict[str, float]:
+    """The repo's one mean/p50/p99 rule (BENCH files, serve metrics,
+    histogram summaries all come through here)."""
+    vals = [float(x) for x in xs]
+    if not vals:
+        return {"mean": 0.0, "p50": 0.0, "p99": 0.0}
+    return {"mean": math.fsum(vals) / len(vals),
+            "p50": quantile(vals, 0.50),
+            "p99": quantile(vals, 0.99)}
+
+
+class Counter:
+    """Monotonically increasing count (events, tokens, bytes)."""
+
+    kind = "counter"
+
+    def __init__(self, name: str, help: str = ""):
+        self.name = name
+        self.help = help
+        self._value = 0.0
+        self._lock = threading.Lock()
+
+    def inc(self, n: Number = 1) -> None:
+        if n < 0:
+            raise ValueError(f"counter {self.name}: inc({n}) < 0")
+        with self._lock:
+            self._value += n
+
+    @property
+    def value(self) -> float:
+        return self._value
+
+    def to_json(self) -> Dict[str, Any]:
+        return {"name": self.name, "type": self.kind, "value": self._value}
+
+
+class Gauge:
+    """Last-written value (occupancy, queue depth, drift ratio)."""
+
+    kind = "gauge"
+
+    def __init__(self, name: str, help: str = ""):
+        self.name = name
+        self.help = help
+        self._value = 0.0
+
+    def set(self, v: Number) -> None:
+        self._value = float(v)
+
+    @property
+    def value(self) -> float:
+        return self._value
+
+    def to_json(self) -> Dict[str, Any]:
+        return {"name": self.name, "type": self.kind, "value": self._value}
+
+
+class Histogram:
+    """Value distribution with exact-quantile summaries.  Keeps every
+    observation (host floats — thousands of samples, not millions); the
+    summary computes min/max/mean and pinned p50/p90/p99."""
+
+    kind = "histogram"
+
+    def __init__(self, name: str, help: str = ""):
+        self.name = name
+        self.help = help
+        self._values: List[float] = []
+        self._lock = threading.Lock()
+
+    def observe(self, v: Number) -> None:
+        with self._lock:
+            self._values.append(float(v))
+
+    @property
+    def count(self) -> int:
+        return len(self._values)
+
+    @property
+    def sum(self) -> float:
+        return math.fsum(self._values)
+
+    def values(self) -> List[float]:
+        with self._lock:
+            return list(self._values)
+
+    def summary(self) -> Dict[str, float]:
+        vals = self.values()
+        if not vals:
+            return {"count": 0, "sum": 0.0, "min": 0.0, "max": 0.0,
+                    "mean": 0.0, "p50": 0.0, "p90": 0.0, "p99": 0.0}
+        return {"count": len(vals), "sum": math.fsum(vals),
+                "min": min(vals), "max": max(vals),
+                "mean": math.fsum(vals) / len(vals),
+                "p50": quantile(vals, 0.50), "p90": quantile(vals, 0.90),
+                "p99": quantile(vals, 0.99)}
+
+    def to_json(self) -> Dict[str, Any]:
+        return {"name": self.name, "type": self.kind, **self.summary()}
+
+
+class MetricsRegistry:
+    """Named, typed metric store.  Get-or-create semantics; re-requesting
+    a name under a different type raises instead of silently shadowing."""
+
+    def __init__(self):
+        self._metrics: Dict[str, Any] = {}
+        self._lock = threading.Lock()
+
+    def _get(self, cls, name: str, help: str):
+        with self._lock:
+            m = self._metrics.get(name)
+            if m is None:
+                m = cls(name, help)
+                self._metrics[name] = m
+            elif not isinstance(m, cls):
+                raise TypeError(
+                    f"metric {name!r} already registered as {m.kind}, "
+                    f"requested {cls.kind}")
+            return m
+
+    def counter(self, name: str, help: str = "") -> Counter:
+        return self._get(Counter, name, help)
+
+    def gauge(self, name: str, help: str = "") -> Gauge:
+        return self._get(Gauge, name, help)
+
+    def histogram(self, name: str, help: str = "") -> Histogram:
+        return self._get(Histogram, name, help)
+
+    def __len__(self) -> int:
+        return len(self._metrics)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._metrics
+
+    def names(self) -> List[str]:
+        return sorted(self._metrics)
+
+    def snapshot(self) -> Dict[str, Dict[str, Any]]:
+        """{name: metric JSON} for every registered metric (sorted)."""
+        with self._lock:
+            items = sorted(self._metrics.items())
+        return {name: m.to_json() for name, m in items}
+
+    def export_jsonl(self, path: str) -> str:
+        """One JSON object per line, sorted by metric name, trailing
+        newline — byte-identical across identical runs."""
+        d = os.path.dirname(os.path.abspath(path))
+        os.makedirs(d, exist_ok=True)
+        with open(path, "w") as f:
+            for _, payload in sorted(self.snapshot().items()):
+                f.write(json.dumps(payload, sort_keys=True) + "\n")
+        return path
+
+    def clear(self) -> None:
+        with self._lock:
+            self._metrics = {}
+
+
+_REGISTRY = MetricsRegistry()
+
+
+def registry() -> MetricsRegistry:
+    """The process-wide default registry (``--metrics-out`` exports it)."""
+    return _REGISTRY
+
+
+def load_jsonl(path: str) -> List[Dict[str, Any]]:
+    """Parse a metrics JSONL file back into its per-metric dicts."""
+    out = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                out.append(json.loads(line))
+    return out

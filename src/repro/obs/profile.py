@@ -1,0 +1,102 @@
+"""Opt-in profiler hooks: ``jax.profiler`` traces + compile-event capture.
+
+Two independent capture layers on top of the span tracer:
+
+  * ``jax_profile(outdir)`` — context manager around ``jax.profiler.trace``
+    (TensorBoard/XProf format, device-level detail).  ``outdir=None`` is a
+    no-op, so drivers can wire it unconditionally; a missing/broken
+    profiler degrades to the no-op with a warning instead of killing the
+    run (the container may lack libtpu/profiler support).
+
+  * ``capture_compiles()`` — registers a ``jax.monitoring`` listener that
+    turns every ``/jax/core/compile/*`` duration event (jaxpr trace, MLIR
+    lowering, backend compile) into a span on the process-wide tracer
+    (category ``compile``) and bumps ``compile.events`` /
+    ``compile.total_s`` in the metrics registry.  Compile time is the #1
+    confound in round-time drift — a retrace shows up as a fat span right
+    where the round got slow instead of as an unexplained 30s ratio spike.
+
+``record_compile`` is the explicit variant for compiles jax's monitoring
+cannot attribute: the round engines call it at trace time of their shard
+programs (wrapping the ``FedSession.shard_compiles`` counter), so the
+Perfetto timeline shows WHICH round and shard width paid each trace.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import time
+from typing import Any, Iterator, Optional
+
+from repro.obs.metrics import registry as _registry
+from repro.obs.trace import PID_MEASURED, get_tracer
+
+_COMPILE_LISTENER_INSTALLED = False
+
+
+def record_compile(what: str, **args: Any) -> None:
+    """Mark an explicit compile/trace event 'now' on the process-wide
+    tracer (instant, category ``compile``) and count it in the registry.
+    Cheap no-op while the tracer is disabled (the counter still counts —
+    compile counts are an invariant tests pin even without tracing)."""
+    _registry().counter("compile.events").inc()
+    tracer = get_tracer()
+    if tracer.enabled:
+        tracer.instant(f"compile/{what}", cat="compile", **args)
+
+
+def _on_duration_event(event: str, duration_secs: float, **kw: Any) -> None:
+    """jax.monitoring listener: compile-phase durations -> tracer spans.
+    The event fires at phase END, so the span is backdated by its own
+    duration; non-compile events are ignored."""
+    if "compile" not in event:
+        return
+    name = event.rsplit("/", 1)[-1]
+    if name.endswith("_duration"):
+        name = name[: -len("_duration")]
+    _registry().counter("compile.events").inc()
+    _registry().counter("compile.total_s").inc(max(duration_secs, 0.0))
+    tracer = get_tracer()
+    if not tracer.enabled:
+        return
+    now_s = (time.perf_counter_ns() - tracer._epoch_ns) / 1e9
+    tracer.add_span(f"compile/{name}", ts_s=now_s - duration_secs,
+                    dur_s=duration_secs, cat="compile", pid=PID_MEASURED,
+                    tid=0)
+
+
+def capture_compiles() -> bool:
+    """Install the compile-event listener (idempotent).  Returns True when
+    the listener is active; False when this jax build has no
+    ``jax.monitoring`` duration events to subscribe to."""
+    global _COMPILE_LISTENER_INSTALLED
+    if _COMPILE_LISTENER_INSTALLED:
+        return True
+    try:
+        from jax import monitoring
+        monitoring.register_event_duration_secs_listener(_on_duration_event)
+    except Exception:
+        return False
+    _COMPILE_LISTENER_INSTALLED = True
+    return True
+
+
+@contextlib.contextmanager
+def jax_profile(outdir: Optional[str]) -> Iterator[None]:
+    """``with jax_profile(dir):`` wraps the body in a ``jax.profiler``
+    trace written to ``dir`` (viewable in TensorBoard / xprof / Perfetto).
+    ``outdir`` of None/"" is a no-op; a profiler that fails to start
+    degrades to the no-op with a warning (some hosts lack the backend)."""
+    if not outdir:
+        yield
+        return
+    try:
+        import jax.profiler as jp
+        ctx = jp.trace(outdir)
+    except Exception as e:                        # pragma: no cover
+        print(f"obs.profile: jax profiler unavailable ({e}); "
+              f"continuing without device trace")
+        yield
+        return
+    with ctx:
+        yield

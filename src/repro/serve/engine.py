@@ -42,6 +42,8 @@ import numpy as np
 
 from repro.models.steps import (make_prefill_step, make_serve_step,
                                 make_slot_serve_step)
+from repro.obs.metrics import registry as _obs_registry
+from repro.obs.trace import span as _obs_span
 from repro.serve.cache import SlotCachePool
 from repro.serve.metrics import FiniteTrace, RequestRecord, ServeMetrics
 from repro.serve.requests import Request, prompt_batch, request_batch
@@ -209,28 +211,32 @@ class DecodeEngine:
             raise RuntimeError("admit with no free slot")
         self._check_capacity(request)
         slot = free[0]
-        t_admit = clock.now()
-        batch = {"tokens": jnp.asarray(request.tokens[None])}
-        if request.extras:
-            for k, v in request.extras.items():
-                batch[k] = jnp.asarray(v[None])
-        tok, fin, cache1 = self._admit(
-            self.params, batch, jnp.int32(request.seed),
-            jnp.int32(request.prompt_len), jnp.float32(request.temperature))
-        tok_i, fin_b = jax.device_get((tok, fin))            # syncs
-        tok_i = int(tok_i)
-        self._finite[slot] = bool(fin_b)
-        self._active[slot] = True
-        self._seeds[slot] = request.seed
-        self._temps[slot] = request.temperature
-        self.pool.write(slot, cache1)
-        t_first = clock.now()
-        self.slots[slot] = _Slot(request=request, out=[tok_i],
-                                 n_generated=1, admit_s=t_admit,
-                                 first_token_s=t_first)
-        self._next_np[slot, 0, 0] = tok_i
-        if self._stopped(request, tok_i, 1):
-            self._complete(slot, t_first)
+        with _obs_span("serve.admit", cat="serve", rid=request.rid,
+                       slot=slot, prompt_len=request.prompt_len):
+            t_admit = clock.now()
+            batch = {"tokens": jnp.asarray(request.tokens[None])}
+            if request.extras:
+                for k, v in request.extras.items():
+                    batch[k] = jnp.asarray(v[None])
+            tok, fin, cache1 = self._admit(
+                self.params, batch, jnp.int32(request.seed),
+                jnp.int32(request.prompt_len),
+                jnp.float32(request.temperature))
+            tok_i, fin_b = jax.device_get((tok, fin))        # syncs
+            tok_i = int(tok_i)
+            self._finite[slot] = bool(fin_b)
+            self._active[slot] = True
+            self._seeds[slot] = request.seed
+            self._temps[slot] = request.temperature
+            self.pool.write(slot, cache1)
+            t_first = clock.now()
+            self.slots[slot] = _Slot(request=request, out=[tok_i],
+                                     n_generated=1, admit_s=t_admit,
+                                     first_token_s=t_first)
+            self._next_np[slot, 0, 0] = tok_i
+            if self._stopped(request, tok_i, 1):
+                self._complete(slot, t_first)
+        _obs_registry().counter("serve.admits").inc()
         return slot
 
     @staticmethod
@@ -244,25 +250,28 @@ class DecodeEngine:
         active = [i for i, s in enumerate(self.slots) if s is not None]
         if not active:
             return
-        toks_d, fin_d, self.pool.pool = self._kernel(
-            self.params, self._next_np, self.pool.pool, self._finite,
-            self._active, self._seeds, self._temps)
-        toks, fin = jax.device_get((toks_d, fin_d))          # syncs
-        self._finite = np.array(fin)            # device_get is read-only
-        clock.tick()
-        now = clock.now()
-        used = sum(min(self.slots[i].request.prompt_len
-                       + self.slots[i].n_generated, self.pool.slot_tokens)
-                   for i in active)
-        for i in active:
-            s = self.slots[i]
-            tok_i = int(toks[i])
-            s.out.append(tok_i)
-            s.n_generated += 1
-            self._next_np[i, 0, 0] = tok_i
-            if self._stopped(s.request, tok_i, s.n_generated):
-                self._complete(i, now)
-        self.metrics.on_step(len(active), used)
+        with _obs_span("serve.decode_step", cat="serve", active=len(active)):
+            toks_d, fin_d, self.pool.pool = self._kernel(
+                self.params, self._next_np, self.pool.pool, self._finite,
+                self._active, self._seeds, self._temps)
+            toks, fin = jax.device_get((toks_d, fin_d))      # syncs
+            self._finite = np.array(fin)        # device_get is read-only
+            clock.tick()
+            now = clock.now()
+            used = sum(min(self.slots[i].request.prompt_len
+                           + self.slots[i].n_generated,
+                           self.pool.slot_tokens)
+                       for i in active)
+            for i in active:
+                s = self.slots[i]
+                tok_i = int(toks[i])
+                s.out.append(tok_i)
+                s.n_generated += 1
+                self._next_np[i, 0, 0] = tok_i
+                if self._stopped(s.request, tok_i, s.n_generated):
+                    self._complete(i, now)
+            self.metrics.on_step(len(active), used)
+        _obs_registry().counter("serve.decode_steps").inc()
 
     def _complete(self, slot: int, now: float) -> None:
         s = self.slots[slot]
@@ -288,21 +297,24 @@ class DecodeEngine:
         s = self.slots[slot]
         if s is None:
             raise ValueError(f"slot {slot} is empty")
-        snap = {
-            "cache": self.pool.extract(slot),
-            "request": s.request,
-            "out": list(s.out),
-            "n_generated": s.n_generated,
-            "next_token": int(self._next_np[slot, 0, 0]),
-            "finite": bool(self._finite[slot]),
-            "admit_s": s.admit_s,
-            "first_token_s": s.first_token_s,
-            "evictions": s.evictions + 1,
-        }
-        self.slots[slot] = None
-        self._next_np[slot, 0, 0] = _PAD_ID
-        self._finite[slot] = True
-        self._active[slot] = False
+        with _obs_span("serve.evict", cat="serve", slot=slot,
+                       rid=s.request.rid):
+            snap = {
+                "cache": self.pool.extract(slot),
+                "request": s.request,
+                "out": list(s.out),
+                "n_generated": s.n_generated,
+                "next_token": int(self._next_np[slot, 0, 0]),
+                "finite": bool(self._finite[slot]),
+                "admit_s": s.admit_s,
+                "first_token_s": s.first_token_s,
+                "evictions": s.evictions + 1,
+            }
+            self.slots[slot] = None
+            self._next_np[slot, 0, 0] = _PAD_ID
+            self._finite[slot] = True
+            self._active[slot] = False
+        _obs_registry().counter("serve.evictions").inc()
         return snap
 
     def readmit(self, snap: Dict[str, Any]) -> int:
@@ -313,17 +325,20 @@ class DecodeEngine:
         if not free:
             raise RuntimeError("readmit with no free slot")
         slot = free[0]
-        self.pool.insert(slot, snap["cache"])
-        self.slots[slot] = _Slot(
-            request=snap["request"], out=list(snap["out"]),
-            n_generated=snap["n_generated"], admit_s=snap["admit_s"],
-            first_token_s=snap["first_token_s"],
-            evictions=snap["evictions"])
-        self._next_np[slot, 0, 0] = snap["next_token"]
-        self._finite[slot] = snap["finite"]
-        self._active[slot] = True
-        self._seeds[slot] = snap["request"].seed
-        self._temps[slot] = snap["request"].temperature
+        with _obs_span("serve.readmit", cat="serve", slot=slot,
+                       rid=snap["request"].rid):
+            self.pool.insert(slot, snap["cache"])
+            self.slots[slot] = _Slot(
+                request=snap["request"], out=list(snap["out"]),
+                n_generated=snap["n_generated"], admit_s=snap["admit_s"],
+                first_token_s=snap["first_token_s"],
+                evictions=snap["evictions"])
+            self._next_np[slot, 0, 0] = snap["next_token"]
+            self._finite[slot] = snap["finite"]
+            self._active[slot] = True
+            self._seeds[slot] = snap["request"].seed
+            self._temps[slot] = snap["request"].temperature
+        _obs_registry().counter("serve.readmits").inc()
         return slot
 
     # ------------------------------------------------------------------

@@ -26,6 +26,7 @@ from typing import Any, Dict, List, Optional
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs.metrics import MetricsRegistry, summary_stats
 from repro.serve.requests import tokens_per_s
 
 
@@ -52,35 +53,46 @@ class RequestRecord:
 
 
 def percentiles(xs: List[float]) -> Dict[str, float]:
-    if not xs:
-        return {"mean": 0.0, "p50": 0.0, "p99": 0.0}
-    a = np.asarray(xs, np.float64)
-    return {"mean": float(a.mean()),
-            "p50": float(np.percentile(a, 50)),
-            "p99": float(np.percentile(a, 99))}
+    """mean/p50/p99 via the repo's single pinned rule
+    (:func:`repro.obs.metrics.summary_stats` — exact linear interpolation,
+    immune to numpy percentile-method changes)."""
+    return summary_stats(xs)
 
 
 class ServeMetrics:
-    """Accumulates request records and per-step occupancy samples."""
+    """Accumulates request records and per-step occupancy samples on a
+    PRIVATE :class:`MetricsRegistry` (one per engine — parity tests run
+    two engines in one process, so the process-wide registry would
+    cross-contaminate their summaries; the engine's span/counter
+    instrumentation feeds the global registry separately)."""
 
     def __init__(self, n_slots: int, slot_tokens: int):
         self.n_slots = int(n_slots)
         self.slot_tokens = int(slot_tokens)   # KV/state capacity per slot
         self.records: List[RequestRecord] = []
-        self._slot_samples: List[float] = []
-        self._cache_samples: List[float] = []
-        self._steps = 0
+        self.registry = MetricsRegistry()
 
     def on_step(self, n_active: int, cache_tokens_used: int) -> None:
         """One decode step over the slot pool: ``n_active`` slots held live
         requests; ``cache_tokens_used`` cache positions held real tokens."""
-        self._steps += 1
-        self._slot_samples.append(n_active / max(self.n_slots, 1))
+        self.registry.counter("serve.decode_steps").inc()
+        self.registry.histogram("serve.slot_occupancy").observe(
+            n_active / max(self.n_slots, 1))
         cap = self.n_slots * max(self.slot_tokens, 1)
-        self._cache_samples.append(cache_tokens_used / cap)
+        self.registry.histogram("serve.cache_occupancy").observe(
+            cache_tokens_used / cap)
 
     def finish(self, record: RequestRecord) -> None:
         self.records.append(record)
+        self.registry.counter("serve.requests").inc()
+        self.registry.counter("serve.generated_tokens").inc(
+            record.n_generated)
+        self.registry.histogram("serve.ttft_s").observe(record.ttft_s)
+        self.registry.histogram("serve.latency_s").observe(record.latency_s)
+
+    @property
+    def _steps(self) -> int:
+        return int(self.registry.counter("serve.decode_steps").value)
 
     def summary(self) -> Dict[str, Any]:
         recs = sorted(self.records, key=lambda r: r.rid)
@@ -90,6 +102,8 @@ class ServeMetrics:
                     - min(r.arrival_s for r in recs))
         else:
             span = 0.0
+        slot = self.registry.histogram("serve.slot_occupancy").summary()
+        cache = self.registry.histogram("serve.cache_occupancy").summary()
         return {
             "n_requests": len(recs),
             "generated_tokens": total_tokens,
@@ -98,10 +112,8 @@ class ServeMetrics:
             "tokens_per_s": tokens_per_s(total_tokens, span),
             "ttft_s": percentiles([r.ttft_s for r in recs]),
             "latency_s": percentiles([r.latency_s for r in recs]),
-            "slot_occupancy": (float(np.mean(self._slot_samples))
-                               if self._slot_samples else 0.0),
-            "cache_occupancy": (float(np.mean(self._cache_samples))
-                                if self._cache_samples else 0.0),
+            "slot_occupancy": slot["mean"],
+            "cache_occupancy": cache["mean"],
         }
 
 

@@ -24,8 +24,8 @@ from repro.sim.clock import (ClientTiming, client_timing, comm_time_s,
                              device_roofline_s, ledger_lists, phase_total_s,
                              record_field, resolve_fleet, round_timings,
                              step_time_s, sync_round_s)
-from repro.sim.events import (RoundSim, SimReport, ledger_lines, simulate,
-                              simulate_async, simulate_deadline,
+from repro.sim.events import (RoundSim, SimReport, emit_spans, ledger_lines,
+                              simulate, simulate_async, simulate_deadline,
                               simulate_sync)
 from repro.sim.fleet import (FLEET_MIXES, FLEETS, PRESETS, DeviceProfile,
                              Fleet, gbps, make_fleet, mbps, sample_fleet)
@@ -35,7 +35,8 @@ __all__ = [
     "PAPER_2080TI_EPOCH", "PAPER_2080TI_ROUND", "PRESETS",
     "CalibrationPoint", "ClientTiming", "DeviceProfile", "EfficiencyFit",
     "Fleet", "RoundSim", "SimReport", "apply_fit", "calibrate_presets",
-    "client_timing", "comm_time_s", "device_roofline_s", "fit_device",
+    "client_timing", "comm_time_s", "device_roofline_s", "emit_spans",
+    "fit_device",
     "gbps", "ledger_lines", "ledger_lists", "make_fleet", "mbps",
     "phase_total_s", "predict_round_s", "record_field", "resolve_fleet",
     "round_timings", "sample_fleet",

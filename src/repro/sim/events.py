@@ -360,6 +360,53 @@ def simulate(history: Sequence[Any], fleet: Fleet, *, mode: str = "sync",
     raise ValueError(f"unknown mode {mode!r} (sync | deadline | async)")
 
 
+def emit_spans(report: SimReport, tracer: Any = None) -> int:
+    """Replay a simulated session onto the span tracer as synthetic spans
+    so simulated and measured rounds render side-by-side in one Perfetto
+    timeline (the sim lands in its own process lane, ``PID_SIM``).
+
+    Track layout: tid 0 is the server — one ``sim.round`` span per
+    aggregation over ``[t_start, t_end]``.  tid ``client+1`` is that
+    client's track: one ``sim.client`` span whose duration is EXACTLY
+    ``timing.total(report.overlap)`` (the number the drift monitor and
+    parity tests join against), containing ``sim.down``/``sim.compute``/
+    ``sim.up`` phase spans.  Phases are laid out sequentially from
+    ``t_start``; under the overlap clock the durations stay truthful while
+    the layout is nominal (the real phases pipeline).  Async reports carry
+    no per-client timings — only server spans are emitted.
+
+    Returns the number of spans emitted (0 when the tracer is disabled —
+    synthetic spans respect the same opt-in as measured ones)."""
+    from repro.obs.trace import PID_SIM, get_tracer
+    tracer = tracer if tracer is not None else get_tracer()
+    if not tracer.enabled:
+        return 0
+    n = 0
+    for r in report.rounds:
+        tracer.add_span("sim.round", ts_s=r.t_start, dur_s=r.round_s,
+                        cat="sim", pid=PID_SIM, tid=0, round=r.round,
+                        mode=report.mode, clients=len(r.clients),
+                        dropped=len(r.dropped))
+        n += 1
+        for tm in r.timings:
+            tid = int(tm.client) + 1
+            tracer.add_span("sim.client", ts_s=r.t_start,
+                            dur_s=tm.total(report.overlap), cat="sim",
+                            pid=PID_SIM, tid=tid, round=r.round,
+                            client=tm.client, device=tm.device,
+                            n_steps=tm.n_steps)
+            t = r.t_start
+            for phase, dur in (("down", tm.down_s),
+                               ("compute", tm.compute_s),
+                               ("up", tm.up_s)):
+                tracer.add_span(f"sim.{phase}", ts_s=t, dur_s=dur,
+                                cat="sim", pid=PID_SIM, tid=tid,
+                                round=r.round, client=tm.client)
+                t += dur
+            n += 4
+    return n
+
+
 def ledger_lines(report: SimReport) -> List[str]:
     """Human-readable per-aggregation ledger (the train driver prints it)."""
     clock = " clock=overlap" if report.overlap else ""

@@ -12,14 +12,15 @@ from repro.telemetry.hlo import (DTYPE_BYTES, Computation, Op,
                                  parse_computations, shape_bytes, shape_dims,
                                  trip_count, while_parts)
 from repro.telemetry.step import (StepCost, batch_struct, client_step_cost,
-                                  client_step_costs, shard_epoch_cost,
-                                  train_batch_struct)
+                                  client_step_costs, decode_step_cost,
+                                  shard_epoch_cost, train_batch_struct)
 
 __all__ = [
     "COLLECTIVES", "DTYPE_BYTES", "Computation", "HloStats", "Op",
     "StepCost", "analyze", "batch_struct", "client_step_cost",
     "client_step_costs",
-    "collective_kind", "cond_trip_count", "conv_flops", "dot_flops",
+    "collective_kind", "cond_trip_count", "conv_flops", "decode_step_cost",
+    "dot_flops",
     "entry_name", "multiplicities", "op_hbm_bytes", "parse_computations",
     "parse_op", "shape_bytes", "shape_dims", "shard_epoch_cost",
     "top_contributors",

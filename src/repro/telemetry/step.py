@@ -176,6 +176,41 @@ def shard_epoch_cost(cfg, optimizer, strategy, batch_sds: Dict[str, Any], *,
     return cost
 
 
+def decode_step_cost(cfg, n_slots: int, cache_len: int, *,
+                     impl: str = "xla") -> StepCost:
+    """Analyze (cached) ONE slot-vmapped decode step — the exact program
+    family ``DecodeEngine``'s fused kernel dispatches per token, minus the
+    sampling epilogue (elementwise + argmax: FLOP-free under the dot/conv
+    metric and a rounding error in HBM terms).  The serve driver prices a
+    decode step on a device roofline from this for its drift monitor."""
+    key = ("decode_step", cfg, n_slots, cache_len, impl)
+    if key in _COST_CACHE:
+        return _COST_CACHE[key]
+
+    from repro.models.model import cache_struct, init_model
+    from repro.models.steps import make_slot_serve_step
+    from repro.nn import param as P
+
+    vserve = make_slot_serve_step(cfg, impl=impl)
+    struct = cache_struct(cfg, 1, cache_len)
+    pool_sds = jax.tree.map(
+        lambda b: jax.ShapeDtypeStruct((n_slots,) + b.value.shape,
+                                       b.value.dtype),
+        struct, is_leaf=P.is_box)
+    toks_sds = jax.ShapeDtypeStruct((n_slots, 1, 1), jnp.int32)
+    params_sds = jax.eval_shape(
+        lambda k: P.unbox(init_model(k, cfg)), jax.random.PRNGKey(0))
+    compiled = jax.jit(
+        lambda p, t, pool: vserve(p, {"tokens": t}, pool)).lower(
+            params_sds, toks_sds, pool_sds).compile()
+    stats = analyze(compiled.as_text())
+    cost = StepCost(flops=float(stats.dot_flops),
+                    hbm_bytes=float(stats.hbm_bytes),
+                    collective_bytes=float(stats.collective_total))
+    _COST_CACHE[key] = cost
+    return cost
+
+
 def client_step_costs(cfg, optimizer, strategy,
                       batch_sds_list: Sequence[Dict[str, Any]], *,
                       frozen_list: Optional[Sequence[Optional[Tuple[bool, ...]]]] = None,

@@ -1,0 +1,205 @@
+"""Kernel + train-step entries of the perf trajectory.
+
+Drives the SAME case registry the conformance pytest suite sweeps
+(``repro.conformance.CASES``) — correctness always, timing per case — and
+prices the train hot path through the existing round engine + analytic
+telemetry.  Two trajectory files:
+
+  * ``BENCH_kernels.json`` — one row per conformance case: forward / VJP /
+    chain violation ratios against the ``kernels/ref.py`` oracles, plus
+    jit'd kernel-vs-ref wall-clock.  **Interpret-mode-aware**: on a
+    non-TPU backend the Pallas kernels run interpreted (Python-stepped),
+    so speed ratios are recorded for the record but only *asserted* when
+    ``interpret`` is false; correctness is asserted unconditionally.
+  * ``BENCH_train.json`` — warm-round wall-clock of a tiny ``FedSession``
+    (parallel engine), the analytic per-client step cost
+    (``telemetry.client_step_cost``), and a measured-vs-predicted drift
+    row (``obs.DriftMonitor`` against a device-roofline prediction).
+
+Both validate under ``scripts/bench_check.py`` (schemas ``kernels`` /
+``train_step``).
+
+    PYTHONPATH=src python benchmarks/kernel_bench.py                # full
+    PYTHONPATH=src python benchmarks/kernel_bench.py --tiny \
+        --out /tmp/k.json --train-out /tmp/t.json                   # CI smoke
+
+``--tiny`` runs one fp32 lattice case per kernel plus one chain case per
+scan (correctness + timing, 1 rep) and a 2-round train session — the
+producer-rot leg of ``scripts/kernel_smoke.sh``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+import jax
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+from repro import conformance as cf          # noqa: E402
+from repro import obs, optim, telemetry      # noqa: E402
+from repro.configs import get_config         # noqa: E402
+from repro.core.noniid import make_client_pool        # noqa: E402
+from repro.core.rounds import FedSession, RoundPlan   # noqa: E402
+from repro.core.strategy import FedAvg       # noqa: E402
+from repro.data.corpus import generate_corpus         # noqa: E402
+from repro.models.model import init_model    # noqa: E402
+from repro.nn import param as P              # noqa: E402
+from repro.serve import write_bench          # noqa: E402
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# speed floor asserted per kernel (median fp32 speedup) — ONLY off-interpret
+COMPILED_SPEEDUP_FLOOR = 1.0
+
+
+def tiny_cases():
+    """One fp32 lattice case per kernel + one chain case per scan."""
+    picked = []
+    for kernel in cf.KERNEL_NAMES:
+        for c in cf.iter_cases(kernel=kernel, tags=("lattice",)):
+            if c.dtype == "float32":
+                picked.append(c)
+                break
+    for kernel in ("rwkv6_scan", "mamba2_scan"):
+        picked.append(cf.iter_cases(kernel=kernel, tags=("chain",))[0])
+    return picked
+
+
+def kernels_payload(cases, *, reps: int, grid: str) -> dict:
+    results = cf.run_grid(cases, timed=True, reps=reps,
+                          progress=lambda r: print(
+                              f"  {r.name}: ok={r.ok} "
+                              f"fwd={r.fwd_violation:.3f} "
+                              f"kernel={r.kernel_ms:.2f}ms "
+                              f"ref={r.ref_ms:.2f}ms", flush=True))
+    bad = [r.name for r in results if not r.ok]
+    assert not bad, f"conformance failures: {bad}"
+
+    summary = cf.summarize(results)
+    med = {}
+    for kernel in cf.KERNEL_NAMES:
+        sp = sorted(r.speedup for r in results
+                    if r.kernel == kernel and r.dtype == "float32"
+                    and r.speedup)
+        if sp:
+            med[kernel] = round(sp[len(sp) // 2], 4)
+    summary["median_fp32_speedup"] = med
+
+    interp = cf.interpret_mode()
+    if not interp:       # compiled backend: the wins are load-bearing
+        slow = {k: v for k, v in med.items() if v < COMPILED_SPEEDUP_FLOOR}
+        assert not slow, f"compiled kernels slower than ref: {slow}"
+
+    return {
+        "benchmark": "kernels",
+        "grid": grid,
+        "backend": jax.default_backend(),
+        "interpret": interp,
+        "jax_version": jax.__version__,
+        "tolerance_ladder": cf.ladder(),
+        "summary": summary,
+        "rows": [r.to_row() for r in results],
+        "note": "violations are max |got-want|/(atol+rtol*|want|) vs the "
+                "kernels/ref.py oracle (<=1 passes); speed ratios under "
+                "interpret=true are Python-stepped Pallas and NOT asserted "
+                "— see docs/kernels.md",
+    }
+
+
+def train_payload(*, arch: str, cohort: int, rounds: int, batch: int,
+                  seq: int, steps: int, seed: int, device: str) -> dict:
+    cfg = get_config(arch).reduced()
+    optimizer = optim.adam(1e-3)
+    params0 = P.unbox(init_model(jax.random.PRNGKey(seed), cfg))
+    corpus = generate_corpus(40, seed=seed)
+    pool = make_client_pool(corpus, cfg, n_clients=cohort, pool=2,
+                            batch=batch, seq=seq, seed=seed, limit=steps)
+    plan = RoundPlan(n_rounds=rounds, engine="parallel", seed=seed,
+                     telemetry=True)
+    _, hist = FedSession(cfg, optimizer, plan).run(params0, pool)
+    warm = min(h.round_time_s for h in hist[1:])
+    rr = hist[-1]
+
+    cost = telemetry.client_step_cost(
+        cfg, optimizer, FedAvg(), telemetry.train_batch_struct(cfg, batch,
+                                                               seq))
+    mon = obs.DriftMonitor()
+    rec = mon.observe_round(rr, device=device)
+
+    return {
+        "benchmark": "train_step",
+        "arch": cfg.name,
+        "engine": "parallel",
+        "cohort": cohort,
+        "local_steps": steps,
+        "batch": batch,
+        "seq": seq,
+        "rounds_timed": rounds,
+        "warm_round_s": round(warm, 6),
+        "clients_per_s": round(cohort / warm, 2),
+        "step_cost": {"flops": cost.flops, "hbm_bytes": cost.hbm_bytes,
+                      "collective_bytes": cost.collective_bytes},
+        "drift": {"phase": rec.phase, "measured_s": rec.measured_s,
+                  "predicted_s": rec.predicted_s, "ratio": rec.ratio,
+                  "source": rec.source, "warn": rec.warn,
+                  "device": device},
+        "note": "warm-round host wall-clock vs the %s roofline prediction; "
+                "the drift row is recorded, not asserted (host is not the "
+                "modeled device)" % device,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: one lattice case per kernel + scan "
+                         "chain cases, 1 timing rep, 2-round train session")
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--arch", default="distilbert-mlm")
+    ap.add_argument("--cohort", type=int, default=8)
+    ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--device", default="rtx2080ti",
+                    help="sim.fleet preset used for the drift prediction")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--skip-train", action="store_true")
+    ap.add_argument("--skip-kernels", action="store_true")
+    ap.add_argument("--out", default=os.path.join(ROOT, "BENCH_kernels.json"))
+    ap.add_argument("--train-out",
+                    default=os.path.join(ROOT, "BENCH_train.json"))
+    ap.add_argument("--trace-out", default="",
+                    help="enable the span tracer; per-case "
+                         "conformance.case spans land in this Chrome trace")
+    args = ap.parse_args()
+
+    if args.trace_out:
+        obs.enable()
+
+    if not args.skip_kernels:
+        if args.tiny:
+            cases, reps, grid = tiny_cases(), 1, "tiny"
+        else:
+            cases, reps, grid = cf.CASES, args.reps, "full"
+        print(f"kernel grid: {len(cases)} cases "
+              f"(interpret={cf.interpret_mode()})")
+        payload = kernels_payload(cases, reps=reps, grid=grid)
+        print(f"wrote {write_bench(args.out, payload)}")
+
+    if not args.skip_train:
+        rounds = 2 if args.tiny else args.rounds
+        payload = train_payload(arch=args.arch, cohort=args.cohort,
+                                rounds=rounds, batch=2, seq=32, steps=1,
+                                seed=args.seed, device=args.device)
+        print(f"warm round {payload['warm_round_s']}s "
+              f"({payload['clients_per_s']} clients/s)")
+        print(f"wrote {write_bench(args.train_out, payload)}")
+
+    if args.trace_out:
+        print(f"chrome trace: {obs.get_tracer().export(args.trace_out)}")
+
+
+if __name__ == "__main__":
+    main()

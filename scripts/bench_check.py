@@ -7,7 +7,13 @@ drifting between inline heredocs in each smoke script:
   * ``serve``            — ``benchmarks/serving.py`` (two-mode payload with
     bitwise parity + throughput ratio) and ``repro.launch.serve
     --bench-out`` (single-mode payload);
-  * ``round_throughput`` — ``benchmarks/round_throughput.py``.
+  * ``round_throughput`` — ``benchmarks/round_throughput.py``;
+  * ``kernels``          — ``benchmarks/kernel_bench.py`` (conformance grid:
+    every row must pass its tolerance rung; a ``grid: "full"`` payload must
+    also cover all four kernels with >= 40 cases incl. VJP + chain, and a
+    non-interpret payload must pin per-kernel speed wins);
+  * ``train_step``       — ``benchmarks/kernel_bench.py`` (warm-round train
+    hot path + analytic step cost + measured-vs-predicted drift row).
 
 Usage::
 
@@ -100,8 +106,89 @@ def check_round_throughput(path: str, bench: dict) -> str:
     return f"round_throughput: {len(bench['rows'])} cohort rows"
 
 
+FULL_GRID_MIN_CASES = 40
+KERNEL_NAMES = ("flash_attention", "rwkv6_scan", "mamba2_scan", "moe_gmm")
+
+
+def check_kernels(path: str, bench: dict) -> str:
+    for key in ("grid", "backend", "interpret", "jax_version",
+                "tolerance_ladder", "summary", "rows"):
+        _require(key in bench, path, f"missing top-level key {key!r}")
+    rows = bench["rows"]
+    _require(rows, path, "empty rows")
+    row_keys = {"name", "kernel", "dtype", "tags", "ok", "fwd_violation",
+                "vjp_violation", "chain_violation", "interpret"}
+    names = set()
+    for row in rows:
+        missing = row_keys - set(row)
+        _require(not missing, path,
+                 f"row {row.get('name')} missing {sorted(missing)}")
+        _require(row["kernel"] in KERNEL_NAMES, path,
+                 f"row {row['name']}: unknown kernel {row['kernel']!r}")
+        _require(row["name"] not in names, path,
+                 f"duplicate case name {row['name']!r}")
+        names.add(row["name"])
+        _require(row["ok"] is True, path,
+                 f"case {row['name']} FAILED its tolerance rung "
+                 f"(fwd={row['fwd_violation']} vjp={row['vjp_violation']} "
+                 f"chain={row['chain_violation']})")
+        for d in ("fwd_violation", "vjp_violation", "chain_violation"):
+            v = row[d]
+            _require(v is None or 0.0 <= v <= 1.0, path,
+                     f"case {row['name']}: {d}={v} out of [0, 1]")
+    summary = bench["summary"]
+    _require(summary.get("n_failed") == 0, path,
+             f"summary reports {summary.get('n_failed')} failed cases")
+    if bench["grid"] == "full":
+        _require(len(rows) >= FULL_GRID_MIN_CASES, path,
+                 f"full grid has {len(rows)} cases "
+                 f"(< {FULL_GRID_MIN_CASES})")
+        for kernel in KERNEL_NAMES:
+            krows = [r for r in rows if r["kernel"] == kernel]
+            _require(krows, path, f"full grid missing kernel {kernel!r}")
+            _require(any(r["vjp_violation"] is not None for r in krows),
+                     path, f"full grid: no VJP coverage for {kernel!r}")
+        _require(any(r["chain_violation"] is not None for r in rows), path,
+                 "full grid: no state-chaining coverage")
+    if bench["interpret"] is False:
+        med = summary.get("median_fp32_speedup", {})
+        _require(bool(med), path,
+                 "compiled run must record median_fp32_speedup")
+        slow = {k: v for k, v in med.items() if v < 1.0}
+        _require(not slow, path, f"compiled kernels slower than ref: {slow}")
+    mode = "interpret" if bench["interpret"] else "compiled"
+    return (f"kernels ({bench['grid']}, {mode}): {len(rows)} cases, "
+            f"worst fwd violation "
+            f"{summary['worst_violation']['fwd']:.3f}")
+
+
+def check_train(path: str, bench: dict) -> str:
+    for key in ("arch", "engine", "cohort", "local_steps", "batch", "seq",
+                "warm_round_s", "clients_per_s", "step_cost", "drift"):
+        _require(key in bench, path, f"missing top-level key {key!r}")
+    _require(bench["warm_round_s"] > 0, path, "warm_round_s must be > 0")
+    _require(bench["clients_per_s"] > 0, path, "clients_per_s must be > 0")
+    cost = bench["step_cost"]
+    for key in ("flops", "hbm_bytes", "collective_bytes"):
+        _require(key in cost, path, f"step_cost missing {key!r}")
+    _require(cost["flops"] > 0, path, "step_cost.flops must be > 0")
+    _require(cost["hbm_bytes"] > 0, path, "step_cost.hbm_bytes must be > 0")
+    drift = bench["drift"]
+    for key in ("phase", "measured_s", "predicted_s", "ratio", "source",
+                "warn", "device"):
+        _require(key in drift, path, f"drift missing {key!r}")
+    _require(drift["predicted_s"] > 0, path,
+             "drift.predicted_s must be > 0 (no predictor resolved)")
+    _require(drift["ratio"] is not None and drift["ratio"] > 0, path,
+             "drift.ratio must be a positive number")
+    return (f"train_step: warm round {bench['warm_round_s']}s, drift "
+            f"ratio {drift['ratio']:.3g} ({drift['source']})")
+
+
 CHECKERS = {"serve": check_serve,
-            "round_throughput": check_round_throughput}
+            "round_throughput": check_round_throughput,
+            "kernels": check_kernels,
+            "train_step": check_train}
 
 
 def check_file(path: str) -> str:

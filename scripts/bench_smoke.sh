@@ -21,6 +21,9 @@ python scripts/bench_check.py
 echo "== round_throughput (tiny) =="
 scripts/train_env.sh python benchmarks/round_throughput.py --tiny
 
+echo "== kernel conformance smoke (tiny grid + schema check) =="
+bash scripts/kernel_smoke.sh
+
 echo "== resume smoke (checkpoint -> resume bitwise parity) =="
 bash scripts/resume_smoke.sh
 

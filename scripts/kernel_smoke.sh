@@ -1,0 +1,24 @@
+#!/usr/bin/env bash
+# Kernel conformance smoke: sweep a tiny slice of the conformance grid
+# (one fp32 lattice case per kernel + one chain case per scan) through
+# benchmarks/kernel_bench.py into a temp dir, then validate the freshly
+# produced BENCH_kernels.json / BENCH_train.json against the shared
+# schemas in scripts/bench_check.py (producer rot), alongside the
+# committed repo-root baselines (schema rot, checked by bench_check's
+# no-args mode in bench_smoke.sh).  Run from anywhere.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+
+OUT=$(mktemp -d)
+trap 'rm -rf "$OUT"' EXIT
+
+echo "== kernel conformance (tiny grid -> $OUT) =="
+python benchmarks/kernel_bench.py --tiny \
+    --out "$OUT/BENCH_kernels.json" --train-out "$OUT/BENCH_train.json"
+
+echo "== fresh BENCH_kernels/BENCH_train schemas =="
+python scripts/bench_check.py "$OUT/BENCH_kernels.json" \
+    "$OUT/BENCH_train.json"
+
+echo "kernel smoke OK"

@@ -1,0 +1,25 @@
+"""repro.conformance: differential + gradient testing for the Pallas
+fast path.
+
+``kernels/ref.py`` is the oracle; every Pallas kernel sweeps a
+declarative case grid (:mod:`repro.conformance.cases`) under a shared
+per-(kernel, dtype, direction) tolerance ladder
+(:mod:`repro.conformance.tolerances`), executed by one harness
+(:mod:`repro.conformance.harness`) that pytest, ``kernel_smoke.sh``, and
+``benchmarks/kernel_bench.py`` all share.  See docs/kernels.md for the
+ladder policy and the register-a-kernel how-to.
+"""
+
+from repro.conformance.cases import (CASES, KERNEL_NAMES, KERNELS, Case,
+                                     KernelSpec, get_case, iter_cases,
+                                     register_kernel)
+from repro.conformance.harness import (CaseResult, interpret_mode, run_case,
+                                       run_grid, summarize)
+from repro.conformance.tolerances import (Tol, forward_tol, ladder, vjp_tol)
+
+__all__ = [
+    "CASES", "Case", "CaseResult", "KERNELS", "KERNEL_NAMES", "KernelSpec",
+    "Tol", "forward_tol", "get_case", "interpret_mode", "iter_cases",
+    "ladder", "register_kernel", "run_case", "run_grid", "summarize",
+    "vjp_tol",
+]

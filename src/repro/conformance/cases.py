@@ -1,0 +1,458 @@
+"""Declarative conformance case grid over the Pallas kernel zoo.
+
+Every Pallas kernel registers a :class:`KernelSpec` — how to build
+deterministic inputs for a :class:`Case`, how to run the kernel and its
+``repro.kernels.ref`` oracle, and (for the recurrent scans) how to express
+the state-chaining algebraic invariant.  The module-level :data:`CASES`
+grid is the single source the pytest suite, ``benchmarks/kernel_bench.py``,
+and ``scripts/kernel_smoke.sh`` all sweep, so "which shapes/dtypes/regimes
+are covered" is one reviewable list instead of scattered test bodies.
+
+Case axes:
+
+  * **shape lattice** — the block-aligned, padded (non-multiple), MQA/GQA,
+    cross-length, chunk>T corners of each kernel's tiling;
+  * **dtype** — float32 and bfloat16, judged under the tolerance ladder
+    (``repro.conformance.tolerances``);
+  * **adversarial numerics** (tagged ``adversarial``) — extreme decay
+    (|la| at 40/60 where a factorized pairwise form loses the mantissa),
+    softcap saturation, denormal-scale inputs, fully-masked kv blocks,
+    zero step sizes;
+  * **chain cases** (``chain=True``) — split-at-t scans with carried state
+    must equal the full-length scan (a property of the kernel itself, no
+    oracle needed).
+
+Adding a kernel = registering a spec + appending cases here; the harness,
+bench, smoke script, and CI pick it up with no further wiring (the
+registration how-to lives in docs/kernels.md).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import zlib
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+KERNEL_NAMES = ("flash_attention", "rwkv6_scan", "mamba2_scan", "moe_gmm")
+
+
+@dataclasses.dataclass(frozen=True)
+class Case:
+    """One grid point.  ``dims``/``kwargs`` are stored as sorted item
+    tuples so cases are hashable and JSON-friendly."""
+
+    kernel: str
+    name: str                               # unique: "<kernel>/<slug>"
+    dims: Tuple[Tuple[str, int], ...]
+    dtype: str = "float32"
+    tags: Tuple[str, ...] = ()
+    seed: int = 0
+    vjp: bool = True                        # run the gradient comparison
+    chain: bool = False                     # run the state-chaining property
+    tol_scale: float = 1.0                  # explicit per-case ladder loosen
+    kwargs: Tuple[Tuple[str, Any], ...] = ()
+
+    def dim(self, key: str) -> int:
+        return dict(self.dims)[key]
+
+    @property
+    def kw(self) -> Dict[str, Any]:
+        return dict(self.kwargs)
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+    def key(self) -> jax.Array:
+        """Deterministic per-case PRNG key (stable across sessions)."""
+        return jax.random.PRNGKey(zlib.crc32(self.name.encode()) + self.seed)
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelSpec:
+    """How the harness drives one kernel.
+
+    ``make_inputs(case)`` -> input tuple (deterministic in the case);
+    ``kernel_fn(case)`` / ``ref_fn(case)`` -> positional callables over
+    that tuple; ``chain_fn(case, inputs)`` -> ``(got, want)`` pytrees for
+    the split-scan invariant (scan kernels only)."""
+
+    name: str
+    make_inputs: Callable[[Case], Tuple]
+    kernel_fn: Callable[[Case], Callable]
+    ref_fn: Callable[[Case], Callable]
+    chain_fn: Optional[Callable[[Case, Tuple], Tuple[Any, Any]]] = None
+
+
+KERNELS: Dict[str, KernelSpec] = {}
+
+
+def register_kernel(spec: KernelSpec) -> KernelSpec:
+    if spec.name in KERNELS:
+        raise ValueError(f"kernel {spec.name!r} already registered")
+    KERNELS[spec.name] = spec
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+
+def _flash_inputs(case: Case):
+    B, S, T = case.dim("B"), case.dim("S"), case.dim("T")
+    H, Kv, D = case.dim("H"), case.dim("Kv"), case.dim("D")
+    scale = case.kw.get("qk_scale", 1.0)
+    ks = jax.random.split(case.key(), 3)
+    q = jax.random.normal(ks[0], (B, S, H, D), case.jdtype) * scale
+    k = jax.random.normal(ks[1], (B, T, Kv, D), case.jdtype) * scale
+    v = jax.random.normal(ks[2], (B, T, Kv, D), case.jdtype)
+    return (q, k, v)
+
+
+def _flash_kernel(case: Case):
+    kw = case.kw
+    return functools.partial(
+        ops.flash_attention, causal=kw.get("causal", True),
+        window=kw.get("window", 0), softcap=kw.get("softcap", 0.0),
+        block_q=kw.get("block_q", 16), block_k=kw.get("block_k", 16))
+
+
+def _flash_ref(case: Case):
+    kw = case.kw
+    return functools.partial(
+        ref.attention, causal=kw.get("causal", True),
+        window=kw.get("window", 0), softcap=kw.get("softcap", 0.0))
+
+
+register_kernel(KernelSpec("flash_attention", _flash_inputs, _flash_kernel,
+                           _flash_ref))
+
+
+# ---------------------------------------------------------------------------
+# rwkv6_scan
+# ---------------------------------------------------------------------------
+
+def _rwkv_inputs(case: Case):
+    B, T, H, D = (case.dim(x) for x in ("B", "T", "H", "D"))
+    scale = case.kw.get("x_scale", 1.0)
+    ks = jax.random.split(case.key(), 6)
+    r, k, v = (jax.random.normal(ks[i], (B, T, H, D), case.jdtype) * scale
+               for i in range(3))
+    wmode = case.kw.get("w_mode", "sigmoid")
+    wraw = jax.random.normal(ks[3], (B, T, H, D))
+    if wmode == "sigmoid":
+        w = jax.nn.sigmoid(wraw)
+    elif wmode == "harsh":          # near-total per-step decay, w ~ e^-12
+        w = jnp.exp(-jnp.exp(wraw + 0.5))
+    elif wmode == "harsh-logit":    # same regime; input IS the decay logit
+        w = wraw + 0.5
+    elif wmode == "near-one":       # log(w) precision regime
+        w = 1.0 - 1e-6 * jax.nn.sigmoid(wraw)
+    else:
+        raise ValueError(f"unknown w_mode {wmode!r}")
+    w = w.astype(case.jdtype)
+    u = jax.random.normal(ks[4], (H, D), case.jdtype)
+    s0 = jax.random.normal(ks[5], (B, H, D, D), jnp.float32) \
+        * case.kw.get("s0_scale", 1.0)
+    return (r, k, v, w, u, s0)
+
+
+def _rwkv_logit_wrap(fn, case: Case):
+    """``harsh-logit`` cases differentiate wrt the decay LOGIT (RWKV's
+    actual parameterization, ``w = exp(-exp(l))``): the chunked backward's
+    ``1/w`` factors cancel against ``dw/dl = -exp(l) w``, so the gradient
+    is well-conditioned even where channels decay to ~e^-50.  Gradients
+    wrt RAW ``w`` in that regime are formulation-induced ill-conditioning
+    (see docs/kernels.md) — those cases run forward/chain only."""
+    if case.kw.get("w_mode") != "harsh-logit":
+        return fn
+
+    def wrapped(r, k, v, wlog, u, s0):
+        return fn(r, k, v, jnp.exp(-jnp.exp(wlog)), u, s0)
+    return wrapped
+
+
+def _rwkv_kernel(case: Case):
+    return _rwkv_logit_wrap(
+        functools.partial(ops.rwkv6_scan, chunk=case.kw.get("chunk", 8)),
+        case)
+
+
+def _rwkv_ref(case: Case):
+    return _rwkv_logit_wrap(ref.rwkv6_scan, case)
+
+
+def _rwkv_chain(case: Case, inputs):
+    r, k, v, w, u, s0 = inputs
+    split = case.kw["split"]
+    c1, c2 = case.kw.get("chunk1", 4), case.kw.get("chunk2", 8)
+    y1, s1 = ops.rwkv6_scan(r[:, :split], k[:, :split], v[:, :split],
+                            w[:, :split], u, s0, chunk=c1)
+    y2, s2 = ops.rwkv6_scan(r[:, split:], k[:, split:], v[:, split:],
+                            w[:, split:], u, s1, chunk=c2)
+    full = ops.rwkv6_scan(r, k, v, w, u, s0, chunk=case.kw.get("chunk", 8))
+    return (jnp.concatenate([y1, y2], axis=1), s2), full
+
+
+register_kernel(KernelSpec("rwkv6_scan", _rwkv_inputs, _rwkv_kernel,
+                           _rwkv_ref, _rwkv_chain))
+
+
+# ---------------------------------------------------------------------------
+# mamba2_scan
+# ---------------------------------------------------------------------------
+
+def _mamba_inputs(case: Case):
+    B, T, H, P, N = (case.dim(x) for x in ("B", "T", "H", "P", "N"))
+    ks = jax.random.split(case.key(), 6)
+    x = jax.random.normal(ks[0], (B, T, H, P), case.jdtype)
+    dt_const = case.kw.get("dt_const")
+    if dt_const is None:
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (B, T, H)))
+    else:                           # pinned per-step decay, |la| targeting
+        dt = jnp.full((B, T, H), dt_const, jnp.float32)
+    dt = dt.astype(case.jdtype)
+    a_log = (jax.random.normal(ks[2], (H,)) * 0.1
+             if case.kw.get("a_mode", "random") == "random"
+             else jnp.zeros((H,)))                    # A = -1 exactly
+    b = jax.random.normal(ks[3], (B, T, N), case.jdtype)
+    c = jax.random.normal(ks[4], (B, T, N), case.jdtype)
+    h0 = jax.random.normal(ks[5], (B, H, P, N), jnp.float32)
+    return (x, dt, a_log, b, c, h0)
+
+
+def _mamba_kernel(case: Case):
+    return functools.partial(ops.mamba2_scan, chunk=case.kw.get("chunk", 8))
+
+
+def _mamba_ref(case: Case):
+    return ref.mamba2_scan
+
+
+def _mamba_chain(case: Case, inputs):
+    x, dt, a_log, b, c, h0 = inputs
+    split = case.kw["split"]
+    c1, c2 = case.kw.get("chunk1", 4), case.kw.get("chunk2", 8)
+    _, h1 = ops.mamba2_scan(x[:, :split], dt[:, :split], a_log, b[:, :split],
+                            c[:, :split], h0, chunk=c1)
+    y2, h2 = ops.mamba2_scan(x[:, split:], dt[:, split:], a_log, b[:, split:],
+                             c[:, split:], h1, chunk=c2)
+    y_full, h_full = ops.mamba2_scan(x, dt, a_log, b, c, h0,
+                                     chunk=case.kw.get("chunk", 8))
+    return (y2, h2), (y_full[:, split:], h_full)
+
+
+register_kernel(KernelSpec("mamba2_scan", _mamba_inputs, _mamba_kernel,
+                           _mamba_ref, _mamba_chain))
+
+
+# ---------------------------------------------------------------------------
+# moe_gmm
+# ---------------------------------------------------------------------------
+
+def _moe_inputs(case: Case):
+    E, C, d, f = (case.dim(x) for x in ("E", "C", "d", "f"))
+    scale = case.kw.get("x_scale", 1.0)
+    ks = jax.random.split(case.key(), 4)
+    xe = jax.random.normal(ks[0], (E, C, d), case.jdtype) * scale
+    wg = (jax.random.normal(ks[1], (E, d, f)) * 0.1).astype(case.jdtype)
+    wu = (jax.random.normal(ks[2], (E, d, f)) * 0.1).astype(case.jdtype)
+    wo = (jax.random.normal(ks[3], (E, f, d)) * 0.1).astype(case.jdtype)
+    return (xe, wg, wu, wo)
+
+
+def _moe_kernel(case: Case):
+    return functools.partial(ops.moe_ffn, block_c=case.kw.get("block_c", 8),
+                             block_f=case.kw.get("block_f", 8))
+
+
+def _moe_ref(case: Case):
+    return ref.moe_ffn
+
+
+register_kernel(KernelSpec("moe_gmm", _moe_inputs, _moe_kernel, _moe_ref))
+
+
+# ---------------------------------------------------------------------------
+# The grid
+# ---------------------------------------------------------------------------
+
+def _c(kernel: str, slug: str, dims: Dict[str, int], **kw) -> Case:
+    dtype = kw.pop("dtype", "float32")
+    tags = tuple(kw.pop("tags", ()))
+    vjp = kw.pop("vjp", True)
+    chain = kw.pop("chain", False)
+    tol_scale = kw.pop("tol_scale", 1.0)
+    return Case(kernel=kernel, name=f"{kernel}/{slug}",
+                dims=tuple(sorted(dims.items())), dtype=dtype, tags=tags,
+                vjp=vjp, chain=chain, tol_scale=tol_scale,
+                kwargs=tuple(sorted(kw.items())))
+
+
+def _flash_cases():
+    lattice = [
+        ("mha-tiny", dict(B=1, S=8, T=8, H=2, Kv=2, D=8)),
+        ("gqa-unaligned", dict(B=2, S=37, T=37, H=8, Kv=4, D=16)),
+        ("mqa-64", dict(B=1, S=64, T=64, H=4, Kv=1, D=32)),
+        ("cross-len", dict(B=2, S=16, T=48, H=4, Kv=4, D=8)),
+    ]
+    out = []
+    for slug, dims in lattice:
+        causal = dims["S"] == dims["T"]
+        for dtype in ("float32", "bfloat16"):
+            suffix = "" if dtype == "float32" else "-bf16"
+            out.append(_c("flash_attention", slug + suffix, dims,
+                          dtype=dtype, causal=causal, tags=("lattice",)))
+    win = dict(B=2, S=33, T=33, H=4, Kv=2, D=8)
+    out += [
+        _c("flash_attention", "window-4", win, window=4, tags=("window",)),
+        _c("flash_attention", "window-31", win, window=31, tags=("window",)),
+        _c("flash_attention", "window-16-bf16", win, window=16,
+           dtype="bfloat16", tags=("window",)),
+        _c("flash_attention", "softcap", dict(B=1, S=24, T=24, H=2, Kv=2,
+                                              D=8),
+           softcap=20.0, qk_scale=3.0, block_q=8, block_k=8,
+           tags=("softcap",)),
+        # scores driven deep into the tanh rail: |qk| >> softcap
+        _c("flash_attention", "softcap-saturated",
+           dict(B=1, S=24, T=24, H=2, Kv=2, D=8), softcap=5.0, qk_scale=30.0,
+           block_q=8, block_k=8, tags=("adversarial", "softcap")),
+        # window << block: most kv blocks are FULLY masked for a q block
+        _c("flash_attention", "all-masked-blocks",
+           dict(B=1, S=64, T=64, H=4, Kv=2, D=8), window=4,
+           tags=("adversarial", "masked-blocks")),
+    ]
+    return out
+
+
+def _rwkv_cases():
+    lattice = [
+        ("tiny", dict(B=1, T=8, H=1, D=4), dict(chunk=4)),
+        ("padded", dict(B=2, T=19, H=3, D=8), dict(chunk=8)),
+        ("long", dict(B=1, T=64, H=2, D=16), dict(chunk=32)),
+    ]
+    out = []
+    for slug, dims, kw in lattice:
+        for dtype in ("float32", "bfloat16"):
+            suffix = "" if dtype == "float32" else "-bf16"
+            out.append(_c("rwkv6_scan", slug + suffix, dims, dtype=dtype,
+                          tags=("lattice",), **kw))
+    out += [
+        # raw-w gradients are ill-conditioned at this decay (1/w factors
+        # that only cancel analytically) -> forward-only here, with the
+        # well-posed logit-space VJP covered by the case below
+        _c("rwkv6_scan", "harsh-decay", dict(B=2, T=48, H=2, D=8),
+           w_mode="harsh", chunk=16, vjp=False,
+           tags=("adversarial", "decay")),
+        _c("rwkv6_scan", "harsh-decay-logit", dict(B=2, T=48, H=2, D=8),
+           w_mode="harsh-logit", chunk=16, tol_scale=4.0,
+           tags=("adversarial", "decay")),
+        _c("rwkv6_scan", "decay-near-1", dict(B=1, T=32, H=2, D=8),
+           w_mode="near-one", chunk=8, tags=("adversarial", "decay")),
+        _c("rwkv6_scan", "denormal", dict(B=1, T=16, H=2, D=8),
+           x_scale=1e-20, s0_scale=1e-20, chunk=8,
+           tags=("adversarial", "denormal")),
+        _c("rwkv6_scan", "chunk-gt-T", dict(B=2, T=30, H=2, D=8), chunk=64,
+           tags=("padding",)),
+        _c("rwkv6_scan", "chain-split10", dict(B=1, T=24, H=2, D=8),
+           split=10, chunk=8, chunk1=4, chunk2=8, chain=True, vjp=False,
+           tags=("chain",)),
+        _c("rwkv6_scan", "chain-harsh", dict(B=1, T=32, H=2, D=8),
+           w_mode="harsh", split=16, chunk=8, chunk1=8, chunk2=4,
+           chain=True, vjp=False, tags=("chain", "decay")),
+    ]
+    return out
+
+
+def _mamba_cases():
+    out = [
+        _c("mamba2_scan", "tiny", dict(B=1, T=8, H=1, P=4, N=4), chunk=4,
+           tags=("lattice",)),
+        _c("mamba2_scan", "padded", dict(B=2, T=13, H=3, P=4, N=5), chunk=4,
+           tags=("lattice",)),
+        _c("mamba2_scan", "long", dict(B=1, T=32, H=4, P=8, N=16), chunk=16,
+           tags=("lattice",)),
+        _c("mamba2_scan", "bf16", dict(B=2, T=32, H=2, P=4, N=8), chunk=16,
+           dtype="bfloat16", tags=("lattice",)),
+        # |la| = cumulative dt*A inside one chunk; A = -1 pinned, dt const.
+        # 40 is where a factorized exp(la_t)*exp(-la_s) form starts losing
+        # the fp32 mantissa (the PR 2 fix); 60 is well past it.
+        _c("mamba2_scan", "decay-la40", dict(B=1, T=64, H=2, P=4, N=8),
+           chunk=32, dt_const=1.25, a_mode="unit",
+           tags=("adversarial", "decay")),
+        _c("mamba2_scan", "decay-la60", dict(B=1, T=64, H=2, P=4, N=8),
+           chunk=32, dt_const=1.875, a_mode="unit",
+           tags=("adversarial", "decay", "decay60")),
+        _c("mamba2_scan", "denormal-dt", dict(B=1, T=16, H=2, P=4, N=8),
+           chunk=8, dt_const=1e-30, tags=("adversarial", "denormal")),
+        _c("mamba2_scan", "zero-dt", dict(B=1, T=16, H=2, P=4, N=8),
+           chunk=8, dt_const=0.0, tags=("adversarial", "zero-dt")),
+        _c("mamba2_scan", "chunk-gt-T", dict(B=2, T=30, H=2, P=4, N=8),
+           chunk=64, tags=("padding",)),
+        _c("mamba2_scan", "wide-state", dict(B=1, T=16, H=2, P=4, N=32),
+           chunk=8, tags=("lattice",)),
+        _c("mamba2_scan", "chain-split7", dict(B=1, T=20, H=2, P=4, N=8),
+           split=7, chunk=8, chunk1=4, chunk2=8, chain=True, vjp=False,
+           tags=("chain",)),
+        _c("mamba2_scan", "chain-decay", dict(B=1, T=32, H=2, P=4, N=8),
+           split=16, chunk=8, chunk1=8, chunk2=4, dt_const=1.875,
+           a_mode="unit", chain=True, vjp=False, tags=("chain", "decay")),
+    ]
+    return out
+
+
+def _moe_cases():
+    lattice = [
+        ("square", dict(E=2, C=8, d=16, f=16)),
+        ("padded", dict(E=3, C=10, d=16, f=24)),
+        ("wide", dict(E=8, C=32, d=32, f=8)),
+    ]
+    out = []
+    for slug, dims in lattice:
+        for dtype in ("float32", "bfloat16"):
+            suffix = "" if dtype == "float32" else "-bf16"
+            out.append(_c("moe_gmm", slug + suffix, dims, dtype=dtype,
+                          tags=("lattice",)))
+    out += [
+        _c("moe_gmm", "denormal", dict(E=2, C=8, d=16, f=16), x_scale=1e-20,
+           tags=("adversarial", "denormal")),
+        _c("moe_gmm", "single-expert", dict(E=1, C=8, d=16, f=16),
+           tags=("lattice",)),
+        _c("moe_gmm", "f-padded", dict(E=2, C=8, d=16, f=40), block_f=16,
+           tags=("padding",)),
+        _c("moe_gmm", "c-padded-bf16", dict(E=2, C=9, d=16, f=16),
+           dtype="bfloat16", tags=("padding",)),
+    ]
+    return out
+
+
+CASES: Tuple[Case, ...] = tuple(_flash_cases() + _rwkv_cases()
+                                + _mamba_cases() + _moe_cases())
+
+_BY_NAME = {c.name: c for c in CASES}
+if len(_BY_NAME) != len(CASES):
+    raise AssertionError("duplicate conformance case names")
+
+
+def get_case(name: str) -> Case:
+    return _BY_NAME[name]
+
+
+def iter_cases(*, kernel: Optional[str] = None,
+               tags: Tuple[str, ...] = ()) -> Tuple[Case, ...]:
+    """Filter the grid by kernel and/or tags (a case matches if it carries
+    ANY of the requested tags)."""
+    out = []
+    for c in CASES:
+        if kernel is not None and c.kernel != kernel:
+            continue
+        if tags and not set(tags) & set(c.tags):
+            continue
+        out.append(c)
+    return tuple(out)

@@ -1,0 +1,111 @@
+"""The kernel tolerance ladder: ONE table for tests, harness, and bench.
+
+Every Pallas kernel is compared against its ``repro.kernels.ref`` oracle
+under a per-(kernel, dtype, direction) tolerance.  These used to live as
+scattered rtol/atol literals inside ``tests/test_kernels.py``; hoisting
+them here means the pytest suite, the conformance harness, and
+``benchmarks/kernel_bench.py`` cannot drift apart — a tolerance change is
+one diff line reviewed once.
+
+Ladder policy (see docs/kernels.md for the full rationale):
+
+  * ``float32`` forward — 2e-5 for the matmul-shaped kernels
+    (``flash_attention``, ``moe_gmm``: one fp32 accumulation chain), 1e-4
+    for the recurrent scans (``mamba2_scan``, ``rwkv6_scan``: T-step decay
+    products compound rounding, and the chunked formulations regroup the
+    arithmetic).
+  * ``bfloat16`` forward — 2e-2 everywhere: the inputs themselves carry
+    ~3 decimal digits, so the bound is dominated by input rounding, not by
+    kernel arithmetic.
+  * VJP — one ladder rung looser than forward: a backward pass roughly
+    doubles the accumulation depth (recompute + cotangent contraction),
+    and the scan backwards differentiate the *chunked* formulation against
+    the sequential oracle's autodiff.
+
+Comparisons use the ``numpy.testing.assert_allclose`` predicate
+``|got - want| <= atol + rtol * |want|`` elementwise; ``Tol.violation``
+returns the worst ratio of the left side to the right side, so ``<= 1``
+passes and the margin is measurable (the bench files record it).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Tol:
+    """One rung of the ladder (``assert_allclose`` semantics)."""
+
+    rtol: float
+    atol: float
+
+    def kw(self) -> Dict[str, float]:
+        """Keyword form for ``np.testing.assert_allclose(**tol.kw())``."""
+        return {"rtol": self.rtol, "atol": self.atol}
+
+    def violation(self, got, want) -> float:
+        """Worst-case ``|got-want| / (atol + rtol*|want|)`` over all
+        elements (fp32 compare): ``<= 1.0`` means the pair passes."""
+        g = np.asarray(got, np.float32)
+        w = np.asarray(want, np.float32)
+        denom = self.atol + self.rtol * np.abs(w)
+        return float(np.max(np.abs(g - w) / denom)) if g.size else 0.0
+
+
+def _dt(dtype) -> str:
+    """Canonical dtype key ('float32' / 'bfloat16' / ...)."""
+    return str(jnp.dtype(dtype))
+
+
+# (kernel, dtype, direction) -> Tol; None kernel = dtype default.
+_LADDER: Dict[Tuple[object, str, str], Tol] = {
+    # dtype defaults
+    (None, "float32", "fwd"): Tol(2e-5, 2e-5),
+    (None, "bfloat16", "fwd"): Tol(2e-2, 2e-2),
+    (None, "float32", "vjp"): Tol(2e-4, 2e-4),
+    (None, "bfloat16", "vjp"): Tol(4e-2, 4e-2),
+    # recurrent scans: decay-product accumulation + chunked regrouping
+    ("mamba2_scan", "float32", "fwd"): Tol(1e-4, 1e-4),
+    ("rwkv6_scan", "float32", "fwd"): Tol(1e-4, 1e-4),
+    ("mamba2_scan", "float32", "vjp"): Tol(5e-4, 5e-4),
+    ("rwkv6_scan", "float32", "vjp"): Tol(5e-4, 5e-4),
+}
+
+
+def forward_tol(kernel: str, dtype) -> Tol:
+    """Forward-pass tolerance for ``kernel`` at ``dtype`` (per-kernel
+    override first, dtype default second)."""
+    return _lookup(kernel, dtype, "fwd")
+
+
+def vjp_tol(kernel: str, dtype) -> Tol:
+    """Gradient tolerance for ``kernel`` at ``dtype``."""
+    return _lookup(kernel, dtype, "vjp")
+
+
+def _lookup(kernel: str, dtype, direction: str) -> Tol:
+    key = _dt(dtype)
+    try:
+        return _LADDER.get((kernel, key, direction), _LADDER[(None, key,
+                                                              direction)])
+    except KeyError:
+        raise KeyError(f"no {direction!r} tolerance for dtype {key!r} — add "
+                       f"a rung to repro.conformance.tolerances._LADDER"
+                       ) from None
+
+
+def ladder() -> Dict[str, Dict[str, float]]:
+    """The full table as JSON-able rows (the bench file embeds it so a
+    committed baseline records the policy it was judged under)."""
+    out = {}
+    for (kernel, dtype, direction), tol in sorted(
+            _LADDER.items(), key=lambda kv: (kv[0][0] or "", kv[0][1],
+                                             kv[0][2])):
+        name = f"{kernel or 'default'}/{dtype}/{direction}"
+        out[name] = {"rtol": tol.rtol, "atol": tol.atol}
+    return out

@@ -173,21 +173,25 @@ def make_fedprox_step(cfg, optimizer, *, mu: float = 0.01, impl: str = "xla",
 # ---------------------------------------------------------------------------
 
 # canonical delta/byte helpers live in repro.core.strategy
-from repro.core.strategy import tree_add, tree_delta  # noqa: E402  (re-export)
+from repro.core.strategy import (tree_add, tree_delta,  # noqa: E402
+                                 topk_count)            # (re-export)
 
 
 def topk_sparsify(delta: Any, frac: float = 0.1):
-    """Keep the top-``frac`` fraction of entries per leaf (by magnitude).
-    Returns (sparse_delta, upload_bytes) — bytes = kept values (leaf dtype)
-    + int32 indices per entry, the standard sparse-upload accounting.  The
-    ``>= thresh`` tie rule can keep MORE than k entries, so the byte count
-    is taken from what actually survived, not from k."""
+    """Keep the top-``frac`` fraction of entries per leaf (by magnitude),
+    ``k = topk_count(n, frac) = ceil(frac * n)`` — the same k the
+    trace-safe ``strategy.topk_compress`` and the static
+    ``strategy.topk_bytes`` use.  Returns (sparse_delta, upload_bytes) —
+    bytes = kept values (leaf dtype) + int32 indices per entry, the
+    standard sparse-upload accounting.  The ``>= thresh`` tie rule can
+    keep MORE than k entries, so the byte count is taken from what
+    actually survived, not from k."""
     total_bytes = 0
 
     def one(d):
         nonlocal total_bytes
         n = d.size
-        k = max(1, int(n * frac))
+        k = topk_count(n, frac)
         flat = d.reshape(-1)
         thresh = jnp.sort(jnp.abs(flat))[n - k]
         kept = jnp.where(jnp.abs(flat) >= thresh, flat, 0.0)

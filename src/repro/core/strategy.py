@@ -33,6 +33,7 @@ Strategies:
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Any, Optional, Sequence, Tuple
 
 import jax
@@ -65,12 +66,21 @@ def tree_add(base: Any, delta: Any) -> Any:
 # Compressors (jax-pure tree -> tree; trace-safe, vmap-able over a client dim)
 # ---------------------------------------------------------------------------
 
+def topk_count(n: int, frac: float) -> int:
+    """The k every top-k site uses: ``ceil(frac * n)``, clamped to
+    [1, n].  One shared helper so the eager compressor
+    (``strategies.topk_sparsify``), the trace-safe compressor
+    (``topk_compress``), and the static byte accounting (``topk_bytes``)
+    cannot disagree about how many entries "top-frac" means
+    (tests/test_strategies.py pins the exact-count law)."""
+    return min(n, max(1, math.ceil(n * frac)))
+
+
 def topk_compress(delta: Any, frac: float) -> Any:
     """Keep the top-``frac`` fraction of entries per leaf by magnitude.
     Ties at the threshold are kept (>=), matching the eager reference."""
     def one(d):
-        n = d.size
-        k = max(1, int(n * frac))
+        k = topk_count(d.size, frac)
         flat = d.reshape(-1)
         thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
         return jnp.where(jnp.abs(flat) >= thresh, flat, 0.0).reshape(d.shape)
@@ -92,7 +102,7 @@ def topk_bytes(tree: Any, frac: float) -> int:
     """Static top-k upload size: k values (leaf dtype) + k int32 indices."""
     total = 0
     for l in jax.tree.leaves(tree):
-        k = max(1, int(l.size * frac))
+        k = topk_count(l.size, frac)
         total += k * (jnp.dtype(l.dtype).itemsize + 4)
     return total
 

@@ -1,0 +1,138 @@
+"""Reference backward passes pairing the Pallas forward kernels.
+
+``pallas_call`` has no autodiff rule in this jax version (interpret mode
+included), so ``repro.kernels.ops`` wires each kernel into a
+``jax.custom_vjp`` whose forward is the Pallas kernel and whose backward
+is one of the functions here.  Two styles, chosen per kernel:
+
+  * **Hand-derived backwards** (``attention_bwd``, ``moe_ffn_bwd``) — the
+    classic recompute-from-inputs formulations a TPU backward kernel would
+    implement (flash-style softmax recompute; SwiGLU chain rule).  They
+    are written independently of the oracle's autodiff, so comparing
+    ``jax.grad`` of the Pallas op against ``jax.grad`` of the oracle is a
+    real differential test of the gradient math, not a tautology.
+  * **Chunked-formulation VJPs** (``rwkv6_bwd``, ``mamba2_bwd``) — jax
+    autodiff of the *chunked* reference (``ref.rwkv6_scan_chunked`` /
+    ``ref.mamba2_scan_chunked``).  The chunked and sequential forms
+    regroup the decay products completely differently (the PR 2 mantissa
+    fix lives exactly there), so grad-vs-sequential-oracle is again a
+    differential test — and the backward inherits the chunked form's
+    HBM-traffic advantage when it runs compiled.
+
+All math in fp32; gradients are cast back to the primal input dtypes
+(what ``custom_vjp`` requires).  Tolerances for the resulting
+kernel-vs-oracle gradient comparisons live in
+``repro.conformance.tolerances`` (the ``vjp`` rungs).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+NEG_INF = ref.NEG_INF
+
+
+def _like(grad, primal):
+    return grad.astype(primal.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention backward: softmax recompute (GQA / causal / window /
+# softcap), mirroring ref.attention's exact masking semantics.
+# ---------------------------------------------------------------------------
+
+def attention_bwd(q, k, v, dy, *, causal=True, window=0, softcap=0.0):
+    """dy: (B,S,H,D) cotangent of the attention output -> (dq, dk, dv)."""
+    B, S, H, D = q.shape
+    T, Kv = k.shape[1], k.shape[2]
+    G = H // Kv
+    inv = 1.0 / jnp.sqrt(D).astype(jnp.float32)
+
+    qg = q.reshape(B, S, Kv, G, D).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    dyg = dy.reshape(B, S, Kv, G, D).astype(jnp.float32)
+
+    s0 = jnp.einsum("bskgd,btkd->bkgst", qg, kf) * inv
+    s = softcap * jnp.tanh(s0 / softcap) if softcap else s0
+    if causal:
+        qi = jnp.arange(S)[:, None]
+        kj = jnp.arange(T)[None, :]
+        ok = kj <= qi
+        if window:
+            ok &= kj > qi - window
+        masked = jnp.where(ok[None, None, None], s, NEG_INF)
+    else:
+        masked = s
+    w = jax.nn.softmax(masked, axis=-1)
+
+    # dv and the softmax backward
+    dv = jnp.einsum("bkgst,bskgd->btkd", w, dyg)
+    dw = jnp.einsum("bskgd,btkd->bkgst", dyg, vf)
+    ds = w * (dw - jnp.sum(w * dw, axis=-1, keepdims=True))
+    if causal:
+        ds = jnp.where(ok[None, None, None], ds, 0.0)
+    if softcap:
+        ds = ds * (1.0 - jnp.square(jnp.tanh(s0 / softcap)))
+
+    dq = jnp.einsum("bkgst,btkd->bskgd", ds, kf) * inv
+    dk = jnp.einsum("bkgst,bskgd->btkd", ds, qg) * inv
+    return (_like(dq.reshape(B, S, H, D), q), _like(dk, k), _like(dv, v))
+
+
+# ---------------------------------------------------------------------------
+# MoE SwiGLU FFN backward: per-expert chain rule over the fused
+# silu(x Wg) * (x Wu) @ Wo, recomputed from inputs.
+# ---------------------------------------------------------------------------
+
+def moe_ffn_bwd(xe, wi_gate, wi_up, wo, dy):
+    """dy: (E,C,d) cotangent -> (dx, dwi_gate, dwi_up, dwo)."""
+    x = xe.astype(jnp.float32)
+    wg = wi_gate.astype(jnp.float32)
+    wu = wi_up.astype(jnp.float32)
+    wof = wo.astype(jnp.float32)
+    dyf = dy.astype(jnp.float32)
+
+    g = jnp.einsum("ecd,edf->ecf", x, wg)
+    u = jnp.einsum("ecd,edf->ecf", x, wu)
+    sg = jax.nn.sigmoid(g)
+    silu = g * sg
+    h = silu * u
+
+    dh = jnp.einsum("ecd,efd->ecf", dyf, wof)
+    dwo = jnp.einsum("ecf,ecd->efd", h, dyf)
+    du = dh * silu
+    dg = dh * u * (sg * (1.0 + g * (1.0 - sg)))    # d silu(g)/dg
+
+    dx = (jnp.einsum("ecf,edf->ecd", dg, wg)
+          + jnp.einsum("ecf,edf->ecd", du, wu))
+    dwg = jnp.einsum("ecd,ecf->edf", x, dg)
+    dwu = jnp.einsum("ecd,ecf->edf", x, du)
+    return (_like(dx, xe), _like(dwg, wi_gate), _like(dwu, wi_up),
+            _like(dwo, wo))
+
+
+# ---------------------------------------------------------------------------
+# Recurrent scans: VJP of the chunked reference formulation.
+# ---------------------------------------------------------------------------
+
+def rwkv6_bwd(r, k, v, w, u, s0, cts, *, chunk):
+    """cts = (dy, ds_T) cotangents of (y, s_T) -> grads for all six
+    inputs, via autodiff of the chunked WKV6 form."""
+    _, pull = jax.vjp(
+        lambda r_, k_, v_, w_, u_, s_: ref.rwkv6_scan_chunked(
+            r_, k_, v_, w_, u_, s_, chunk=chunk), r, k, v, w, u, s0)
+    return pull(cts)
+
+
+def mamba2_bwd(x, dt, a_log, b, c, h0, cts, *, chunk):
+    """cts = (dy, dh_T) cotangents of (y, h_T) -> grads for all six
+    inputs, via autodiff of the chunked SSD form (direct pairwise decay —
+    the |la|>40-safe formulation)."""
+    _, pull = jax.vjp(
+        lambda x_, dt_, a_, b_, c_, h_: ref.mamba2_scan_chunked(
+            x_, dt_, a_, b_, c_, h_, chunk=chunk), x, dt, a_log, b, c, h0)
+    return pull(cts)

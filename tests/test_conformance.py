@@ -1,0 +1,251 @@
+"""The conformance subsystem itself: registry invariants, tolerance-ladder
+lookups, harness execution on a representative slice, and the
+BENCH_kernels/BENCH_train schemas in scripts/bench_check.py.
+
+The FULL grid is swept by ``scripts/kernel_smoke.sh`` /
+``benchmarks/kernel_bench.py`` (CI runs the tiny leg; the committed
+``BENCH_kernels.json`` pins a full interpret-mode run) — running all ~50
+interpret-mode cases inside tier-1 would double the suite's wall-clock,
+so here we pin the *shape* of the registry and execute one adversarial
+case per kernel plus the chain properties."""
+
+import importlib.util
+import json
+import os
+
+import jax.numpy as jnp
+import pytest
+
+from repro import conformance as cf
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _load_bench_check():
+    spec = importlib.util.spec_from_file_location(
+        "bench_check", os.path.join(ROOT, "scripts", "bench_check.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+# ---------------------------------------------------------------------------
+# registry invariants
+# ---------------------------------------------------------------------------
+
+def test_grid_meets_coverage_floor():
+    """The acceptance floor the BENCH baseline pins: >= 40 cases, all four
+    kernels, forward + VJP per kernel, chain properties for both scans,
+    adversarial numerics represented."""
+    assert len(cf.CASES) >= 40
+    for kernel in cf.KERNEL_NAMES:
+        cases = cf.iter_cases(kernel=kernel)
+        assert cases, f"no cases for {kernel}"
+        assert any(c.vjp for c in cases), f"no VJP coverage for {kernel}"
+        assert any("adversarial" in c.tags for c in cases), \
+            f"no adversarial coverage for {kernel}"
+        assert any(c.dtype == "bfloat16" for c in cases), \
+            f"no bf16 coverage for {kernel}"
+    for scan in ("rwkv6_scan", "mamba2_scan"):
+        assert any(c.chain for c in cf.iter_cases(kernel=scan)), \
+            f"no chain property for {scan}"
+
+
+def test_case_names_unique_and_prefixed():
+    names = [c.name for c in cf.CASES]
+    assert len(set(names)) == len(names)
+    for c in cf.CASES:
+        assert c.name.startswith(c.kernel + "/")
+        assert c.kernel in cf.KERNELS           # spec registered
+        assert c.tol_scale >= 1.0               # loosen-only, never tighten
+
+
+def test_chain_cases_have_chain_fn():
+    for c in cf.CASES:
+        if c.chain:
+            assert cf.KERNELS[c.kernel].chain_fn is not None
+
+
+def test_case_keys_deterministic():
+    c = cf.CASES[0]
+    assert (c.key() == c.key()).all()
+    # distinct cases draw distinct inputs
+    assert not (cf.CASES[0].key() == cf.CASES[1].key()).all()
+
+
+def test_register_kernel_rejects_duplicates():
+    spec = cf.KERNELS["moe_gmm"]
+    with pytest.raises(ValueError):
+        cf.register_kernel(spec)
+
+
+# ---------------------------------------------------------------------------
+# tolerance ladder
+# ---------------------------------------------------------------------------
+
+def test_ladder_lookup_precedence():
+    # per-kernel override beats the dtype default
+    assert cf.forward_tol("mamba2_scan", jnp.float32).atol == pytest.approx(
+        1e-4)
+    assert cf.forward_tol("flash_attention", jnp.float32).atol == \
+        pytest.approx(2e-5)
+    # dtype string and jnp dtype resolve identically
+    assert cf.forward_tol("moe_gmm", "bfloat16") == \
+        cf.forward_tol("moe_gmm", jnp.bfloat16)
+    # vjp rungs are looser than forward rungs
+    for kernel in cf.KERNEL_NAMES:
+        for dtype in ("float32", "bfloat16"):
+            assert cf.vjp_tol(kernel, dtype).atol > \
+                cf.forward_tol(kernel, dtype).atol
+
+
+def test_ladder_unknown_dtype_raises():
+    with pytest.raises(KeyError):
+        cf.forward_tol("moe_gmm", jnp.float16)
+
+
+def test_violation_metric():
+    tol = cf.Tol(rtol=0.0, atol=1.0)
+    assert tol.violation([0.0, 0.5], [0.0, 0.0]) == pytest.approx(0.5)
+    assert tol.violation([2.0], [0.0]) == pytest.approx(2.0)
+    assert cf.Tol(rtol=0.1, atol=0.0).violation([11.0], [10.0]) == \
+        pytest.approx(1.0)
+
+
+def test_ladder_export_is_jsonable():
+    table = cf.ladder()
+    json.dumps(table)
+    assert "mamba2_scan/float32/fwd" in table
+    assert "default/bfloat16/vjp" in table
+
+
+# ---------------------------------------------------------------------------
+# harness execution: one adversarial case per kernel + the chain cases
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", [
+    "flash_attention/softcap-saturated",
+    "rwkv6_scan/denormal",
+    "mamba2_scan/decay-la60",
+    "moe_gmm/denormal",
+])
+def test_adversarial_case_passes(name):
+    res = cf.run_case(cf.get_case(name))
+    assert res.ok, (res.fwd_violation, res.vjp_violation)
+    assert res.fwd_violation is not None
+    if cf.get_case(name).vjp:
+        assert res.vjp_violation is not None
+
+
+@pytest.mark.parametrize("name", [
+    "rwkv6_scan/chain-split10",
+    "mamba2_scan/chain-split7",
+])
+def test_chain_property_passes(name):
+    res = cf.run_case(cf.get_case(name))
+    assert res.ok
+    assert res.chain_violation is not None and res.chain_violation <= 1.0
+
+
+def test_summarize_counts():
+    rs = [cf.run_case(cf.get_case(n)) for n in
+          ("moe_gmm/denormal", "rwkv6_scan/chain-split10")]
+    s = cf.summarize(rs)
+    assert s["n_cases"] == 2 and s["n_failed"] == 0
+    assert s["by_kernel"]["rwkv6_scan"]["chain"] == 1
+    assert s["interpret"] is True  # this container has no TPU
+
+
+def test_result_row_is_jsonable():
+    res = cf.run_case(cf.get_case("moe_gmm/single-expert"))
+    row = res.to_row()
+    json.dumps(row)
+    assert row["ok"] is True and row["kernel"] == "moe_gmm"
+
+
+# ---------------------------------------------------------------------------
+# bench_check schemas
+# ---------------------------------------------------------------------------
+
+def _kernels_payload(rows, grid="tiny", interpret=True):
+    summary = {"n_cases": len(rows), "n_ok": len(rows), "n_failed": 0,
+               "by_kernel": {}, "worst_violation": {"fwd": 0.1, "vjp": 0.2,
+                                                    "chain": 0.0},
+               "median_fp32_speedup": {"moe_gmm": 1.2}}
+    return {"benchmark": "kernels", "grid": grid, "backend": "cpu",
+            "interpret": interpret, "jax_version": "0", "tolerance_ladder":
+            cf.ladder(), "summary": summary, "rows": rows}
+
+
+def _row(name="moe_gmm/x", kernel="moe_gmm", ok=True, vjp=0.1):
+    return {"name": name, "kernel": kernel, "dtype": "float32", "tags": [],
+            "ok": ok, "fwd_violation": 0.1, "vjp_violation": vjp,
+            "chain_violation": None, "interpret": True}
+
+
+def test_bench_check_kernels_schema(tmp_path):
+    bc = _load_bench_check()
+    p = tmp_path / "BENCH_kernels.json"
+    p.write_text(json.dumps(_kernels_payload([_row()])))
+    assert "kernels" in bc.check_file(str(p))
+
+    # a failed case must be rejected
+    p.write_text(json.dumps(_kernels_payload([_row(ok=False)])))
+    with pytest.raises(AssertionError, match="FAILED its tolerance"):
+        bc.check_file(str(p))
+
+    # a full grid must meet the coverage floor
+    p.write_text(json.dumps(_kernels_payload([_row()], grid="full")))
+    with pytest.raises(AssertionError, match="full grid"):
+        bc.check_file(str(p))
+
+
+def test_bench_check_kernels_accepts_real_tiny_run():
+    """End-to-end producer check on one real case per kernel (the smoke
+    script does the same through benchmarks/kernel_bench.py)."""
+    bc = _load_bench_check()
+    rows = []
+    for kernel in cf.KERNEL_NAMES:
+        case = next(c for c in cf.iter_cases(kernel=kernel, tags=("lattice",))
+                    if c.dtype == "float32")
+        rows.append(cf.run_case(case).to_row())
+    payload = _kernels_payload(rows)
+    payload["summary"] = cf.summarize(
+        [cf.run_case(cf.iter_cases(kernel="moe_gmm")[0])])
+    import tempfile
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "BENCH_kernels.json")
+        with open(path, "w") as f:
+            json.dump(payload, f)
+        assert "kernels" in bc.check_file(path)
+
+
+def test_bench_check_train_schema(tmp_path):
+    bc = _load_bench_check()
+    payload = {
+        "benchmark": "train_step", "arch": "distilbert-mlm",
+        "engine": "parallel", "cohort": 8, "local_steps": 1, "batch": 2,
+        "seq": 32, "warm_round_s": 0.5, "clients_per_s": 16.0,
+        "step_cost": {"flops": 1e9, "hbm_bytes": 1e8,
+                      "collective_bytes": 1e6},
+        "drift": {"phase": "round", "measured_s": 0.5, "predicted_s": 0.1,
+                  "ratio": 5.0, "source": "device:rtx2080ti", "warn": True,
+                  "device": "rtx2080ti"},
+    }
+    p = tmp_path / "BENCH_train.json"
+    p.write_text(json.dumps(payload))
+    assert "train_step" in bc.check_file(str(p))
+
+    bad = dict(payload, drift=dict(payload["drift"], predicted_s=0.0))
+    p.write_text(json.dumps(bad))
+    with pytest.raises(AssertionError, match="predicted_s"):
+        bc.check_file(str(p))
+
+
+def test_committed_bench_files_pass():
+    """The pinned baselines at the repo root stay schema-valid."""
+    bc = _load_bench_check()
+    for fname in ("BENCH_kernels.json", "BENCH_train.json"):
+        path = os.path.join(ROOT, fname)
+        assert os.path.exists(path), f"{fname} not committed at repo root"
+        bc.check_file(path)

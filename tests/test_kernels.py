@@ -1,19 +1,49 @@
 """Per-kernel correctness: Pallas (interpret mode) vs pure-jnp oracles,
-swept over shapes and dtypes."""
+swept over shapes and dtypes.
+
+All rtol/atol pairs come from the shared conformance tolerance ladder
+(``repro.conformance.tolerances``) — the same table the harness and
+``benchmarks/kernel_bench.py`` judge under, so the pytest suite and the
+pinned BENCH baselines cannot drift apart.  The exhaustive grid
+(adversarial numerics, chunk lattices, chain properties) lives in
+``tests/test_conformance.py``; this file keeps the direct per-kernel
+spot checks plus the VJP parity and decay-regression pins.
+"""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.conformance import forward_tol, vjp_tol
 from repro.kernels import ops, ref
 
 KEY = jax.random.PRNGKey(0)
 
 
-def _tol(dtype):
-    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
-        else dict(rtol=2e-5, atol=2e-5)
+def _fwd(kernel, dtype=jnp.float32):
+    return forward_tol(kernel, dtype).kw()
+
+
+def _vjp(kernel, dtype=jnp.float32):
+    return vjp_tol(kernel, dtype).kw()
+
+
+def _grads(fn, *inputs):
+    """fp32 sum-of-squares loss over all output leaves -> grads wrt all
+    inputs (same scalarization the conformance harness uses)."""
+    def loss(*a):
+        out = fn(*a)
+        return sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                   for l in jax.tree_util.tree_leaves(out))
+    return jax.grad(loss, argnums=tuple(range(len(inputs))))(*inputs)
+
+
+def _assert_grads_close(got, want, kernel, dtype=jnp.float32):
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g, np.float32),
+                                   np.asarray(w, np.float32),
+                                   **_vjp(kernel, dtype))
 
 
 # ---------------------------------------------------------------------------
@@ -36,7 +66,8 @@ def test_flash_attention_shapes(B, S, T, H, Kv, D, dtype):
     want = ref.attention(q, k, v, causal=causal)
     got = ops.flash_attention(q, k, v, causal=causal, block_q=16, block_k=16)
     np.testing.assert_allclose(np.asarray(got, np.float32),
-                               np.asarray(want, np.float32), **_tol(dtype))
+                               np.asarray(want, np.float32),
+                               **_fwd("flash_attention", dtype))
 
 
 @pytest.mark.parametrize("window", [4, 16, 31])
@@ -50,7 +81,7 @@ def test_flash_attention_window(window):
     got = ops.flash_attention(q, k, v, causal=True, window=window,
                               block_q=16, block_k=16)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
-                               rtol=2e-5, atol=2e-5)
+                               **_fwd("flash_attention"))
 
 
 def test_flash_attention_softcap():
@@ -63,7 +94,7 @@ def test_flash_attention_softcap():
     got = ops.flash_attention(q, k, v, causal=True, softcap=20.0,
                               block_q=8, block_k=8)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
-                               rtol=2e-5, atol=2e-5)
+                               **_fwd("flash_attention"))
 
 
 # ---------------------------------------------------------------------------
@@ -87,9 +118,10 @@ def test_rwkv6_scan(B, T, H, D, chunk, dtype):
     y_ref, s_ref = ref.rwkv6_scan(r, k, v, w, u, s0)
     y, s = ops.rwkv6_scan(r, k, v, w, u, s0, chunk=chunk)
     np.testing.assert_allclose(np.asarray(y, np.float32),
-                               np.asarray(y_ref, np.float32), **_tol(dtype))
+                               np.asarray(y_ref, np.float32),
+                               **_fwd("rwkv6_scan", dtype))
     np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref),
-                               rtol=1e-4, atol=1e-4)
+                               **_fwd("rwkv6_scan"))
 
 
 def test_rwkv6_state_chaining():
@@ -106,9 +138,9 @@ def test_rwkv6_state_chaining():
     y2, s2 = ops.rwkv6_scan(r[:, 10:], k[:, 10:], v[:, 10:], w[:, 10:], u, s1,
                             chunk=8)
     np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
-                               np.asarray(y_full), rtol=1e-4, atol=1e-4)
+                               np.asarray(y_full), **_fwd("rwkv6_scan"))
     np.testing.assert_allclose(np.asarray(s2), np.asarray(s_full),
-                               rtol=1e-4, atol=1e-4)
+                               **_fwd("rwkv6_scan"))
 
 
 # ---------------------------------------------------------------------------
@@ -131,9 +163,9 @@ def test_mamba2_scan(B, T, H, P, N, chunk):
     y_ref, h_ref = ref.mamba2_scan(x, dt, a_log, b, c, h0)
     y, h = ops.mamba2_scan(x, dt, a_log, b, c, h0, chunk=chunk)
     np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
-                               rtol=1e-4, atol=1e-4)
+                               **_fwd("mamba2_scan"))
     np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref),
-                               rtol=1e-4, atol=1e-4)
+                               **_fwd("mamba2_scan"))
 
 
 def test_mamba2_state_chaining():
@@ -151,9 +183,9 @@ def test_mamba2_state_chaining():
     y2, h2 = ops.mamba2_scan(x[:, 7:], dt[:, 7:], a_log, b[:, 7:], c[:, 7:],
                              h1, chunk=8)
     np.testing.assert_allclose(np.asarray(y2), np.asarray(y_full[:, 7:]),
-                               rtol=1e-4, atol=1e-4)
+                               **_fwd("mamba2_scan"))
     np.testing.assert_allclose(np.asarray(h2), np.asarray(h_full),
-                               rtol=1e-4, atol=1e-4)
+                               **_fwd("mamba2_scan"))
 
 
 # ---------------------------------------------------------------------------
@@ -175,7 +207,8 @@ def test_moe_ffn(E, C, d, f, dtype):
     want = ref.moe_ffn(xe, wg, wu, wo)
     got = ops.moe_ffn(xe, wg, wu, wo, block_c=8, block_f=8)
     np.testing.assert_allclose(np.asarray(got, np.float32),
-                               np.asarray(want, np.float32), **_tol(dtype))
+                               np.asarray(want, np.float32),
+                               **_fwd("moe_gmm", dtype))
 
 
 # ---------------------------------------------------------------------------
@@ -199,9 +232,9 @@ def test_mamba2_chunked_matches_sequential(B, T, H, P, N, chunk):
     y_ref, h_ref = ref.mamba2_scan(x, dt, a_log, b, c, h0)
     y, h = ref.mamba2_scan_chunked(x, dt, a_log, b, c, h0, chunk=chunk)
     np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
-                               rtol=1e-4, atol=1e-4)
+                               **_fwd("mamba2_scan"))
     np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref),
-                               rtol=1e-4, atol=1e-4)
+                               **_fwd("mamba2_scan"))
 
 
 def test_mamba2_chunked_bf16_tolerance():
@@ -241,9 +274,9 @@ def test_rwkv6_chunked_matches_sequential(B, T, H, D, chunk):
     y_ref, s_ref = ref.rwkv6_scan(r, k, v, w, u, s0)
     y, s = ref.rwkv6_scan_chunked(r, k, v, w, u, s0, chunk=chunk)
     np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
-                               rtol=1e-4, atol=1e-4)
+                               **_fwd("rwkv6_scan"))
     np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref),
-                               rtol=1e-4, atol=1e-4)
+                               **_fwd("rwkv6_scan"))
 
 
 def test_rwkv6_chunked_extreme_decay():
@@ -261,4 +294,108 @@ def test_rwkv6_chunked_extreme_decay():
     rel = float(jnp.max(jnp.abs(y - y_ref)) / jnp.max(jnp.abs(y_ref)))
     assert rel < 1e-4
     np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref),
-                               rtol=1e-4, atol=1e-4)
+                               **_fwd("rwkv6_scan"))
+
+
+# ---------------------------------------------------------------------------
+# VJP parity: jax.grad through the Pallas ops' custom_vjp (reference
+# backwards in kernels/vjp.py) vs jax.grad through the sequential oracle.
+# The backwards are written independently of the oracle's autodiff
+# (hand-derived for attention/MoE, chunked-formulation for the scans), so
+# these are differential tests of the gradient math.
+# ---------------------------------------------------------------------------
+
+def test_flash_attention_vjp():
+    ks = jax.random.split(KEY, 3)
+    B, S, H, Kv, D = 2, 24, 4, 2, 8
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, Kv, D))
+    v = jax.random.normal(ks[2], (B, S, Kv, D))
+    got = _grads(lambda q, k, v: ops.flash_attention(
+        q, k, v, causal=True, window=8, block_q=8, block_k=8), q, k, v)
+    want = _grads(lambda q, k, v: ref.attention(
+        q, k, v, causal=True, window=8), q, k, v)
+    _assert_grads_close(got, want, "flash_attention")
+
+
+def test_flash_attention_vjp_softcap():
+    ks = jax.random.split(KEY, 3)
+    B, S, H, D = 1, 16, 2, 8
+    q = jax.random.normal(ks[0], (B, S, H, D)) * 3
+    k = jax.random.normal(ks[1], (B, S, H, D)) * 3
+    v = jax.random.normal(ks[2], (B, S, H, D))
+    got = _grads(lambda q, k, v: ops.flash_attention(
+        q, k, v, causal=True, softcap=10.0, block_q=8, block_k=8), q, k, v)
+    want = _grads(lambda q, k, v: ref.attention(
+        q, k, v, causal=True, softcap=10.0), q, k, v)
+    _assert_grads_close(got, want, "flash_attention")
+
+
+def test_rwkv6_scan_vjp():
+    ks = jax.random.split(KEY, 6)
+    B, T, H, D = 1, 16, 2, 8
+    r, k, v = (jax.random.normal(ks[i], (B, T, H, D)) for i in range(3))
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, T, H, D)))
+    u = jax.random.normal(ks[4], (H, D))
+    s0 = jax.random.normal(ks[5], (B, H, D, D))
+    got = _grads(lambda *a: ops.rwkv6_scan(*a, chunk=8), r, k, v, w, u, s0)
+    want = _grads(ref.rwkv6_scan, r, k, v, w, u, s0)
+    _assert_grads_close(got, want, "rwkv6_scan")
+
+
+def test_mamba2_scan_vjp():
+    ks = jax.random.split(KEY, 6)
+    B, T, H, P, N = 1, 16, 2, 4, 8
+    x = jax.random.normal(ks[0], (B, T, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, T, H)))
+    a_log = jax.random.normal(ks[2], (H,)) * 0.1
+    b = jax.random.normal(ks[3], (B, T, N))
+    c = jax.random.normal(ks[4], (B, T, N))
+    h0 = jax.random.normal(ks[5], (B, H, P, N))
+    got = _grads(lambda *a: ops.mamba2_scan(*a, chunk=8),
+                 x, dt, a_log, b, c, h0)
+    want = _grads(ref.mamba2_scan, x, dt, a_log, b, c, h0)
+    _assert_grads_close(got, want, "mamba2_scan")
+
+
+def test_moe_ffn_vjp():
+    ks = jax.random.split(KEY, 4)
+    E, C, d, f = 2, 8, 16, 16
+    xe = jax.random.normal(ks[0], (E, C, d))
+    wg = jax.random.normal(ks[1], (E, d, f)) * 0.1
+    wu = jax.random.normal(ks[2], (E, d, f)) * 0.1
+    wo = jax.random.normal(ks[3], (E, f, d)) * 0.1
+    got = _grads(lambda *a: ops.moe_ffn(*a, block_c=8, block_f=8),
+                 xe, wg, wu, wo)
+    want = _grads(ref.moe_ffn, xe, wg, wu, wo)
+    _assert_grads_close(got, want, "moe_gmm")
+
+
+# ---------------------------------------------------------------------------
+# PR 2 mantissa-fix regression: the chunked SSD decay must use the direct
+# pairwise exp(la_t - la_s) form.  A factorized exp(la_t) * exp(-la_s)
+# form overflows/denormalizes past |la| ~ 40 per chunk; |la| = 60 here
+# (dt = 1.875, A = -1, chunk = 32) would blow it up visibly.
+# ---------------------------------------------------------------------------
+
+def test_mamba2_chunked_extreme_decay_la60():
+    ks = jax.random.split(KEY, 5)
+    B, T, H, P, N, chunk = 1, 64, 2, 4, 8, 32
+    x = jax.random.normal(ks[0], (B, T, H, P))
+    dt = jnp.full((B, T, H), 1.875)      # |la| per chunk = 1.875 * 32 = 60
+    a_log = jnp.zeros((H,))              # A = -1 exactly
+    b = jax.random.normal(ks[2], (B, T, N))
+    c = jax.random.normal(ks[3], (B, T, N))
+    h0 = jax.random.normal(ks[4], (B, H, P, N))
+    y_ref, h_ref = ref.mamba2_scan(x, dt, a_log, b, c, h0)
+    y, h = ref.mamba2_scan_chunked(x, dt, a_log, b, c, h0, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               **_fwd("mamba2_scan"))
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref),
+                               **_fwd("mamba2_scan"))
+    # the Pallas kernel shares the formulation — pin it in the same regime
+    y2, h2 = ops.mamba2_scan(x, dt, a_log, b, c, h0, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y2), np.asarray(y_ref),
+                               **_fwd("mamba2_scan"))
+    np.testing.assert_allclose(np.asarray(h2), np.asarray(h_ref),
+                               **_fwd("mamba2_scan"))

@@ -2,10 +2,12 @@
 
 Per-round client->server upload bytes vs held-out quality for:
   dense FedAvg | int8-quantized deltas | top-10% sparsified deltas
-plus FedAvgM (server momentum) as the "other strategies" axis — every row is
-one ``FedSession`` with a different ``FederatedStrategy``, and the byte
-column comes straight from ``RoundResult.upload_bytes`` (exact, dtype- and
-tie-aware accounting).
+plus FedAvgM (server momentum) as the "other strategies" axis, and the
+parameter-efficient family (LoRA / adapter banks via
+``RoundPlan.param_space`` — clients train and ship only the low-rank
+factors, which also composes with int8) — every row is one ``FedSession``,
+and the byte column comes straight from ``RoundResult.upload_bytes``
+(exact, dtype- and tie-aware accounting; bank-sized for low-rank rows).
 
     PYTHONPATH=src python benchmarks/comm_efficiency.py [--engine parallel]
 """
@@ -41,19 +43,24 @@ def run(rounds: int = 3, steps: int = 4, seed: int = 0,
     def eval_loss(p):
         return float(np.mean([float(eval_step(p, b)["loss"]) for b in held]))
 
-    def fed_run(strategy):
+    def fed_run(strategy, space=None):
         plan = RoundPlan(n_rounds=rounds, engine=engine, strategy=strategy,
-                         client_sizes=ds["sizes"])
+                         client_sizes=ds["sizes"], param_space=space)
         p, hist = FedSession(cfg, optim.adam(1e-3), plan).run(params0, batches)
         return (eval_loss(p), sum(h.upload_bytes for h in hist),
                 sum(h.comm_bytes for h in hist),
                 sum(h.flops_estimate for h in hist))
 
+    from repro.peft import adapter, lora
     rows = [("fedavg_dense", *fed_run(FedAvg()))]
     rows.append(("fedavg_int8", *fed_run(Compressed(kind="int8"))))
     rows.append(("fedavg_top10pct", *fed_run(Compressed(kind="topk",
                                                         frac=0.10))))
     rows.append(("fedavgm_dense", *fed_run(FedAvgM(beta=0.9))))
+    rows.append(("lora_r4", *fed_run(FedAvg(), space=lora(4))))
+    rows.append(("adapter_d8", *fed_run(FedAvg(), space=adapter(8))))
+    rows.append(("lora_r4_int8", *fed_run(Compressed(kind="int8"),
+                                          space=lora(4))))
     rows.append(("no_training", eval_loss(params0), 0, 0, 0.0))
     return rows
 

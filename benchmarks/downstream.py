@@ -1,0 +1,205 @@
+"""Downstream probe: does FFDAPT / LoRA-FDAPT hurt the adapted model?
+
+The paper's central efficiency claim is only interesting if the cheaper
+variants keep downstream quality: Table 2 reports <1% task fluctuation
+between FDAPT and FFDAPT.  This benchmark reproduces that comparison with
+the repo's synthetic domain and extends it to the ParamSpace family:
+
+  1. Run three federated adaptations of the same init on the same clients —
+     FDAPT (dense FedAvg), FFDAPT (rotating freeze windows) and LoRA-FDAPT
+     (``RoundPlan.param_space = lora(4)``, clients ship only the bank).
+  2. Freeze each result and train a linear probe on top: documents are
+     drawn from two disjoint lexicon BANDS (a crude domain-ID task — the
+     kind of single-sentence classification GLUE-style suites use), the
+     feature is the mean-pooled output logits, the probe is a seeded
+     float64 logistic regression (fixed iterations, no early stopping) so
+     the accuracy column is bit-reproducible.
+  3. Emit ``BENCH_downstream.json``: per-variant accuracy + upload bytes,
+     the FDAPT-vs-FFDAPT fluctuation (must stay <1%, the paper's bound)
+     and the LoRA upload reduction (must stay >=10x).
+
+    PYTHONPATH=src python benchmarks/downstream.py [--tiny] [--engine ...]
+        [--out BENCH_downstream.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import numpy as np
+
+from repro import optim
+from repro.configs import get_config
+from repro.core import ffdapt
+from repro.core.noniid import make_client_datasets
+from repro.core.rounds import FedSession, RoundPlan
+from repro.core.strategy import FedAvg
+from repro.data.corpus import Document, build_lexicon, generate_corpus
+from repro.data.tokenizer import HashWordTokenizer
+from repro.models.model import apply_model, init_model
+from repro.nn import param as P
+from repro.peft import lora
+
+
+def probe_documents(n_per_class: int, seq: int, vocab: int, *,
+                    seed: int = 0, lexicon_size: int = 12_000):
+    """Two-domain classification set.  The bands are defined in TOKEN-ID
+    space — class c draws only words whose hashed id lands in its half of
+    the vocabulary — because ``HashWordTokenizer`` scatters any
+    lexicon-order band uniformly over the ids: a class signal defined on
+    raw words would not survive tokenization, one defined on ids does,
+    which is exactly the vocabulary-skew axis the paper's D_V partitioner
+    manipulates.  Returns (tokens (N, seq) int32, labels (N,) int64)."""
+    rng = np.random.default_rng(seed)
+    lex = np.asarray(build_lexicon(lexicon_size))
+    tok = HashWordTokenizer(vocab)
+    word_ids = np.asarray([tok.token(w) for w in lex])
+    toks, labels = [], []
+    for c in (0, 1):
+        lo, hi = (0, vocab // 2) if c == 0 else (vocab // 2, vocab)
+        band = lex[(word_ids >= lo) & (word_ids < hi)]
+        half = len(band)
+        for _ in range(n_per_class):
+            # zipfian draw inside the band, like the training corpus —
+            # WIDE pools (vs the corpus's 120-2400) so every document
+            # covers enough of its band for the class means to be stable
+            pool_n = int(rng.integers(2_400, min(6_000, half)))
+            off = int(rng.integers(0, half - pool_n))
+            pool = band[off:off + pool_n]
+            ranks = np.arange(1, pool_n + 1)
+            pz = (1.0 / ranks) / np.sum(1.0 / ranks)
+            i = int(rng.choice(pool_n, p=pz))
+            idx = []
+            for _ in range(2 * seq):
+                idx.append(i)
+                i = int((i + rng.integers(-2, 3)) % pool_n)
+            doc = Document([[str(pool[j]) for j in idx]])
+            ids = np.asarray(tok.encode_document(doc.sentences), np.int32)
+            ids = np.tile(ids, (seq // max(len(ids), 1)) + 1)[:seq]
+            toks.append(ids)
+            labels.append(c)
+    return np.stack(toks), np.asarray(labels, np.int64)
+
+
+def features(params, cfg, tokens: np.ndarray, batch: int = 8) -> np.ndarray:
+    """Mean-pooled output logits per document, under the frozen model."""
+
+    @jax.jit
+    def feats(p, t):
+        logits, _, _ = apply_model(p, cfg, {"tokens": t})
+        return logits.mean(axis=1)
+
+    out = []
+    for i in range(0, len(tokens), batch):
+        chunk = tokens[i:i + batch]
+        n = len(chunk)
+        if n < batch:                    # pad the tail to one batch shape
+            chunk = np.concatenate([chunk, np.tile(chunk[-1:],
+                                                   (batch - n, 1))])
+        out.append(np.asarray(feats(params, chunk))[:n])
+    return np.concatenate(out).astype(np.float64)
+
+
+def probe_accuracy(x: np.ndarray, y: np.ndarray, *, seed: int = 0,
+                   iters: int = 200, lr: float = 0.5,
+                   n_splits: int = 3) -> float:
+    """Seeded logistic probe, float64, fixed iteration budget, accuracy
+    averaged over ``n_splits`` deterministic train/test splits — the same
+    features always produce the same number (no solver nondeterminism) and
+    a single document flipping sides moves it by 1/(n_splits * n_test)."""
+    accs = []
+    for split in range(n_splits):
+        rng = np.random.default_rng(seed + split)
+        order = rng.permutation(len(x))
+        xs, ys = x[order], y[order]
+        xs = (xs - xs.mean(0)) / (xs.std(0) + 1e-8)
+        n_tr = len(xs) // 2
+        xtr, ytr, xte, yte = xs[:n_tr], ys[:n_tr], xs[n_tr:], ys[n_tr:]
+        w, b = np.zeros(xs.shape[1]), 0.0
+        for _ in range(iters):
+            p = 1.0 / (1.0 + np.exp(-(xtr @ w + b)))
+            g = p - ytr
+            w -= lr * (xtr.T @ g / n_tr + 1e-4 * w)
+            b -= lr * float(g.mean())
+        pred = (xte @ w + b) > 0.0
+        accs.append(float((pred == yte).mean()))
+    return float(np.mean(accs))
+
+
+def run(rounds: int = 3, steps: int = 4, probe_n: int = 96, seq: int = 64,
+        seed: int = 0, engine: str = "sequential"):
+    cfg = get_config("distilbert-mlm").reduced()
+    docs = generate_corpus(160, seed=seed)
+    ds = make_client_datasets(docs, cfg, k=2, skew="vocab", batch=2,
+                              seq=32, seed=seed)
+    batches = [b[:steps] for b in ds["batches"]]
+    params0 = P.unbox(init_model(jax.random.PRNGKey(seed), cfg))
+    opt = optim.adam(1e-3)
+
+    def adapt(name, **plan_kw):
+        plan = RoundPlan(n_rounds=rounds, engine=engine,
+                         client_sizes=ds["sizes"], strategy=FedAvg(),
+                         seed=seed, **plan_kw)
+        p, hist = FedSession(cfg, opt, plan).run(params0, batches)
+        return name, p, sum(h.upload_bytes for h in hist)
+
+    variants = [
+        adapt("fdapt"),
+        adapt("ffdapt", ffdapt=ffdapt.FFDAPTConfig(gamma=1.0)),
+        adapt("lora_fdapt", param_space=lora(4)),
+    ]
+
+    toks, labels = probe_documents(probe_n, seq, cfg.vocab_size, seed=seed)
+    rows = []
+    for name, p, up in variants:
+        acc = probe_accuracy(features(p, cfg, toks), labels, seed=seed)
+        rows.append({"model": name, "accuracy": acc,
+                     "upload_bytes": int(up)})
+    acc_of = {r["model"]: r["accuracy"] for r in rows}
+    up_of = {r["model"]: r["upload_bytes"] for r in rows}
+    return {
+        "benchmark": "downstream",
+        "arch": cfg.name,
+        "task": "vocab_band_probe",
+        "engine": engine,
+        "rounds": rounds,
+        "local_steps": steps,
+        "probe_docs": 2 * probe_n,
+        "rows": rows,
+        "fluctuation_pct": abs(acc_of["fdapt"] - acc_of["ffdapt"])
+        / max(acc_of["fdapt"], 1e-9) * 100.0,
+        "lora_upload_reduction_x": up_of["fdapt"] / max(
+            up_of["lora_fdapt"], 1),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="smoke mode: 1 round, 2 local steps, 16 probe docs")
+    ap.add_argument("--engine", default="sequential",
+                    choices=("sequential", "parallel"))
+    ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--steps", type=int, default=4)
+    ap.add_argument("--out", default="")
+    args = ap.parse_args()
+    if args.tiny:
+        args.rounds, args.steps = 1, 2
+    bench = run(rounds=args.rounds, steps=args.steps,
+                probe_n=8 if args.tiny else 64, engine=args.engine)
+    print("model,accuracy,upload_MB")
+    for r in bench["rows"]:
+        print(f"{r['model']},{r['accuracy']:.4f},"
+              f"{r['upload_bytes'] / 2**20:.1f}")
+    print(f"fdapt_vs_ffdapt_fluctuation_pct,{bench['fluctuation_pct']:.3f}")
+    print(f"lora_upload_reduction_x,{bench['lora_upload_reduction_x']:.1f}")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(bench, f, indent=1, sort_keys=True)
+        print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

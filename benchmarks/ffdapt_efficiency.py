@@ -12,6 +12,9 @@ Three measurements, matching §4.2:
     the FFDAPT schedule's frozen-window steps — the compute saving XLA
     actually realizes, reported for EVERY config in the zoo without
     compiling anything unrolled.
+  * PEFT    — LoRA/adapter columns for the same table: per-client comm
+    (bank vs dense tree) and the analytic step-FLOP saving of freezing the
+    base, so the paper's 12.1% sits next to what the low-rank family buys.
 
 The paper reports 12.1% average wall-time improvement on 2x RTX 2080 Ti; the
 ledger bound is what the schedule makes *possible*, the HLO figure is what
@@ -87,6 +90,32 @@ def hlo_ledger(archs=None, clients: int = 2, rounds: int = 15,
     return rows
 
 
+def peft_ledger(archs=None, rank: int = 4, bottleneck: int = 8):
+    """LoRA/adapter columns next to FFDAPT's: per-client upload vs the dense
+    tree (the bank IS the wire format under a low-rank
+    ``RoundPlan.param_space``) and the analytic share of step FLOPs the
+    frozen base removes — backward dW work scales with the trainable
+    fraction, dW ~ half of backward ~ 2/3 of a step, the same accounting
+    behind the FFDAPT ledger's bound.  Allocation-free (eval_shape)."""
+    from repro.core.strategy import tree_bytes
+    from repro.peft import adapter, lora
+    rows = []
+    for arch in archs or ["distilbert-mlm"]:
+        cfg = get_config(arch).reduced()
+        params = jax.eval_shape(
+            lambda k: P.unbox(init_model(k, cfg)), jax.random.PRNGKey(0))
+        dense = tree_bytes(params)
+        for sp in (lora(rank), adapter(bottleneck)):
+            bank = jax.eval_shape(
+                lambda p: sp.inject(p, jax.random.PRNGKey(0)), params)
+            frac = sp.trainable_fraction(params, bank=bank)
+            saving = (1.0 - frac) * (2.0 / 3.0) * 0.5 * 100.0
+            rows.append((arch, f"{sp.kind}_r{sp.rank}", dense / 2**20,
+                         tree_bytes(bank) / 2**20, dense / tree_bytes(bank),
+                         saving))
+    return rows
+
+
 def wall(reps: int = 3, rounds: int = 2, steps: int = 6, seed: int = 0):
     """Interleaved A/B/A/B round-time measurement (cancels host drift).
     Warm-up pass first so every distinct freeze-window program is compiled
@@ -140,6 +169,12 @@ def main():
     print(f"hlo_mean_compute_saving_pct,"
           f"{float(np.mean([r[2] for r in rows])):.1f}")
     print("paper_reported_pct,12.1")
+
+    print("arch,space,dense_MB,bank_MB,comm_reduction_x,"
+          "analytic_step_saving_pct")
+    for arch, space, dense, bank, ratio, saving in peft_ledger(archs=archs):
+        print(f"{arch},{space},{dense:.1f},{bank:.3f},{ratio:.1f},"
+              f"{saving:.1f}")
 
     if not (args.tiny or args.skip_wall):
         t_plain, t_frozen, imp = wall()

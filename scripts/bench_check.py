@@ -13,7 +13,10 @@ drifting between inline heredocs in each smoke script:
     also cover all four kernels with >= 40 cases incl. VJP + chain, and a
     non-interpret payload must pin per-kernel speed wins);
   * ``train_step``       — ``benchmarks/kernel_bench.py`` (warm-round train
-    hot path + analytic step cost + measured-vs-predicted drift row).
+    hot path + analytic step cost + measured-vs-predicted drift row);
+  * ``downstream``       — ``benchmarks/downstream.py`` (FDAPT vs FFDAPT vs
+    LoRA-FDAPT probe: accuracies in [0,1], the paper's <1% fluctuation
+    bound at full probe size, LoRA upload >= 10x smaller).
 
 Usage::
 
@@ -185,10 +188,42 @@ def check_train(path: str, bench: dict) -> str:
             f"ratio {drift['ratio']:.3g} ({drift['source']})")
 
 
+FLUCTUATION_MIN_DOCS = 128          # the <1% gate needs a real sample size
+
+
+def check_downstream(path: str, bench: dict) -> str:
+    for key in ("arch", "task", "engine", "rounds", "local_steps",
+                "probe_docs", "rows", "fluctuation_pct",
+                "lora_upload_reduction_x"):
+        _require(key in bench, path, f"missing top-level key {key!r}")
+    models = {r.get("model") for r in bench["rows"]}
+    for model in ("fdapt", "ffdapt", "lora_fdapt"):
+        _require(model in models, path, f"missing variant row {model!r}")
+    for row in bench["rows"]:
+        _require(0.0 <= row.get("accuracy", -1.0) <= 1.0, path,
+                 f"{row.get('model')}: accuracy {row.get('accuracy')} "
+                 f"out of [0, 1]")
+        _require(row.get("upload_bytes", -1) >= 0, path,
+                 f"{row.get('model')}: missing/negative upload_bytes")
+    _require(bench["lora_upload_reduction_x"] >= 10.0, path,
+             f"LoRA upload reduction {bench['lora_upload_reduction_x']:.1f}x "
+             f"< 10x")
+    if bench["probe_docs"] >= FLUCTUATION_MIN_DOCS:
+        _require(bench["fluctuation_pct"] < 1.0, path,
+                 f"FDAPT-vs-FFDAPT fluctuation "
+                 f"{bench['fluctuation_pct']:.3f}% >= 1% (paper bound)")
+        gate = f"fluctuation {bench['fluctuation_pct']:.3f}%"
+    else:                              # tiny smoke: too few docs to gate on
+        gate = f"fluctuation ungated ({bench['probe_docs']} docs)"
+    return (f"downstream: {gate}, lora upload "
+            f"{bench['lora_upload_reduction_x']:.1f}x smaller")
+
+
 CHECKERS = {"serve": check_serve,
             "round_throughput": check_round_throughput,
             "kernels": check_kernels,
-            "train_step": check_train}
+            "train_step": check_train,
+            "downstream": check_downstream}
 
 
 def check_file(path: str) -> str:

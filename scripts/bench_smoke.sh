@@ -33,5 +33,8 @@ bash scripts/cohort_smoke.sh
 echo "== serve smoke (federated checkpoint -> continuous batching) =="
 bash scripts/serve_smoke.sh
 
+echo "== peft smoke (LoRA train -> resume -> serve merged -> probe) =="
+bash scripts/peft_smoke.sh
+
 echo "== obs smoke (trace/metrics/drift artifacts) =="
 bash scripts/obs_smoke.sh

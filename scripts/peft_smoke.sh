@@ -1,0 +1,42 @@
+#!/usr/bin/env bash
+# PEFT smoke: the ParamSpace path end to end at tiny scale — a LoRA
+# federated run (clients train and ship only the adapter bank) must
+# checkpoint and resume BITWISE, its final checkpoint must serve through
+# the decode engine (bank merged into the base at load), and the
+# downstream probe benchmark must emit a schema-complete payload.
+# CI runs this via bench_smoke.sh and as its own step; run from anywhere.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+
+TMP=$(mktemp -d)
+trap 'rm -rf "$TMP"' EXIT
+ARGS=(--arch qwen2-7b --clients 2 --rounds 2 --docs 40 --batch-size 2
+      --seq-len 32 --max-steps-per-round 2 --param-space lora --lora-rank 4)
+
+echo "-- LoRA run, uninterrupted --"
+scripts/train_env.sh python -m repro.launch.train "${ARGS[@]}" \
+    --ledger-out "$TMP/full.json"
+
+echo "-- LoRA run, interrupted after round 1 (bank checkpointed) --"
+scripts/train_env.sh python -m repro.launch.train "${ARGS[@]}" \
+    --ckpt-dir "$TMP/ckpt" --ckpt-every 1 --stop-after 1
+
+echo "-- resumed from the bank checkpoint --"
+scripts/train_env.sh python -m repro.launch.train "${ARGS[@]}" \
+    --ckpt-dir "$TMP/ckpt" --resume --ledger-out "$TMP/resumed.json"
+
+diff "$TMP/full.json" "$TMP/resumed.json"
+echo "peft resume OK: ledger + final params bitwise identical"
+
+echo "-- serve the LoRA checkpoint (bank merged at load) --"
+bash scripts/serve_env.sh python -m repro.launch.serve --arch qwen2-7b \
+    --ckpt-dir "$TMP/ckpt" --requests 2 --slots 2 --prompt-len 8 \
+    --tokens 4 | tee "$TMP/serve.log"
+grep -q "checkpoint step" "$TMP/serve.log"
+
+echo "-- downstream probe (tiny) + schema check --"
+python benchmarks/downstream.py --tiny --out "$TMP/BENCH_downstream.json"
+python scripts/bench_check.py "$TMP/BENCH_downstream.json"
+
+echo "peft smoke OK: train -> resume -> serve merged -> downstream probe"

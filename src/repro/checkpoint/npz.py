@@ -17,6 +17,14 @@ rides in the same ``save_checkpoint`` archive; ``FederatedState`` is its
 ``extra`` JSON sidecar.  ``FedSession.run(..., resume=True)``
 (``repro.core.rounds``) writes and consumes both: a run killed after round r
 and resumed is bitwise identical to the uninterrupted run.
+
+Low-rank ``RoundPlan.param_space`` runs (repro.peft) extend the contract
+without new machinery: the archive's ``params`` subtree becomes
+``{"base": <frozen base model>, "peft": <adapter bank>}`` (leaf keys
+``params|base|...`` / ``params|peft|...|a``), the server state is the
+strategy's state over the BANK, and the sidecar plan fingerprint carries a
+``param_space`` entry — resume and ``serve/loader.py`` both key on it, so
+a rank-4 LoRA archive can neither resume as rank-8 nor serve unmerged.
 """
 
 from __future__ import annotations

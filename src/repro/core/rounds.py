@@ -77,6 +77,7 @@ from repro.core.fedavg import broadcast_clients, fedavg_stacked, scalar_fold
 from repro.core.strategy import FedAvg, FederatedStrategy
 from repro.models.steps import make_masked_train_step
 from repro.nn import param as P
+from repro.peft.space import ParamSpace, frozen_shippable_template
 from repro.obs.metrics import registry as _obs_registry
 from repro.obs.profile import record_compile
 from repro.obs.trace import span as _obs_span
@@ -151,6 +152,17 @@ class RoundPlan:
     cohort_shard: Optional[int] = None
     strategy: FederatedStrategy = dataclasses.field(default_factory=FedAvg)
     ffdapt: Optional[ffd.FFDAPTConfig] = None
+    # trainable/shippable subspace (repro.peft.ParamSpace).  None resolves to
+    # ``frozen_window`` when an FFDAPT schedule is set, else ``full`` — both
+    # run literally the pre-ParamSpace engine paths (bitwise; pinned in
+    # tests/test_peft.py).  A low-rank space (lora/adapter) turns the
+    # strategy's params tree into the factor BANK: aggregation, compression,
+    # upload/download accounting, the cohort-scan carry and the checkpoint
+    # server state all live in subspace coordinates, and the frozen base
+    # rides into the client step as a separate traced argument.  Low-rank
+    # does not compose with ``ffdapt`` (two ownership claims on the same
+    # update masking — ``run`` raises).
+    param_space: Optional[ParamSpace] = None
     participation: float = 1.0            # fraction of clients per round
     seed: int = 0                         # client-sampling seed
     client_sizes: Optional[Sequence[int]] = None   # n_k; default batch counts
@@ -188,13 +200,13 @@ class RoundPlan:
 
 
 def _epoch(step, params, opt_state, batches: Sequence[Dict[str, Any]],
-           anchor=None):
+           *extra):
+    """One local epoch.  ``extra`` args splice between opt_state and the
+    batch: ``(anchor,)`` for FedProx, ``(base,)`` for PEFT steps (the frozen
+    base model), ``(base, anchor)`` for both."""
     losses, toks = [], []
     for b in batches:
-        if anchor is not None:
-            params, opt_state, m = step(params, opt_state, anchor, b)
-        else:
-            params, opt_state, m = step(params, opt_state, b)
+        params, opt_state, m = step(params, opt_state, *extra, b)
         losses.append(m["loss"])
         toks.append(m["tokens"])
     return (params, opt_state, float(jnp.mean(jnp.stack(losses))),
@@ -338,12 +350,33 @@ class FedSession:
         identical to the uninterrupted one.
         """
         plan = self.plan
+        space = plan.param_space
+        if space is None:
+            # implicit spaces: FFDAPT plans ARE frozen_window, all others
+            # full — resolution changes nothing about the executed program
+            space = ParamSpace("frozen_window" if plan.ffdapt else "full")
+        peft = space.low_rank
+        if peft and plan.ffdapt is not None:
+            raise ValueError(
+                f"param space {space.kind!r} does not compose with "
+                f"plan.ffdapt frozen windows — both claim the update mask; "
+                f"pick one")
+        self._space, self._peft = space, peft
         data = _as_client_data(client_batches)
         sizes = (list(plan.client_sizes) if plan.client_sizes is not None
                  else list(data.sizes))
         # the client population is part of the checkpoint fingerprint:
         # resuming over different clients/weights must raise, not diverge
         self._run_sizes = sizes
+        if peft and not (isinstance(params, dict)
+                         and set(params) == {"base", "peft"}):
+            # seed the bank deterministically from the plan seed: a resumed
+            # run rebuilds the same template, and two runs with one seed get
+            # one bank init (B factors are zero, so round 0 starts from the
+            # base model exactly)
+            params = {"base": params,
+                      "peft": space.inject(params,
+                                           jax.random.PRNGKey(plan.seed))}
         from repro.models.model import n_freeze_units
         n_units = n_freeze_units(self.cfg)
         windows = (ffd.schedule(n_units, sizes, plan.n_rounds,
@@ -368,6 +401,8 @@ class FedSession:
                     f"round checkpoints (latest {have}) — pass resume=True "
                     f"to continue that run, or use a fresh directory")
         if start >= plan.n_rounds:
+            if peft:
+                return space.merge(params["base"], params["peft"]), history or []
             return params, history or []
         if plan.engine == "sequential":
             return self._run_sequential(params, data, sizes,
@@ -415,6 +450,11 @@ class FedSession:
               # run may legitimately resume under a different cohort_shard
               # (pinned bitwise in tests/test_cohort.py)
               "cohort_shard": plan.cohort_shard,
+              # the trainable subspace decides both the archive layout
+              # (low-rank runs store base + bank) and the executed math —
+              # resuming a rank-4 LoRA run as rank-8 (or as full) must raise
+              "param_space": (plan.param_space.to_json()
+                              if plan.param_space is not None else None),
               # telemetry/simulate/overlap don't move the params, but they
               # decide the history's ledger columns — a resumed run must
               # fill them the same way or the prefix and suffix disagree
@@ -462,7 +502,8 @@ class FedSession:
             mine = self._ckpt_plan_fingerprint()
             for key in ("strategy", "engine", "impl", "seed",
                         "participation", "ffdapt", "client_sizes",
-                        "telemetry", "overlap", "simulate", "extra"):
+                        "param_space", "telemetry", "overlap", "simulate",
+                        "extra"):
                 if key in fed.plan and fed.plan[key] != mine[key]:
                     raise ValueError(
                         f"checkpoint was written under a different plan: "
@@ -474,10 +515,14 @@ class FedSession:
                     f"checkpoint FFDAPT pointer {fed.ffdapt_start} does not "
                     f"match the plan's schedule ({want} at round "
                     f"{fed.round}) — client sizes or gamma/epsilon changed")
+        # low-rank runs aggregate in bank coordinates: the server-state
+        # template must be built over the bank, while the params template
+        # keeps the combined {base, peft} layout the archive stores
+        agg_tmpl = params["peft"] if self._peft else params
         template = {
             "params": jax.tree.map(
                 lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), params),
-            "server": strategy.state_to_tree(strategy.init_state(params))}
+            "server": strategy.state_to_tree(strategy.init_state(agg_tmpl))}
         tree = restore_checkpoint(plan.checkpoint_dir, step, template)
         state = strategy.state_from_tree(tree["server"])
         rng = np.random.default_rng(plan.seed)
@@ -530,24 +575,54 @@ class FedSession:
         # FedProx compiles per distinct mu.  Keys hold strong refs to
         # cfg/optimizer, so a GC'd optimizer can never alias a live cache
         # entry (the old ``id(optimizer.update)`` key could, after id reuse).
+        # The subspace keys the cache through ``space.step_key``: full and
+        # frozen_window return ``frozen`` verbatim, so their entries (and
+        # compiled programs) are IDENTICAL to pre-ParamSpace sessions;
+        # low-rank spaces key on (kind, rank, alpha, targets).
+        space = getattr(self, "_space", None)
+        skey = space.step_key(frozen) if space is not None else frozen
         key = (self.cfg, self.optimizer, self.plan.strategy.client_step_key(),
-               frozen, self.plan.impl)
+               skey, self.plan.impl)
         if key not in _STEP_CACHE:
             # a cache miss means the next call traces+compiles a new client
             # program — mark it so the trace shows which round paid it
             record_compile("client_step",
                            strategy=self.plan.strategy.name,
                            impl=self.plan.impl)
+            kw = {}
+            if space is not None and space.low_rank:
+                kw["space"] = space
             _STEP_CACHE[key] = jax.jit(self.plan.strategy.make_client_step(
-                self.cfg, self.optimizer, frozen=frozen, impl=self.plan.impl))
+                self.cfg, self.optimizer, frozen=frozen, impl=self.plan.impl,
+                **kw))
         return _STEP_CACHE[key]
+
+    def _client_upload_bytes(self, params, part, windows, n_units, t):
+        """Per-client upload ledger + round total.  FFDAPT rounds price each
+        client at its SHIPPABLE subspace (unfrozen layer rows — the ROADMAP
+        'frozen-window masking costs full-tree traffic' fix); the strategy's
+        tree-generic byte formulas make this compose with top-k/int8.  For
+        every other space ``params`` is already the shipped tree (the bank,
+        under low-rank), so the strategy's round total splits evenly."""
+        strategy = self.plan.strategy
+        if windows is not None:
+            per = [strategy.upload_bytes(
+                frozen_shippable_template(
+                    self.cfg, params, ffd.window_mask(n_units, windows[t][k])),
+                1) for k in part]
+            return per, sum(per)
+        nbytes = strategy.upload_bytes(params, len(part))
+        return split_bytes(nbytes, len(part)), nbytes
 
     def _step_cost(self, batch, *, frozen=None, masked=False):
         """Cached telemetry for ONE client step of this session's program
         family (same cache cardinality as the compiled-step cache)."""
+        space = getattr(self, "_space", None)
         return client_step_cost(self.cfg, self.optimizer, self.plan.strategy,
                                 batch_struct(batch), frozen=frozen,
-                                masked=masked, impl=self.plan.impl)
+                                masked=masked, impl=self.plan.impl,
+                                space=space if getattr(self, "_peft", False)
+                                else None)
 
     def _fleet(self, n_clients: int):
         """Resolve plan.simulate into a repro.sim Fleet (None = no sim)."""
@@ -560,6 +635,13 @@ class FedSession:
                         n_units, *, start=0, state=None, rng=None,
                         history=None):
         plan, optimizer, strategy = self.plan, self.optimizer, self.plan.strategy
+        space, peft = self._space, self._peft
+        base = None
+        if peft:
+            # from here on ``params`` IS the bank: the strategy aggregates,
+            # prices and checkpoints subspace coordinates; the frozen base
+            # enters the client step as an extra traced argument
+            base, params = params["base"], params["peft"]
         rng = np.random.default_rng(plan.seed) if rng is None else rng
         state = strategy.init_state(params) if state is None else state
         fleet = self._fleet(len(data))
@@ -594,7 +676,11 @@ class FedSession:
                         hbm_e += cost.hbm_bytes * steps_k
                         coll_e += cost.collective_bytes * steps_k
                     opt_state = P.unbox(optimizer.init(params))
-                    anchor = params if strategy.needs_anchor else None
+                    extra = (base,) if peft else ()
+                    if strategy.needs_anchor:
+                        extra += (params,)   # round-global anchor (the bank,
+                                             # under low-rank — FedProx pulls
+                                             # toward the global subspace)
                     # dispatch span = one client's whole local epoch (the
                     # sequential engine's unit of dispatch); jit calls sync
                     # per batch, so this measures real compute
@@ -602,7 +688,7 @@ class FedSession:
                                    client=k, steps=steps_k):
                         p_k, _, loss, tok = _epoch(self._step_for(frozen),
                                                    params, opt_state, bs_k,
-                                                   anchor)
+                                                   *extra)
                     locals_.append(p_k)
                     losses.append(loss)
                     tokens += tok
@@ -611,6 +697,18 @@ class FedSession:
                     params, state, nbytes = strategy.aggregate(
                         params, locals_, [sizes[k] for k in part], state)
                 dt = time.perf_counter() - t0
+            if windows is not None:
+                # FFDAPT accounting fix: clients ship only their unfrozen
+                # layer rows, so the round total is the sum of per-client
+                # subspace prices — not the aggregate()'s full-tree figure
+                c_up, nbytes = self._client_upload_bytes(
+                    params, part, windows, n_units, t)
+            else:
+                # aggregate() reports the exact round total; per-client
+                # shares are the static even split + remainder (Compressed
+                # tie-keeps can skew individual clients by a few entries,
+                # but the shares always sum to the exact round total)
+                c_up = split_bytes(nbytes, len(part))
             rr = RoundResult(
                 t, float(np.mean(losses)), dt,
                 windows[t] if windows else None,
@@ -621,22 +719,20 @@ class FedSession:
                 download_bytes=down, client_steps=c_steps,
                 client_step_flops=c_flops or None,
                 client_step_hbm=c_hbm or None,
-                # aggregate() reports the exact round total; per-client
-                # shares are the static even split + remainder (Compressed
-                # tie-keeps can skew individual clients by a few entries,
-                # but the shares always sum to the exact round total)
-                client_upload_bytes=split_bytes(nbytes, len(part)))
+                client_upload_bytes=c_up)
             if fleet is not None:
                 from repro.sim.clock import sync_round_s
                 rr.sim_round_s = sync_round_s(rr, fleet,
                                               overlap=plan.overlap)
             if plan.eval_fn is not None:
-                rr.eval_loss = float(plan.eval_fn(params))
+                rr.eval_loss = float(plan.eval_fn(
+                    space.merge(base, params) if peft else params))
             history.append(rr)
             _record_round_metrics(rr)
-            self._checkpoint(t, params, state, rng, history, windows,
+            self._checkpoint(t, {"base": base, "peft": params} if peft
+                             else params, state, rng, history, windows,
                              n_units)
-        return params, history
+        return (space.merge(base, params) if peft else params), history
 
     # -----------------------------------------------------------------
     # Parallel (cohort-scan engine; masked FFDAPT)
@@ -645,6 +741,13 @@ class FedSession:
     def _run_parallel(self, params, data, sizes, windows, n_units,
                       *, start=0, state=None, rng=None, history=None):
         plan, optimizer, strategy = self.plan, self.optimizer, self.plan.strategy
+        space, peft = self._space, self._peft
+        base = None
+        if peft:
+            # bank-as-params: the stacked client state, the streaming
+            # aggregation carry and the combine program are all O(bank);
+            # the base is one unstacked donated-in argument per shard call
+            base, params = params["base"], params["peft"]
         K = len(data)
         # rectangular schedule: pad short clients by CYCLING their local
         # batches (quantity skew -> unequal local steps); the n_k
@@ -656,8 +759,9 @@ class FedSession:
         max_steps = data.max_steps
 
         use_mask = windows is not None
+        step_kw = {"space": space} if peft else {}
         client_step = strategy.make_client_step(
-            self.cfg, optimizer, masked=use_mask, impl=plan.impl)
+            self.cfg, optimizer, masked=use_mask, impl=plan.impl, **step_kw)
         needs_anchor = strategy.needs_anchor
 
         # traced (= compiled) shard-program count this session: the
@@ -666,14 +770,17 @@ class FedSession:
         # not divide the cohort), never one per shard or per round.
         self.shard_compiles = 0
 
-        def _fed_shard(global_params, partial, loss_acc, tok_acc, bsub,
-                       fmasks, w_agg, w_loss):
+        def _fed_shard(global_params, base_params, partial, loss_acc,
+                       tok_acc, bsub, fmasks, w_agg, w_loss):
             """One cohort shard: vmapped local epochs + streaming fold.
 
-            ``partial``/``loss_acc``/``tok_acc`` are the round's carries;
-            ``w_agg`` is this shard's slice of the cohort-normalized
-            aggregation weights, ``w_loss`` the raw-normalized loss
-            weights.  Traced once per shard width (jit caches on shapes).
+            ``global_params`` is the aggregated tree (the BANK under a
+            low-rank space, with ``base_params`` the frozen base — None,
+            an empty pytree, otherwise); ``partial``/``loss_acc``/
+            ``tok_acc`` are the round's carries; ``w_agg`` is this shard's
+            slice of the cohort-normalized aggregation weights, ``w_loss``
+            the raw-normalized loss weights.  Traced once per shard width
+            (jit caches on shapes).
             """
             self.shard_compiles += 1          # trace-time, not per call
             ksub = fmasks.shape[0]
@@ -688,6 +795,8 @@ class FedSession:
                 def one(carry, b):
                     p_, o_ = carry
                     args = (p_, o_)
+                    if base_params is not None:
+                        args += (base_params,)
                     if needs_anchor:
                         args += (global_params,)
                     args += (b,)
@@ -773,8 +882,9 @@ class FedSession:
                             fmasks = jnp.zeros((len(ids), n_units),
                                                jnp.float32)
                         partial, loss_acc, tok_acc = fed_shard(
-                            params, partial, loss_acc, tok_acc, bsub, fmasks,
-                            w_agg[off:off + width], w_loss[off:off + width])
+                            params, base, partial, loss_acc, tok_acc, bsub,
+                            fmasks, w_agg[off:off + width],
+                            w_loss[off:off + width])
                     off += width
                 with _obs_span("train.aggregate", cat="train", round=t,
                                clients=m):
@@ -784,7 +894,8 @@ class FedSession:
                     jax.block_until_ready(loss)
                 dt = time.perf_counter() - t0
             toks = float(toks)
-            nbytes = strategy.upload_bytes(params, len(part))
+            c_up, nbytes = self._client_upload_bytes(params, part, windows,
+                                                     n_units, t)
             # rectangular schedule: every participant runs max_steps steps
             # (short clients cycle their data), so the ledger multiplies the
             # single analyzed program by steps x participants
@@ -807,18 +918,20 @@ class FedSession:
                                    if step_cost else None),
                 client_step_hbm=([step_cost.hbm_bytes] * len(part)
                                  if step_cost else None),
-                client_upload_bytes=split_bytes(nbytes, len(part)))
+                client_upload_bytes=c_up)
             if fleet is not None:
                 from repro.sim.clock import sync_round_s
                 rr.sim_round_s = sync_round_s(rr, fleet,
                                               overlap=plan.overlap)
             if plan.eval_fn is not None:
-                rr.eval_loss = float(plan.eval_fn(params))
+                rr.eval_loss = float(plan.eval_fn(
+                    space.merge(base, params) if peft else params))
             history.append(rr)
             _record_round_metrics(rr)
-            self._checkpoint(t, params, state, rng, history, windows,
+            self._checkpoint(t, {"base": base, "peft": params} if peft
+                             else params, state, rng, history, windows,
                              n_units)
-        return params, history
+        return (space.merge(base, params) if peft else params), history
 
 
 # process-wide program cache: one compiled step per distinct

@@ -162,11 +162,18 @@ class FederatedStrategy:
 
     # -- client objective ---------------------------------------------
     def make_client_step(self, cfg, optimizer, *, frozen=None,
-                         masked: bool = False, impl: str = "xla"):
+                         masked: bool = False, impl: str = "xla",
+                         space=None):
         """Local train step.  ``masked=False`` (sequential engine): static
         FFDAPT ``frozen`` window, signature ``step(params, opt, batch)`` —
         or ``step(params, opt, anchor, batch)`` when ``needs_anchor``.
-        ``masked=True`` (mesh engine): traced freeze mask appended."""
+        ``masked=True`` (mesh engine): traced freeze mask appended.
+        A low-rank ``space`` (repro.peft) swaps in the PEFT step: ``params``
+        becomes the factor bank and the frozen base model splices in as
+        ``step(bank, opt, base, [anchor,] batch)``."""
+        if space is not None and space.low_rank:
+            from repro.peft.step import make_peft_train_step
+            return make_peft_train_step(cfg, optimizer, space, impl=impl)
         if masked:
             return make_masked_train_step(cfg, optimizer, impl=impl)
         return make_train_step(cfg, optimizer, frozen=frozen, impl=impl)
@@ -321,7 +328,14 @@ class FedProx(FederatedStrategy):
         return ("prox", self.mu) if self.mu else ("plain",)
 
     def make_client_step(self, cfg, optimizer, *, frozen=None,
-                         masked: bool = False, impl: str = "xla"):
+                         masked: bool = False, impl: str = "xla",
+                         space=None):
+        if space is not None and space.low_rank:
+            # proximal pull toward the round-global BANK: base coordinates
+            # never move, so ||bank - anchor||^2 is the whole prox term
+            from repro.peft.step import make_peft_train_step
+            return make_peft_train_step(cfg, optimizer, space, impl=impl,
+                                        prox_mu=self.mu)
         if masked:
             return make_masked_train_step(cfg, optimizer, impl=impl,
                                           prox_mu=self.mu)

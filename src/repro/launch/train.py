@@ -56,6 +56,20 @@ def main() -> None:
     ap.add_argument("--ffdapt", action="store_true")
     ap.add_argument("--gamma", type=float, default=1.0)
     ap.add_argument("--epsilon", type=int, default=0)
+    ap.add_argument("--param-space", default="",
+                    choices=["", "full", "frozen_window", "lora", "adapter"],
+                    help="trainable subspace (repro.peft): lora/adapter "
+                         "train+ship only a low-rank bank (orders of "
+                         "magnitude less upload); frozen_window names the "
+                         "--ffdapt masking explicitly; default: implicit")
+    ap.add_argument("--lora-rank", type=int, default=4,
+                    help="LoRA rank r (--param-space lora)")
+    ap.add_argument("--lora-alpha", type=float, default=0.0,
+                    help="LoRA merge scale alpha (0 = alpha=r, scale 1)")
+    ap.add_argument("--adapter-dim", type=int, default=8,
+                    help="adapter bottleneck (--param-space adapter)")
+    ap.add_argument("--peft-targets", default="attn,mlp",
+                    help="comma list of projection groups to adapt")
     ap.add_argument("--engine", default="sequential",
                     choices=("sequential", "parallel"))
     ap.add_argument("--strategy", default="fedavg", choices=STRATEGIES)
@@ -187,9 +201,24 @@ def main() -> None:
     strategy = make_strategy(args.strategy, compress=args.compress,
                              mu=args.mu, beta=args.server_beta,
                              frac=args.topk_frac, alpha=args.async_alpha)
+    pspace = None
+    if args.param_space:
+        from repro.peft import make_param_space
+        pspace = make_param_space(
+            args.param_space, rank=args.lora_rank, alpha=args.lora_alpha,
+            adapter_dim=args.adapter_dim,
+            targets=tuple(t for t in args.peft_targets.split(",") if t))
+        if pspace.low_rank and args.ffdapt:
+            ap.error(f"--param-space {args.param_space} does not compose "
+                     f"with --ffdapt (both claim the update mask)")
+        if pspace.kind == "frozen_window" and not args.ffdapt:
+            ap.error("--param-space frozen_window names the --ffdapt "
+                     "schedule — pass --ffdapt (with --gamma/--epsilon) too")
+        print(f"param space: {pspace.to_json()}")
     plan = RoundPlan(n_rounds=args.rounds, engine=args.engine,
                      strategy=strategy,
                      cohort_shard=args.cohort_shard or None,
+                     param_space=pspace,
                      ffdapt=FFDAPTConfig(epsilon=args.epsilon,
                                          gamma=args.gamma) if args.ffdapt
                      else None,

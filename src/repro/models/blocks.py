@@ -50,6 +50,26 @@ def init_transformer_block(ctx: ParamCtx, cfg, *, cross: bool = False):
     return p
 
 
+# Declarative PEFT target table (consumed by repro.peft.space).  Maps a
+# target group to the projection leaves inside a block that are linear maps,
+# with each leaf's dimension split ``(n_in_dims, n_out_dims)`` counted after
+# stripping leading stack dims (layers / experts).  E.g. a stacked ``wq`` of
+# shape (L, d, H, hd) factors as input (d,) -> output (H, hd).  Biases and
+# norms are never adapted; MoE expert banks are deliberately excluded (their
+# leading experts dim is a stack dim a rank-r factor would have to share).
+PEFT_TARGETS = {
+    "attn": {"wq": (1, 2), "wk": (1, 2), "wv": (1, 2), "wo": (2, 1)},
+    "mlp": {"wi_gate": (1, 1), "wi_up": (1, 1), "wi": (1, 1), "wo": (1, 1)},
+}
+
+# Path components under which each target group's leaves live.  "attn" covers
+# both self-attention and the gated cross-attention of VLM/enc-dec blocks.
+PEFT_GROUPS = {
+    "attn": ("attn", "xattn"),
+    "mlp": ("mlp",),
+}
+
+
 def _ffn(p, x, cfg, impl):
     if cfg.n_experts:
         groups = 0

@@ -29,6 +29,7 @@ HEADS = "heads"          # query heads
 KV_HEADS = "kv_heads"    # key/value heads
 HEAD_DIM = "head_dim"    # per-head dim
 LAYERS = "layers"        # stacked (scanned) layer dim — never mesh-sharded
+LORA = "lora"            # PEFT low-rank bottleneck dim — never mesh-sharded
 EXPERTS = "experts"      # MoE experts
 DSTATE = "dstate"        # SSM state dim
 DCONV = "dconv"          # conv kernel dim

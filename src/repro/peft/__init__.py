@@ -1,0 +1,14 @@
+"""Parameter-efficient federated training (ParamSpace contract).
+
+See ``docs/peft.md`` for how freezing, low-rank adapters and delta
+compression compose.
+"""
+
+from repro.peft.space import (ParamSpace, adapter, frozen_shippable_template,
+                              frozen_window, full, lora, make_param_space)
+from repro.peft.step import make_peft_train_step
+
+__all__ = [
+    "ParamSpace", "adapter", "frozen_shippable_template", "frozen_window",
+    "full", "lora", "make_param_space", "make_peft_train_step",
+]

@@ -13,6 +13,16 @@ leaf names.
 Bare params snapshots (``save_checkpoint(dir, step, params)`` with no
 wrapper) load too: ``archive_keys`` sniffs whether the archive uses the
 ``params|`` prefix.
+
+PEFT checkpoints (low-rank ``RoundPlan.param_space`` runs) store
+``{"params": {"base": ..., "peft": ...}}`` — sniffed via the
+``params|base|`` key prefix.  The loader rebuilds the ParamSpace from the
+sidecar's ``param_space`` fingerprint, restores base + bank, and returns
+the MERGED tree, so the decode engine serves adapter-FDAPT checkpoints
+unchanged.  The arch guard extends to the bank: a wrong base arch raises
+exactly as before, and a caller that knows which space it expects
+(``expect_space=``) gets a raise on a rank/kind mismatch instead of a
+silently different model.
 """
 
 from __future__ import annotations
@@ -51,15 +61,33 @@ def checkpoint_arch(ckpt_dir: str, step: Optional[int] = None
     return extra.get("arch")
 
 
+def checkpoint_param_space(ckpt_dir: str, step: Optional[int] = None):
+    """ParamSpace recorded in the checkpoint's plan fingerprint (None for
+    full/implicit-FFDAPT runs or when the sidecar is absent)."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+    if step is None:
+        return None
+    meta = restore_extra(ckpt_dir, step)
+    if not meta:
+        return None
+    from repro.peft import ParamSpace
+    plan = FederatedState.from_json(meta).plan or {}
+    return ParamSpace.from_json(plan.get("param_space"))
+
+
 def load_serving_params(ckpt_dir: str, cfg, step: Optional[int] = None,
-                        *, check_arch: bool = True
+                        *, check_arch: bool = True, expect_space=None
                         ) -> Tuple[Any, int, Optional[FederatedState]]:
     """-> (params, step, FederatedState sidecar or None).
 
     ``step`` defaults to the newest checkpoint in ``ckpt_dir``.  Params
     restore BITWISE (the archive stores exact bytes; the template dtype
     matches the arch config, so the cast is the identity) — the served
-    model IS the aggregated global model round ``step`` produced."""
+    model IS the aggregated global model round ``step`` produced.  PEFT
+    checkpoints restore base + adapter bank and return the exact merge the
+    training eval saw; ``expect_space`` (a ``repro.peft.ParamSpace``)
+    optionally pins the bank's kind/rank/targets."""
     if step is None:
         step = latest_step(ckpt_dir)
         if step is None:
@@ -72,12 +100,32 @@ def load_serving_params(ckpt_dir: str, cfg, step: Optional[int] = None,
                 f"{arch!r}, not {cfg.name!r} — pass the matching --arch "
                 f"(or check_arch=False to force)")
     template = params_template(cfg)
-    wrapped = any(k.startswith("params|") for k in archive_keys(ckpt_dir, step))
-    if wrapped:
+    keys = archive_keys(ckpt_dir, step)
+    meta = restore_extra(ckpt_dir, step)
+    fed = FederatedState.from_json(meta) if meta else None
+    if any(k.startswith("params|base|") for k in keys):
+        space = checkpoint_param_space(ckpt_dir, step)
+        if space is None or not space.low_rank:
+            raise ValueError(
+                f"checkpoint {step} in {ckpt_dir!r} stores a PEFT bank "
+                f"(params|base|... archive layout) but its sidecar records "
+                f"no low-rank param_space — cannot rebuild the merge")
+        if expect_space is not None and expect_space != space:
+            raise ValueError(
+                f"checkpoint {step} in {ckpt_dir!r} was trained in param "
+                f"space {space.to_json()}, not {expect_space.to_json()}")
+        bank_t = jax.eval_shape(
+            lambda p: space.inject(p, jax.random.PRNGKey(0)), template)
+        tree = restore_checkpoint(
+            ckpt_dir, step, {"params": {"base": template, "peft": bank_t}})
+        params = space.merge(tree["params"]["base"], tree["params"]["peft"])
+    elif expect_space is not None and expect_space.low_rank:
+        raise ValueError(
+            f"expected a {expect_space.kind} (rank {expect_space.rank}) "
+            f"checkpoint but {ckpt_dir!r} step {step} stores full params")
+    elif any(k.startswith("params|") for k in keys):
         params = restore_checkpoint(ckpt_dir, step,
                                     {"params": template})["params"]
     else:
         params = restore_checkpoint(ckpt_dir, step, template)
-    meta = restore_extra(ckpt_dir, step)
-    fed = FederatedState.from_json(meta) if meta else None
     return params, step, fed

@@ -72,28 +72,46 @@ _COST_CACHE: Dict[Tuple, StepCost] = {}
 
 def client_step_cost(cfg, optimizer, strategy, batch_sds: Dict[str, Any], *,
                      frozen: Optional[Tuple[bool, ...]] = None,
-                     masked: bool = False, impl: str = "xla") -> StepCost:
+                     masked: bool = False, impl: str = "xla",
+                     space=None) -> StepCost:
     """Analyze (cached) the compiled client step a round engine would run.
 
-    ``frozen``/``masked``/``impl`` mirror ``strategy.make_client_step``; the
-    cache key holds strong refs to cfg/optimizer (same discipline as the
-    engines' step cache — an id()-keyed entry could alias after GC)."""
+    ``frozen``/``masked``/``impl``/``space`` mirror
+    ``strategy.make_client_step``; the cache key holds strong refs to
+    cfg/optimizer (same discipline as the engines' step cache — an
+    id()-keyed entry could alias after GC).  A low-rank ``space`` prices the
+    PEFT step: optimizer state over the bank, the base as a frozen input —
+    the merged forward costs the same dot FLOPs but the backward dW shrinks
+    to the bank's factors."""
     key = (cfg, optimizer, strategy.client_step_key(), strategy.needs_anchor,
-           frozen, masked, impl, _batch_key(batch_sds))
+           frozen, masked, impl, space, _batch_key(batch_sds))
     if key in _COST_CACHE:
         return _COST_CACHE[key]
 
     from repro.models.steps import abstract_train_state
     params_sds, opt_sds = abstract_train_state(cfg, optimizer)
-    step = strategy.make_client_step(cfg, optimizer, frozen=frozen,
-                                     masked=masked, impl=impl)
-    args = [params_sds, opt_sds]
-    if strategy.needs_anchor:
-        args.append(params_sds)
-    args.append(batch_sds)
-    if masked:
-        from repro.models.model import n_freeze_units
-        args.append(jax.ShapeDtypeStruct((n_freeze_units(cfg),), jnp.float32))
+    peft = space is not None and space.low_rank
+    if peft:
+        bank_sds = jax.eval_shape(
+            lambda p: space.inject(p, jax.random.PRNGKey(0)), params_sds)
+        opt_sds = jax.eval_shape(optimizer.init, bank_sds)
+        step = strategy.make_client_step(cfg, optimizer, impl=impl,
+                                         space=space)
+        args = [bank_sds, opt_sds, params_sds]
+        if strategy.needs_anchor:
+            args.append(bank_sds)
+        args.append(batch_sds)
+    else:
+        step = strategy.make_client_step(cfg, optimizer, frozen=frozen,
+                                         masked=masked, impl=impl)
+        args = [params_sds, opt_sds]
+        if strategy.needs_anchor:
+            args.append(params_sds)
+        args.append(batch_sds)
+        if masked:
+            from repro.models.model import n_freeze_units
+            args.append(jax.ShapeDtypeStruct((n_freeze_units(cfg),),
+                                             jnp.float32))
     compiled = jax.jit(step).lower(*args).compile()
     stats = analyze(compiled.as_text())
     cost = StepCost(flops=float(stats.dot_flops),

@@ -1,0 +1,326 @@
+"""ParamSpace contract: bitwise parity of full/frozen_window with the
+pre-refactor FedAvg/FFDAPT paths, low-rank bank training (LoRA/adapter),
+subspace comm accounting, checkpoint/resume/serve round-trips, and
+compile-cache invariance."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.configs import get_config
+from repro.core import ffdapt as ffd
+from repro.core.ffdapt import FFDAPTConfig
+from repro.core.noniid import make_client_datasets
+from repro.core.rounds import _STEP_CACHE, FedSession, RoundPlan
+from repro.core.strategy import Compressed, FedAvg, FedProx, tree_bytes
+from repro.data.corpus import generate_corpus
+from repro.models.model import init_model
+from repro.nn import param as P
+from repro.peft import (ParamSpace, adapter, frozen_shippable_template,
+                        frozen_window, full, lora, make_param_space)
+
+CFG = get_config("distilbert-mlm").reduced()
+DOCS = generate_corpus(120, seed=0)
+KEY = jax.random.PRNGKey(0)
+
+
+def _clients(k=2, steps=2):
+    ds = make_client_datasets(DOCS, CFG, k=k, skew="iid", batch=2, seq=32)
+    return [b[:steps] for b in ds["batches"]], ds["sizes"]
+
+
+@pytest.fixture(scope="module")
+def params0():
+    return P.unbox(init_model(KEY, CFG))
+
+
+def _bitwise(a, b):
+    return all(bool(jnp.all(x == y))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+# ---------------------------------------------------------------------------
+# Space algebra
+# ---------------------------------------------------------------------------
+
+def test_inject_merge_identity_at_init(params0):
+    """B/U factors start at zero: merge(base, inject(base)) == base bitwise,
+    and injection is deterministic in the key."""
+    for sp in (lora(4), adapter(8)):
+        bank = sp.inject(params0, jax.random.PRNGKey(7))
+        assert _bitwise(sp.merge(params0, bank), params0)
+        assert _bitwise(bank, sp.inject(params0, jax.random.PRNGKey(7)))
+        d = sp.extract_delta(params0, bank)
+        assert max(float(jnp.abs(l).max()) for l in jax.tree.leaves(d)) == 0.0
+
+
+def test_merge_equals_injected_forward(params0):
+    """Merge-then-forward == forward through explicitly injected deltas:
+    the merged weights are exactly base + extract_delta (the low-rank
+    factors never approximate their own expansion)."""
+    from repro.models.model import apply_model
+    sp = lora(4, alpha=8.0)
+    bank = sp.inject(params0, jax.random.PRNGKey(7))
+    # move B off zero so the delta is non-trivial
+    bank = jax.tree.map(lambda l: l + 0.01, bank)
+    merged = sp.merge(params0, bank)
+    delta = sp.extract_delta(params0, bank)
+    injected = jax.tree.map(
+        lambda w, d: (w.astype(jnp.float32) + d.astype(jnp.float32)
+                      ).astype(w.dtype), params0, delta)
+    batch = {"tokens": jnp.arange(64, dtype=jnp.int32).reshape(2, 32) % 100}
+    lm, _, _ = apply_model(merged, CFG, batch, mode="train")
+    li, _, _ = apply_model(injected, CFG, batch, mode="train")
+    np.testing.assert_allclose(np.asarray(lm), np.asarray(li),
+                               rtol=1e-5, atol=1e-5)
+    assert float(jnp.abs(jnp.asarray(
+        [jnp.abs(l).max() for l in jax.tree.leaves(delta)])).max()) > 0
+
+
+def test_space_validation(params0):
+    with pytest.raises(ValueError):
+        ParamSpace("nope")
+    with pytest.raises(ValueError):
+        lora(0)
+    with pytest.raises(ValueError):
+        lora(4, targets=("conv",))
+    sp = lora(4, targets=("attn",))
+    bank = sp.inject(params0, KEY)
+    assert all("mlp" not in "/".join(map(str, p))
+               for p, _ in jax.tree_util.tree_flatten_with_path(bank)[0])
+    rt = ParamSpace.from_json(sp.to_json())
+    assert rt == sp
+
+
+# ---------------------------------------------------------------------------
+# Bitwise parity: full == FedAvg, frozen_window == FFDAPT, both engines
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ["sequential", "parallel"])
+def test_full_space_bitwise_equals_fedavg(params0, engine):
+    batches, sizes = _clients()
+    kw = dict(n_rounds=2, engine=engine, client_sizes=sizes, telemetry=False)
+    p_ref, h_ref = FedSession(CFG, optim.adam(1e-4),
+                              RoundPlan(**kw)).run(params0, batches)
+    p_sp, h_sp = FedSession(CFG, optim.adam(1e-4),
+                            RoundPlan(param_space=full(), **kw)
+                            ).run(params0, batches)
+    assert _bitwise(p_ref, p_sp)
+    assert [h.upload_bytes for h in h_ref] == [h.upload_bytes for h in h_sp]
+    assert [h.loss for h in h_ref] == [h.loss for h in h_sp]
+
+
+@pytest.mark.parametrize("engine", ["sequential", "parallel"])
+def test_frozen_window_bitwise_equals_ffdapt(params0, engine):
+    batches, sizes = _clients()
+    kw = dict(n_rounds=2, engine=engine, client_sizes=sizes, telemetry=False,
+              ffdapt=FFDAPTConfig())
+    p_ref, h_ref = FedSession(CFG, optim.adam(1e-4),
+                              RoundPlan(**kw)).run(params0, batches)
+    p_sp, h_sp = FedSession(CFG, optim.adam(1e-4),
+                            RoundPlan(param_space=frozen_window(), **kw)
+                            ).run(params0, batches)
+    assert _bitwise(p_ref, p_sp)
+    assert [h.loss for h in h_ref] == [h.loss for h in h_sp]
+
+
+def test_full_space_shares_step_cache_with_implicit(params0):
+    """full/frozen_window key the step cache through the freeze mask
+    verbatim — an explicit-space session adds ZERO cache entries (and so
+    zero compiles) on top of an implicit one."""
+    batches, sizes = _clients()
+    kw = dict(n_rounds=1, client_sizes=sizes, telemetry=False)
+    opt = optim.adam(1e-4)            # one instance: opt fns are in the key
+    FedSession(CFG, opt, RoundPlan(**kw)).run(params0, batches)
+    before = set(_STEP_CACHE)
+    FedSession(CFG, opt, RoundPlan(param_space=full(), **kw)
+               ).run(params0, batches)
+    assert set(_STEP_CACHE) == before
+
+
+# ---------------------------------------------------------------------------
+# FFDAPT comm accounting (the ROADMAP full-tree-traffic fix)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ["sequential", "parallel"])
+def test_ffdapt_upload_discounts_frozen_rows(params0, engine):
+    batches, sizes = _clients()
+    full_bytes = tree_bytes(params0)
+    plan = RoundPlan(n_rounds=2, engine=engine, client_sizes=sizes,
+                     telemetry=False, ffdapt=FFDAPTConfig())
+    _, hist = FedSession(CFG, optim.adam(1e-4), plan).run(params0, batches)
+    for h in hist:
+        assert sum(h.client_upload_bytes) == h.upload_bytes     # exact-sum
+        # some client freezes >= 1 layer each round under the default
+        # schedule, so the round must price below the full-tree figure
+        assert h.upload_bytes < len(h.clients) * full_bytes
+        for (s, nf), b in zip(h.windows, h.client_upload_bytes):
+            expect = tree_bytes(frozen_shippable_template(
+                CFG, params0, ffd.window_mask(CFG.n_layers, (s, nf))))
+            assert b == expect
+
+
+def test_ffdapt_accounting_composes_with_int8(params0):
+    """Compressed wraps the same shippable template: frozen + int8 prices
+    below int8 alone, and the ledger still sums exactly."""
+    batches, sizes = _clients()
+    strat = Compressed(inner=FedAvg(), kind="int8")
+    kw = dict(n_rounds=2, client_sizes=sizes, telemetry=False, strategy=strat)
+    _, h_plain = FedSession(CFG, optim.adam(1e-4),
+                            RoundPlan(**kw)).run(params0, batches)
+    _, h_ffd = FedSession(CFG, optim.adam(1e-4),
+                          RoundPlan(ffdapt=FFDAPTConfig(), **kw)
+                          ).run(params0, batches)
+    for hp, hf in zip(h_plain, h_ffd):
+        assert hf.upload_bytes < hp.upload_bytes
+        assert sum(hf.client_upload_bytes) == hf.upload_bytes
+
+
+# ---------------------------------------------------------------------------
+# Low-rank training: both engines, upload ratio, strategy composition
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ["sequential", "parallel"])
+def test_lora_trains_and_uploads_10x_less(params0, engine):
+    batches, sizes = _clients()
+    kw = dict(n_rounds=2, engine=engine, client_sizes=sizes, telemetry=False)
+    p_full, h_full = FedSession(CFG, optim.adam(1e-3),
+                                RoundPlan(**kw)).run(params0, batches)
+    p_lora, h_lora = FedSession(CFG, optim.adam(1e-3),
+                                RoundPlan(param_space=lora(4), **kw)
+                                ).run(params0, batches)
+    # the acceptance bar: >= 10x smaller upload at equal model size
+    for hf, hl in zip(h_full, h_lora):
+        assert hl.upload_bytes * 10 <= hf.upload_bytes
+        assert hl.download_bytes * 10 <= hf.download_bytes
+        assert sum(hl.client_upload_bytes) == hl.upload_bytes
+    # the bank actually moved (the merged model is not the base)
+    assert not _bitwise(p_lora, params0)
+    # untargeted leaves (embeddings, norms) never move
+    assert _bitwise(p_lora["embed"], params0["embed"])
+    assert _bitwise(p_lora["final_norm"], params0["final_norm"])
+    assert np.isfinite(h_lora[-1].loss)
+
+
+def test_lora_sequential_close_to_parallel(params0):
+    batches, sizes = _clients()
+    kw = dict(n_rounds=2, client_sizes=sizes, telemetry=False,
+              param_space=lora(4))
+    p1, _ = FedSession(CFG, optim.adam(1e-3),
+                       RoundPlan(engine="sequential", **kw)
+                       ).run(params0, batches)
+    p2, _ = FedSession(CFG, optim.adam(1e-3),
+                       RoundPlan(engine="parallel", **kw)
+                       ).run(params0, batches)
+    assert max(float(jnp.max(jnp.abs(a - b))) for a, b in
+               zip(jax.tree.leaves(p1), jax.tree.leaves(p2))) < 1e-5
+
+
+def test_lora_composes_with_strategies(params0):
+    """FedProx anchors the bank; Compressed int8 codes bank deltas — both
+    run unmodified in subspace coordinates."""
+    batches, sizes = _clients()
+    kw = dict(n_rounds=1, client_sizes=sizes, telemetry=False)
+    bank_bytes = tree_bytes(lora(4).inject(params0, KEY))
+    for strat in (FedProx(mu=0.01), Compressed(inner=FedAvg(), kind="int8")):
+        p, hist = FedSession(
+            CFG, optim.adam(1e-3),
+            RoundPlan(strategy=strat, param_space=lora(4), **kw)
+            ).run(params0, batches)
+        assert np.isfinite(hist[-1].loss)
+        assert hist[-1].upload_bytes <= len(batches) * bank_bytes
+    # int8 prices below the dense bank
+    assert hist[-1].upload_bytes < len(batches) * bank_bytes
+
+
+def test_lora_ffdapt_composition_raises(params0):
+    batches, sizes = _clients()
+    plan = RoundPlan(n_rounds=1, client_sizes=sizes, telemetry=False,
+                     param_space=lora(4), ffdapt=FFDAPTConfig())
+    with pytest.raises(ValueError, match="does not compose"):
+        FedSession(CFG, optim.adam(1e-3), plan).run(params0, batches)
+
+
+def test_parallel_lora_compile_count(params0):
+    """Subspace-keyed step cache: the lora shard program compiles once per
+    shard width, independent of rounds — same invariant the cohort engine
+    pins for full-space runs."""
+    batches, sizes = _clients(k=4)
+    plan = RoundPlan(n_rounds=3, engine="parallel", client_sizes=sizes,
+                     telemetry=False, cohort_shard=2, param_space=lora(2))
+    sess = FedSession(CFG, optim.adam(1e-3), plan)
+    sess.run(params0, batches)
+    assert sess.shard_compiles == 1
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint / resume / serve
+# ---------------------------------------------------------------------------
+
+def _ckpt_kw(sizes, tmp, space):
+    return dict(n_rounds=3, client_sizes=sizes, telemetry=False,
+                param_space=space, checkpoint_dir=str(tmp),
+                fingerprint_extra={"arch": CFG.name})
+
+
+def test_adapter_kill_and_resume_bitwise(params0, tmp_path):
+    batches, sizes = _clients()
+    space = adapter(4)
+    p_ref, h_ref = FedSession(
+        CFG, optim.adam(1e-3),
+        RoundPlan(**_ckpt_kw(sizes, tmp_path / "ref", space))
+        ).run(params0, batches)
+    kw = _ckpt_kw(sizes, tmp_path / "killed", space)
+    FedSession(CFG, optim.adam(1e-3),
+               RoundPlan(stop_after_round=1, **kw)).run(params0, batches)
+    p_res, h_res = FedSession(CFG, optim.adam(1e-3), RoundPlan(**kw)
+                              ).run(params0, batches, resume=True)
+    assert _bitwise(p_ref, p_res)
+    assert [h.loss for h in h_ref] == [h.loss for h in h_res]
+    assert [h.upload_bytes for h in h_ref] == [h.upload_bytes for h in h_res]
+
+
+def test_resume_wrong_rank_raises(params0, tmp_path):
+    batches, sizes = _clients()
+    kw4 = _ckpt_kw(sizes, tmp_path, lora(4))
+    FedSession(CFG, optim.adam(1e-3),
+               RoundPlan(stop_after_round=1, **kw4)).run(params0, batches)
+    kw8 = dict(kw4, param_space=lora(8))
+    with pytest.raises(ValueError, match="param_space"):
+        FedSession(CFG, optim.adam(1e-3), RoundPlan(**kw8)
+                   ).run(params0, batches, resume=True)
+
+
+def test_serve_loader_merges_adapter_bank(params0, tmp_path):
+    """The decode path serves a low-rank checkpoint as the exact merged
+    model training evaluated; wrong base arch and wrong rank raise."""
+    from repro.serve.loader import checkpoint_param_space, load_serving_params
+    batches, sizes = _clients()
+    space = lora(4)
+    kw = dict(_ckpt_kw(sizes, tmp_path, space), n_rounds=2)
+    p_final, _ = FedSession(CFG, optim.adam(1e-3), RoundPlan(**kw)
+                            ).run(params0, batches)
+    assert checkpoint_param_space(str(tmp_path)) == space
+    served, step, fed = load_serving_params(str(tmp_path), CFG)
+    assert step == 2
+    assert _bitwise(served, p_final)
+    # pinned expectation passes...
+    load_serving_params(str(tmp_path), CFG, expect_space=lora(4))
+    # ...wrong rank raises
+    with pytest.raises(ValueError, match="param space"):
+        load_serving_params(str(tmp_path), CFG, expect_space=lora(8))
+    # ...wrong base arch raises (the fingerprint_extra guard, extended)
+    wrong = CFG.replace(name="other-arch")
+    with pytest.raises(ValueError, match="trained as"):
+        load_serving_params(str(tmp_path), wrong)
+
+
+def test_make_param_space_flags():
+    assert make_param_space("lora", rank=2) == lora(2)
+    assert make_param_space("adapter", adapter_dim=6) == adapter(6)
+    assert make_param_space("full") == full()
+    assert make_param_space("frozen_window") == frozen_window()
+    with pytest.raises(ValueError):
+        make_param_space("nope")
